@@ -1,0 +1,44 @@
+"""Table 2: FedAvg / FedProx / SCAFFOLD / FedDF / FedSDD(R=1,2,4) accuracy
+at α ∈ {1.0, 0.1} on the synthetic classification task.
+
+Paper claims checked (orderings, not absolute numbers — DESIGN.md §7):
+  C1: FedSDD ≥ FedAvg, especially at α=0.1 (Non-IID)
+  C2: larger R helps most at α=0.1 (temporal ensembling, §3.1.3)
+"""
+from __future__ import annotations
+
+from benchmarks.common import BenchScale, CSV, mean_std, run_method
+
+METHODS = [
+    ("fedavg", {}),
+    ("fedprox", {}),
+    ("scaffold", {}),
+    ("feddf", {}),
+    ("fedsdd_R1", {"_preset": "fedsdd", "K": 2, "R": 1}),
+    ("fedsdd_R2", {"_preset": "fedsdd", "K": 2, "R": 2}),
+    ("fedsdd_R4", {"_preset": "fedsdd", "K": 2, "R": 4}),
+]
+
+
+def run(scale: BenchScale, csv: CSV) -> dict:
+    results = {}
+    for alpha in (1.0, 0.1):
+        for name, over in METHODS:
+            kw = dict(over)
+            preset = kw.pop("_preset", name)
+            accs, secs = [], []
+            for seed in scale.seeds:
+                acc, _, dt, _ = run_method(preset, alpha, scale, seed=seed,
+                                           **kw)
+                accs.append(acc)
+                secs.append(dt)
+            m, s = mean_std(accs)
+            results[(name, alpha)] = m
+            csv.add(f"t2/{name}/a{alpha}", secs[0] * 1e6 / scale.rounds,
+                    f"acc={m:.4f}+-{s:.4f}")
+    # claim checks
+    c1 = results[("fedsdd_R1", 0.1)] >= results[("fedavg", 0.1)] - 0.02
+    c2 = results[("fedsdd_R4", 0.1)] >= results[("fedsdd_R1", 0.1)] - 0.02
+    csv.add("t2/claim_fedsdd_ge_fedavg_noniid", 0, f"pass={c1}")
+    csv.add("t2/claim_R4_ge_R1_noniid", 0, f"pass={c2}")
+    return results

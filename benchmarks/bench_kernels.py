@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: wall-clock of each op's CPU dispatch path and
+interpret-mode overhead, plus analytic TPU roofline projections
+(197 TFLOP/s, 819 GB/s — what the VMEM tiling is designed against)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CSV
+from repro.utils.hlo import TPUv5eSpec
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6   # µs
+
+
+def run(scale, csv: CSV) -> dict:
+    spec = TPUv5eSpec()
+    out = {}
+
+    # ---- kd_loss: (B, V) KL at CIFAR-ish and LM-vocab scales -------------
+    from repro.kernels.kd_loss import ops as kd
+    for B, V in ((256, 100), (64, 32000)):
+        s = jax.random.normal(jax.random.PRNGKey(0), (B, V))
+        t = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (B, V)), -1)
+        us = _time(jax.jit(lambda a, b: kd.kd_loss(a, b, 4.0)), s, t)
+        # analytic: 2 passes over 2 tensors of B·V f32
+        tpu_us = 4 * B * V * 4 / spec.hbm_bandwidth * 1e6
+        csv.add(f"kern/kd_loss/B{B}V{V}", us, f"tpu_roofline_us={tpu_us:.1f}")
+        out[f"kd{B}x{V}"] = us
+
+    # ---- ensemble softmax -------------------------------------------------
+    for K, B, V in ((4, 64, 32000), (8, 256, 100)):
+        tl = jax.random.normal(jax.random.PRNGKey(2), (K, B, V))
+        us = _time(jax.jit(lambda a: kd.ensemble_softmax(a, 4.0)), tl)
+        tpu_us = (K + 1) * B * V * 4 / spec.hbm_bandwidth * 1e6
+        csv.add(f"kern/ens_softmax/K{K}B{B}V{V}", us,
+                f"tpu_roofline_us={tpu_us:.1f}")
+
+    # ---- weight averaging over N client models ----------------------------
+    from repro.kernels.weight_avg import ops as wa
+    for N, D in ((8, 270_000), (20, 270_000)):   # ResNet-20-sized
+        x = jax.random.normal(jax.random.PRNGKey(3), (N, D))
+        w = jnp.ones((N,))
+        us = _time(jax.jit(wa.weighted_average), x, w)
+        tpu_us = (N + 1) * D * 4 / spec.hbm_bandwidth * 1e6
+        csv.add(f"kern/weight_avg/N{N}D{D}", us, f"tpu_roofline_us={tpu_us:.1f}")
+
+    # ---- flash attention (XLA dispatch path on CPU) ------------------------
+    from repro.kernels.flash_attention import ops as fa
+    B, S, H, dh = 1, 1024, 8, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, dh), jnp.float32)
+    us = _time(jax.jit(lambda a, b, c: fa.flash_attention(a, b, c, True, 0)),
+               q, k, v)
+    flops = 4 * B * H * S * S * dh
+    csv.add(f"kern/flash_fwd/S{S}", us,
+            f"tpu_roofline_us={flops / spec.peak_flops_bf16 * 1e6:.1f}")
+
+    q1 = jax.random.normal(ks[0], (8, 1, H, dh))
+    kc = jax.random.normal(ks[1], (8, 4096, H, dh))
+    vc = jax.random.normal(ks[2], (8, 4096, H, dh))
+    us = _time(jax.jit(lambda a, b, c: fa.flash_decode(a, b, c, 4096)),
+               q1, kc, vc)
+    bytes_ = 2 * 8 * 4096 * H * dh * 4
+    csv.add("kern/flash_decode/S4096", us,
+            f"tpu_roofline_us={bytes_ / spec.hbm_bandwidth * 1e6:.1f}")
+    return out

@@ -1,0 +1,77 @@
+"""Table 3: round-time / KD-cost scaling with the number of clients.
+
+Two measurements:
+  (a) REAL wall-clock of the server distillation stage — teacher-ensemble
+      forward + KD steps — with a FedDF ensemble (C client models) vs a
+      FedSDD ensemble (K·R aggregated models).  The paper's claim: FedSDD's
+      KD time is flat in C, FedDF's grows linearly.
+  (b) the event-driven round scheduler (core/scheduler.py) reproducing the
+      Fig. 2 / appendix A.6 parallelism accounting.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CSV
+from repro.core import distillation as dist
+from repro.core.scheduler import round_time_comparison
+from repro.core.tasks import classification_task
+
+
+def _measure_teacher_forward(task, n_teachers: int, reps: int = 8) -> float:
+    """Cost of one ensemble-teacher evaluation (Eq. 3/5) — the component
+    whose complexity the paper's Table 3 is about: O(C) for FedDF vs
+    O(K·R) for FedSDD."""
+    key = jax.random.PRNGKey(0)
+    teachers = [task.init_fn(k) for k in jax.random.split(key, n_teachers)]
+    fn = jax.jit(lambda b: dist.ensemble_probs(teachers, b, task.logits_fn, 4.0))
+    b = task.server_batches[0]
+    jax.block_until_ready(fn(b))        # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(b)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def _measure_kd(task, n_teachers: int, steps: int = 10) -> float:
+    key = jax.random.PRNGKey(0)
+    teachers = [task.init_fn(k) for k in jax.random.split(key, n_teachers)]
+    student = task.init_fn(jax.random.PRNGKey(99))
+    # warm-up compile
+    dist.distill(student, teachers, task.server_batches[:1], task.logits_fn,
+                 steps=1, lr=0.01)
+    t0 = time.time()
+    dist.distill(student, teachers, task.server_batches[:2], task.logits_fn,
+                 steps=steps, lr=0.01)
+    return time.time() - t0
+
+
+def run(scale, csv: CSV) -> dict:
+    task = classification_task(model=scale.model, num_clients=8,
+                               num_train=800, num_server=512)
+    K = 4
+    out = {}
+    for C in (8, 14, 20):
+        t_feddf = _measure_teacher_forward(task, n_teachers=C)
+        t_fedsdd = _measure_teacher_forward(task, n_teachers=K)
+        out[C] = (t_feddf, t_fedsdd)
+        csv.add(f"t3/teacher_fwd_feddf/C{C}", t_feddf * 1e6, f"ensemble={C}")
+        csv.add(f"t3/teacher_fwd_fedsdd/C{C}", t_fedsdd * 1e6, f"ensemble={K}")
+        csv.add(f"t3/kd_e2e_feddf/C{C}", _measure_kd(task, C) * 1e6,
+                f"ensemble={C}")
+        csv.add(f"t3/kd_e2e_fedsdd/C{C}", _measure_kd(task, K) * 1e6,
+                f"ensemble={K}")
+        sim = round_time_comparison(C, K=K, concurrent_clients=4)
+        csv.add(f"t3/sim_roundtime/C{C}", 0,
+                f"fedavg={sim['fedavg']:.0f};feddf={sim['feddf']:.0f};"
+                f"fedsdd={sim['fedsdd']:.0f}")
+    # claims: FedDF grows with C; FedSDD flat (±40%)
+    grew = out[20][0] > out[8][0] * 1.5
+    flat = abs(out[20][1] - out[8][1]) < 0.4 * max(out[8][1], 1e-9)
+    csv.add("t3/claim_feddf_kd_grows", 0, f"pass={grew}")
+    csv.add("t3/claim_fedsdd_kd_flat", 0, f"pass={flat}")
+    return out

@@ -1,0 +1,42 @@
+"""Tables 7-9: communication intervals, number of global models K, and
+client scaling (fixed K vs scaled K)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import BenchScale, CSV, run_method
+
+
+def run(scale: BenchScale, csv: CSV, alpha: float = 0.1) -> dict:
+    results = {}
+
+    # ---- Table 7: rounds × local epochs at fixed total work --------------
+    total = scale.rounds * scale.local_epochs
+    for rounds, epochs in ((max(2, total // 4), 4), (total // 2, 2),
+                           (total, 1)):
+        s = dataclasses.replace(scale, rounds=rounds, local_epochs=epochs,
+                                distill_steps=max(4, scale.distill_steps
+                                                  * scale.rounds // rounds // 4))
+        for preset in ("fedavg", "fedsdd"):
+            acc, _, _, _ = run_method(preset, alpha, s,
+                                      **({"K": 2} if preset == "fedsdd" else {}))
+            results[(preset, rounds, epochs)] = acc
+            csv.add(f"t7/{preset}/r{rounds}e{epochs}", 0, f"acc={acc:.4f}")
+
+    # ---- Table 8: K sweep -------------------------------------------------
+    for K in (2, 4):
+        acc, _, _, _ = run_method("fedsdd", alpha, scale, K=K)
+        results[("K", K)] = acc
+        csv.add(f"t8/fedsdd_K{K}", 0, f"acc={acc:.4f}")
+
+    # ---- Table 9: client scaling: fixed K vs scaled K ---------------------
+    for C in (8, 16):
+        s = dataclasses.replace(scale, num_clients=C)
+        accf, _, _, _ = run_method("fedsdd", alpha, s, K=4)
+        results[("fixedK", C)] = accf
+        csv.add(f"t9/fedsdd_fixedK4/C{C}", 0, f"acc={accf:.4f}")
+        Kscaled = max(2, C // 4)
+        accs, _, _, _ = run_method("fedsdd", alpha, s, K=Kscaled)
+        results[("scaledK", C)] = accs
+        csv.add(f"t9/fedsdd_scaledK{Kscaled}/C{C}", 0, f"acc={accs:.4f}")
+    return results

@@ -1,0 +1,82 @@
+"""Shared benchmark harness.
+
+CPU-budget note: the paper's full setting (20 clients × 40 local epochs ×
+100 rounds × ResNet-20) is hours of A100 time; this container has one CPU
+core.  Benchmarks therefore run the same *protocol* at reduced scale
+(small CNN by default, fewer rounds/epochs/KD steps) — enough to measure
+the paper's *orderings* (see DESIGN.md §7).  ``--full`` scales up toward
+the paper's setting for offline runs.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from dataclasses import dataclass
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.fedsdd import make_runner  # noqa: E402
+from repro.core.tasks import classification_task  # noqa: E402
+
+
+@dataclass
+class BenchScale:
+    num_clients: int = 8
+    rounds: int = 6
+    local_epochs: int = 2
+    client_lr: float = 0.1
+    client_batch: int = 64
+    distill_steps: int = 30
+    server_lr: float = 0.05
+    num_train: int = 1600
+    num_server: int = 512
+    noise: float = 0.5
+    model: str = "cnn"
+    seeds: tuple = (0,)
+
+
+QUICK = BenchScale()
+FULL = BenchScale(num_clients=20, rounds=30, local_epochs=5,
+                  distill_steps=200, num_train=8000, num_server=2048,
+                  model="resnet20", seeds=(0, 1, 2))
+
+
+def run_method(preset: str, alpha: float, scale: BenchScale, seed: int = 0,
+               **overrides):
+    """One federated run; returns (final_main_acc, state, wallclock_s)."""
+    task = classification_task(model=scale.model, num_clients=scale.num_clients,
+                               alpha=alpha, num_train=scale.num_train,
+                               num_server=scale.num_server, noise=scale.noise,
+                               seed=seed)
+    kw = dict(num_clients=scale.num_clients, participation=1.0,
+              local_epochs=scale.local_epochs, client_lr=scale.client_lr,
+              client_batch=scale.client_batch,
+              distill_steps=scale.distill_steps, server_lr=scale.server_lr,
+              seed=seed)
+    kw.update(overrides)
+    r = make_runner(preset, task, **kw)
+    t0 = time.time()
+    st = r.run(rounds=scale.rounds)
+    dt = time.time() - t0
+    return st.history[-1]["acc_main"], st, dt, task
+
+
+def mean_std(vals):
+    return float(np.mean(vals)), float(np.std(vals))
+
+
+class CSV:
+    """Collects ``name,us_per_call,derived`` rows (scaffold contract)."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    def header(self):
+        print("name,us_per_call,derived", flush=True)

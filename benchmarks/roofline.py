@@ -1,0 +1,112 @@
+"""Roofline table assembly (deliverable (g)).
+
+Reads experiments/dryrun/*.json (written by launch/dryrun.py) and renders
+the §Roofline table: per (arch × shape × mesh) the three terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio and a what-would-move-it note.
+
+  python -m benchmarks.roofline [--dir experiments/dryrun] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+NOTES = {
+    ("train", "compute"): "at the MXU roof: gains only from fewer recompute "
+                          "FLOPs (remat policy) or lower-precision matmuls",
+    ("train", "memory"): "fuse/eliminate f32 logit+softmax materialization; "
+                         "bf16 activations end-to-end",
+    ("train", "collective"): "grad all-reduce -> reduce-scatter (FSDP), "
+                             "overlap TP activation collectives with compute",
+    ("prefill", "memory"): "larger attention KV blocks; keep QKV in bf16",
+    ("prefill", "compute"): "MXU-bound: block-sparse/sliding attention cuts "
+                            "the S^2 term",
+    ("prefill", "collective"): "reshard QKV heads once, not per layer",
+    ("decode", "memory"): "decode is weight+cache streaming: quantize cache, "
+                          "multi-token speculative steps",
+    ("decode", "collective"): "cache-update resharding: keep the cache sharded "
+                              "on heads end-to-end (avoid dus copy resharding)",
+    ("decode", "compute"): "unexpected for decode: check dispatch one-hots",
+    ("fedsdd_round", "collective"): "teacher-logit psum over the pod axis is "
+                                    "the only cross-group traffic (by design)",
+    ("fedsdd_round", "memory"): "same levers as train_step",
+    ("fedsdd_round", "compute"): "same levers as train_step",
+}
+
+
+def load(dir_: str, include_tagged: bool = True):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if not include_tagged and (r.get("tag") or r.get("fedsdd")):
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r, md=False):
+    if not r.get("supported", True):
+        cells = [r["arch"], r["shape"], r["mesh"], "SKIP", "-", "-", "-", "-",
+                 r["skip_reason"]]
+    elif r.get("proof_only"):
+        cells = [r["arch"], r["shape"], r["mesh"],
+                 r.get("step_kind", "?"), "-", "-", "-",
+                 f"compiled({r.get('compile_s')}s)", "-"]
+    else:
+        ratio = r.get("useful_flops_ratio")
+        name = r["arch"] + (f" [{r['tag']}]" if r.get("tag") else "") \
+            + (" [fedsdd]" if r.get("fedsdd") else "")
+        cells = [
+            name, r["shape"], r["mesh"],
+            r.get("step_kind", "?"),
+            f"{r['compute_s']:.3g}", f"{r['memory_s']:.3g}",
+            f"{r['collective_s']:.3g}",
+            f"{r['dominant']}",
+            f"{ratio:.2f}" if ratio else "-",
+        ]
+    sep = " | " if md else "  "
+    return sep.join(str(c) for c in cells)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default=None, choices=["pod1", "pod2"])
+    ap.add_argument("--baseline-only", action="store_true",
+                    help="hide tagged §Perf experiment artifacts")
+    args = ap.parse_args()
+    recs = load(args.dir, include_tagged=not args.baseline_only)
+    if args.mesh:
+        recs = [r for r in recs if r["mesh"] == args.mesh]
+    hdr = ["arch", "shape", "mesh", "step", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful_flops"]
+    if args.markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for r in recs:
+            print("| " + fmt_row(r, md=True) + " |")
+    else:
+        print("  ".join(hdr))
+        for r in recs:
+            print(fmt_row(r))
+    # bottleneck notes
+    print()
+    seen = set()
+    for r in recs:
+        if not r.get("supported", True):
+            continue
+        key = (r.get("step_kind"), r.get("dominant"))
+        if key in seen or key not in NOTES:
+            continue
+        seen.add(key)
+        print(f"[{key[0]}/{key[1]}-bound] {NOTES[key]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark runner — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+
+  PYTHONPATH=src python -m benchmarks.run                 # all, quick scale
+  PYTHONPATH=src python -m benchmarks.run --only t2,t3
+  PYTHONPATH=src python -m benchmarks.run --full          # paper-scale knobs
+
+Table map:
+  t2 -> bench_accuracy   (Table 2: method × α accuracy)
+  t3 -> bench_roundtime  (Table 3: KD cost vs #clients + Fig. 2 scheduler)
+  t4 -> bench_compat     (Table 4: FedProx/SCAFFOLD plug-ins)
+  t5 -> bench_ensemble   (Table 5: ensemble constructions)
+  t6 -> bench_distill    (Table 6: distillation schemes)
+  t7 -> bench_scaling    (Tables 7-9: intervals, K, client scaling)
+  kern -> bench_kernels  (Pallas kernel microbenches + TPU projections)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import CSV, FULL, QUICK
+
+BENCHES = ["t2", "t3", "t4", "t5", "t6", "t7", "kern"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    scale = FULL if args.full else QUICK
+    only = args.only.split(",") if args.only else BENCHES
+    csv = CSV()
+    csv.header()
+    t0 = time.time()
+
+    if "t2" in only:
+        from benchmarks import bench_accuracy
+        bench_accuracy.run(scale, csv)
+    if "t3" in only:
+        from benchmarks import bench_roundtime
+        bench_roundtime.run(scale, csv)
+    if "t4" in only:
+        from benchmarks import bench_compat
+        bench_compat.run(scale, csv)
+    if "t5" in only:
+        from benchmarks import bench_ensemble
+        bench_ensemble.run(scale, csv)
+    if "t6" in only:
+        from benchmarks import bench_distill
+        bench_distill.run(scale, csv)
+    if "t7" in only:
+        from benchmarks import bench_scaling
+        bench_scaling.run(scale, csv)
+    if "kern" in only:
+        from benchmarks import bench_kernels
+        bench_kernels.run(scale, csv)
+
+    print(f"# total_bench_time_s={time.time() - t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

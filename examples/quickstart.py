@@ -1,0 +1,40 @@
+"""Quickstart: 5 rounds of FedSDD vs FedAvg on the synthetic CIFAR stand-in.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the public API end-to-end: build a task, pick a preset, run rounds,
+read the history.  ~1-2 minutes on CPU.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.fedsdd import make_runner
+from repro.core.tasks import classification_task
+
+
+def main() -> None:
+    # 8 clients, highly Non-IID split (Dirichlet α=0.1), small CNN
+    task = classification_task(model="cnn", num_clients=8, alpha=0.1,
+                               num_train=1600, num_server=512, noise=0.5)
+
+    print("== FedAvg baseline ==")
+    fedavg = make_runner("fedavg", task, num_clients=8, participation=1.0,
+                         local_epochs=2, client_lr=0.1, client_batch=64)
+    st_avg = fedavg.run(rounds=5, log_every=1)
+
+    print("== FedSDD (K=2 global models, R=2 temporal checkpoints) ==")
+    fedsdd = make_runner("fedsdd", task, num_clients=8, participation=1.0,
+                         K=2, R=2, local_epochs=2, client_lr=0.1,
+                         client_batch=64, distill_steps=30, server_lr=0.05)
+    st_sdd = fedsdd.run(rounds=5, log_every=1)
+
+    a, b = st_avg.history[-1]["acc_main"], st_sdd.history[-1]["acc_main"]
+    print(f"\nfinal accuracy  FedAvg={a:.4f}  FedSDD={b:.4f}")
+    print(f"teacher-ensemble members held: {st_sdd.ensemble.num_members} "
+          f"(K*R as in Eq. 5)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Serve a model: prefill a batch of prompts then decode tokens.
+
+    PYTHONPATH=src python examples/serve_model.py --arch qwen2.5-14b
+
+(Thin wrapper over the production driver; see src/repro/launch/serve.py.)
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    ASSIGNED_ARCHS,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    get_config,
+    list_configs,
+    register,
+)
+from repro.configs.shapes import INPUT_SHAPES, InputShape, get_shape  # noqa: F401

@@ -1,0 +1,30 @@
+"""HuBERT X-Large [arXiv:2106.07447].
+
+Encoder-only (bidirectional) transformer, same backbone as wav2vec 2.0;
+vocab 504 = masked-prediction codebook size.  The conv waveform feature
+extractor is a STUB per the brief: ``input_specs()`` provides precomputed
+frame embeddings (B, S, frontend_dim) and the model owns only the feature
+projection + transformer + prediction head.
+
+Encoder-only => no decode: decode_32k and long_500k are skipped
+(DESIGN.md §3 skip matrix).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    source="arXiv:2106.07447",
+    causal=False,
+    mlp_variant="gelu",
+    norm_variant="layernorm",
+    frontend_dim=512,          # conv feature-extractor output dim (stubbed)
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+))

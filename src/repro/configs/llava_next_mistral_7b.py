@@ -1,0 +1,30 @@
+"""LLaVA-NeXT (Mistral-7B backbone) [hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+The language model is Mistral-7B (GQA kv=8, SwiGLU, RMSNorm).  The anyres
+ViT tower + 2-layer MLP projector input side is a STUB per the brief:
+``input_specs()`` provides precomputed patch embeddings
+(B, num_prefix_embeds, frontend_dim) which the model projects and splices
+in front of the text-token embeddings.  num_prefix_embeds=2880 ≈ anyres
+5-tile × 576-patch budget.
+long_500k uses the sliding-window serving variant (DESIGN.md).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    rope_theta=1e6,
+    mlp_variant="swiglu",
+    frontend_dim=1024,         # CLIP-ViT-L patch embedding dim (stubbed)
+    num_prefix_embeds=2880,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+))

@@ -1,0 +1,44 @@
+"""The paper's own model zoo: ResNet-20/56 and WRN16-2 on 32x32 images
+[He et al. 2016; Zagoruyko & Komodakis 2016].
+
+These are used by the *faithful* FedSDD reproduction path
+(examples/fedsdd_cifar.py, benchmarks/bench_*) — small CNNs trainable on
+CPU, exactly the models in the paper's Tables 2-10.  They are configured
+through ``ResNetConfig`` (not ``ModelConfig``, which describes the
+transformer families) but registered here so ``--arch resnet20`` etc.
+resolve; the model lives in ``models/resnet.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    depth: int                 # 6n+2
+    width_mult: int = 1        # WRN widening factor
+    num_classes: int = 10
+    norm: str = "group"        # "group" (FL-stable default) | "batch"
+    source: str = "He et al. 2016 / Zagoruyko & Komodakis 2016"
+
+    @property
+    def num_blocks_per_stage(self) -> int:
+        assert (self.depth - 2) % 6 == 0
+        return (self.depth - 2) // 6
+
+    def reduced(self) -> "ResNetConfig":
+        import dataclasses
+        return dataclasses.replace(self, depth=8)
+
+
+RESNET_CONFIGS: dict[str, ResNetConfig] = {
+    "resnet20": ResNetConfig("resnet20", depth=20),
+    "resnet56": ResNetConfig("resnet56", depth=56),
+    "wrn16-2": ResNetConfig("wrn16-2", depth=14, width_mult=2),
+}
+
+
+def get_resnet_config(name: str, num_classes: int = 10) -> ResNetConfig:
+    import dataclasses
+    return dataclasses.replace(RESNET_CONFIGS[name], num_classes=num_classes)

@@ -1,0 +1,5 @@
+# The paper's primary contribution: FedSDD — scalable, diversity-enhanced
+# distillation for model aggregation in federated learning.
+from repro.core.fedsdd import (  # noqa: F401
+    FedConfig, FedState, FederatedRunner, PRESETS, make_runner
+)

@@ -1,0 +1,72 @@
+"""Model aggregation (paper Eq. 2) — weight averaging within a group.
+
+Includes the secure-aggregation simulation (Bonawitz et al. [2]) the paper
+cites as FedSDD's privacy advantage: because the distillation stage only
+ever consumes *aggregated* group models, clients can pairwise-mask their
+updates so the server learns nothing but the sum — impossible for FedDF,
+which needs each client model for its ensemble.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import (
+    tree_stacked_weighted_mean, tree_weighted_mean, tree_zeros_like
+)
+
+PyTree = Any
+
+
+def fedavg_aggregate(models: Sequence[PyTree], num_samples: Sequence[int]) -> PyTree:
+    """w = Σ_i (|X_i| / Σ_j |X_j|) · w_i   (Eq. 2)."""
+    return tree_weighted_mean(list(models), np.asarray(num_samples, np.float64))
+
+
+def fedavg_aggregate_stacked(stacked: PyTree, num_samples) -> PyTree:
+    """Same, over leaves with a leading client axis (the pjit'd path —
+    this is what the weight_avg Pallas kernel implements on TPU)."""
+    return tree_stacked_weighted_mean(stacked, num_samples)
+
+
+# ---------------------------------------------------------------- secure agg
+def pairwise_masks(models: Sequence[PyTree], seed: int) -> list[PyTree]:
+    """Antisymmetric pairwise masks: client i adds Σ_{j>i} r_ij − Σ_{j<i} r_ji.
+    Masks cancel exactly in the (weighted) sum."""
+    n = len(models)
+    like = models[0]
+    masks = [tree_zeros_like(like) for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1, n):
+            key = jax.random.PRNGKey(seed * 1_000_003 + i * 1009 + j)
+            keys = jax.random.split(key, len(jax.tree.leaves(like)))
+            it = iter(keys)
+            r = jax.tree.map(lambda x: jax.random.normal(next(it), x.shape, jnp.float32)
+                             .astype(x.dtype), like)
+            masks[i] = jax.tree.map(jnp.add, masks[i], r)
+            masks[j] = jax.tree.map(jnp.subtract, masks[j], r)
+    return masks
+
+
+def secure_aggregate(models: Sequence[PyTree], num_samples: Sequence[int],
+                     seed: int = 0) -> tuple[PyTree, list[PyTree]]:
+    """Simulated Bonawitz-style secure aggregation.
+
+    Each client uploads w_i + m_i / ŵ_i where the masks are antisymmetric
+    *after* weighting, so the weighted mean of the uploads equals Eq. 2 while
+    every individual upload is noise to the server.  Returns
+    (aggregate, uploaded_masked_models) so tests can assert both properties.
+    """
+    w = np.asarray(num_samples, np.float64)
+    w = w / w.sum()
+    masks = pairwise_masks(models, seed)
+    uploads = []
+    for i, (m, msk) in enumerate(zip(models, masks)):
+        # divide the mask by this client's weight so weighting cancels it
+        uploads.append(jax.tree.map(
+            lambda x, r: x + (r / w[i]).astype(x.dtype), m, msk))
+    agg = tree_weighted_mean(uploads, w)
+    return agg, uploads

@@ -1,0 +1,124 @@
+"""The FedSDD round as ONE pjit-able SPMD program on the production mesh.
+
+This is the paper's dataflow made literal on a TPU fleet (DESIGN.md §2):
+
+  axis "pod"   ⟵ the K groups (group k trains on pod k): groups are
+                  independent within a round, so group-internal collectives
+                  never cross pod boundaries;
+  axis "data"  ⟵ the N clients of a group (and each client's batch);
+  axis "model" ⟵ tensor parallelism inside every model replica.
+
+``make_fedsdd_round_fn`` builds a function
+    (stacked_globals (K,·), client_batches (K,N,·), client_weights (K,N),
+     server_batch) -> new stacked_globals
+computing: per-client local SGD step(s) → per-group weighted averaging
+(Eq. 2 — a reduction over the client axis only) → teacher-ensemble logits
+on the server batch (the ONLY cross-group collective: a (B, V) logit-mean
+over K, i.e. over the pod axis — bytes independent of the client count,
+which is the paper's scalability claim visible in the HLO) → a KD gradient
+step applied to the main global model alone (Eq. 4, diversity preserved).
+
+Local training is represented by ``local_steps`` SGD minibatch steps via
+``lax.fori_loop`` over microbatches — the paper's 40 epochs have identical
+per-step compute/communication structure, so the dry-run/roofline is
+faithful per step.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kd_loss import ops as kd_ops
+
+PyTree = Any
+
+
+def make_fedsdd_round_fn(loss_fn: Callable, logits_fn: Callable, *,
+                         client_lr: float = 0.8,
+                         server_lr: float = 0.1,
+                         temperature: float = 4.0,
+                         local_steps: int = 1,
+                         remat_logits: bool = False):
+    """Build the jittable FedSDD round step.
+
+    loss_fn(params, batch) -> scalar; logits_fn(params, batch) -> (..., V).
+    """
+
+    def client_update(params, batch):
+        def one_step(i, p):
+            mb = jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(
+                    x.reshape((local_steps, -1) + x.shape[1:]), i, 0,
+                    keepdims=False), batch)
+            g = jax.grad(loss_fn)(p, mb)
+            return jax.tree.map(lambda pp, gg: pp - client_lr * gg.astype(pp.dtype), p, g)
+        return jax.lax.fori_loop(0, local_steps, one_step, params)
+
+    def group_aggregate(client_params, weights):
+        """client_params leaves (N, ...), weights (N,) -> Eq. 2 mean."""
+        w = weights / jnp.sum(weights)
+
+        def leaf(x):
+            return jnp.tensordot(w.astype(jnp.float32),
+                                 x.astype(jnp.float32), axes=1).astype(x.dtype)
+
+        return jax.tree.map(leaf, client_params)
+
+    def kd_loss_fn(student, server_batch, teacher_probs):
+        s_logits = logits_fn(student, server_batch)
+        V = s_logits.shape[-1]
+        return kd_ops.kd_loss(s_logits.reshape(-1, V),
+                              teacher_probs.reshape(-1, V), temperature)
+
+    def round_step(stacked_globals: PyTree, client_batches: PyTree,
+                   client_weights: jnp.ndarray, server_batch) -> PyTree:
+        # --- 1. local training: vmap groups (pod axis) × clients (data) ---
+        client_params = jax.vmap(        # over K groups
+            jax.vmap(client_update, in_axes=(None, 0)),   # over N clients
+            in_axes=(0, 0))(stacked_globals, client_batches)
+
+        # --- 2. per-group weight averaging (Eq. 2) ---
+        new_globals = jax.vmap(group_aggregate)(client_params, client_weights)
+
+        # --- 3. teacher-ensemble softmax over the K aggregates (Eq. 3) ---
+        t_logits = jax.vmap(lambda p: logits_fn(p, server_batch))(new_globals)
+        K = t_logits.shape[0]
+        V = t_logits.shape[-1]
+        teacher_probs = kd_ops.ensemble_softmax(
+            t_logits.reshape(K, -1, V), temperature)
+
+        # --- 4. KD updates ONLY the main global model (Eq. 4) ---
+        main = jax.tree.map(lambda x: x[0], new_globals)
+        kd_g = jax.grad(kd_loss_fn)(main, server_batch, teacher_probs)
+        main = jax.tree.map(lambda p, g: p - server_lr * g.astype(p.dtype),
+                            main, kd_g)
+        return jax.tree.map(
+            lambda stack, m: stack.at[0].set(m.astype(stack.dtype)),
+            new_globals, main)
+
+    return round_step
+
+
+def make_distill_step_fn(logits_fn: Callable, *, server_lr: float = 0.1,
+                         temperature: float = 4.0):
+    """Standalone server KD step over a stacked teacher bank (M = K·R
+    members, Eq. 5 temporal ensemble included in M): what the
+    distillation-phase dry-run lowers."""
+
+    def step(student: PyTree, stacked_teachers: PyTree, server_batch):
+        t_logits = jax.vmap(lambda p: logits_fn(p, server_batch))(stacked_teachers)
+        M, V = t_logits.shape[0], t_logits.shape[-1]
+        probs = kd_ops.ensemble_softmax(t_logits.reshape(M, -1, V), temperature)
+
+        def loss(p):
+            s = logits_fn(p, server_batch)
+            return kd_ops.kd_loss(s.reshape(-1, V), probs, temperature)
+
+        g = jax.grad(loss)(student)
+        return jax.tree.map(lambda p, gg: p - server_lr * gg.astype(p.dtype),
+                            student, g)
+
+    return step

@@ -1,0 +1,315 @@
+"""FedSDD (Algorithm 1) and every baseline in the paper, as one runner.
+
+A single ``FedConfig`` spans the paper's whole experimental matrix — each
+baseline is a preset:
+
+    FedAvg    = K=1, distill_target='none'
+    FedProx   = FedAvg + local_algo='fedprox'
+    SCAFFOLD  = FedAvg + local_algo='scaffold'
+    FedDF     = K=1, distill_target='main', ensemble_source='clients'
+    FedBE-ish = FedDF + ensemble_extra_sampled>0 (Gaussian posterior samples)
+    Fed-ensemble = K>1, distill_target='none'
+    FedSDD    = K>1, R≥1, distill_target='main', ensemble_source='aggregated'
+    Table-6 "basic distillation"   = FedSDD + distill_target='all'
+    Table-6 "codistillation warmup"= FedSDD + distill_warmup_rounds>0
+
+The runner is generic over a task (init/loss/logits fns + per-client
+datasets), so the same loop drives the paper's ResNets and the assigned
+transformer architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distillation as dist
+from repro.core.aggregation import fedavg_aggregate, secure_aggregate
+from repro.core.grouping import assign_groups, sample_clients
+from repro.core.temporal import TemporalEnsemble
+from repro.optim.optimizers import (
+    Optimizer, apply_updates, scaffold_new_control, sgd, with_fedprox,
+    with_scaffold,
+)
+from repro.utils.pytree import tree_zeros_like
+
+PyTree = Any
+
+
+# =====================================================================
+# configuration
+# =====================================================================
+@dataclass(frozen=True)
+class FedConfig:
+    # structure (paper defaults, §4.1)
+    num_clients: int = 20
+    participation: float = 0.4
+    rounds: int = 100
+    K: int = 4                      # number of global models
+    R: int = 1                      # temporal-ensembling checkpoints
+    # local training
+    local_epochs: int = 40
+    client_lr: float = 0.8
+    client_batch: int = 64
+    client_momentum: float = 0.0
+    local_algo: str = "fedavg"      # fedavg | fedprox | scaffold
+    fedprox_mu: float = 0.001
+    # distillation
+    distill_target: str = "main"    # main | all | none
+    ensemble_source: str = "aggregated"   # aggregated | clients
+    ensemble_extra_sampled: int = 0       # FedBE-style posterior samples
+    distill_steps: int = 5000
+    server_lr: float = 0.1
+    server_batch: int = 256
+    temperature: float = 4.0
+    distill_warmup_rounds: int = 0  # codistillation-style KD skip
+    # misc
+    secure_aggregation: bool = False
+    seed: int = 0
+
+    def validate(self) -> None:
+        assert self.K >= 1 and self.R >= 1
+        assert self.distill_target in ("main", "all", "none")
+        assert self.ensemble_source in ("aggregated", "clients")
+        assert self.local_algo in ("fedavg", "fedprox", "scaffold")
+        if self.distill_target != "none" and self.ensemble_source == "clients":
+            assert not self.secure_aggregation, \
+                "client-model ensembles (FedDF/FedBE) are incompatible with " \
+                "secure aggregation — the FedSDD privacy argument (§3.2)"
+
+
+PRESETS: dict[str, dict] = {
+    "fedavg":       dict(K=1, distill_target="none"),
+    "fedprox":      dict(K=1, distill_target="none", local_algo="fedprox"),
+    "scaffold":     dict(K=1, distill_target="none", local_algo="scaffold"),
+    "feddf":        dict(K=1, distill_target="main", ensemble_source="clients"),
+    "fedbe":        dict(K=1, distill_target="main", ensemble_source="clients",
+                         ensemble_extra_sampled=10),
+    "fed_ensemble": dict(K=4, distill_target="none"),
+    "fedsdd":       dict(K=4, R=1, distill_target="main",
+                         ensemble_source="aggregated"),
+    "fedsdd_basic_kd": dict(K=4, R=1, distill_target="all",
+                            ensemble_source="aggregated"),
+}
+
+
+def make_config(preset: str, **overrides) -> FedConfig:
+    base = dict(PRESETS[preset])
+    base.update(overrides)
+    return FedConfig(**base)
+
+
+# =====================================================================
+# task plumbing
+# =====================================================================
+@dataclass
+class FedTask:
+    """What the runner needs to know about the learning problem."""
+    init_fn: Callable[[jax.Array], PyTree]
+    loss_fn: Callable[[PyTree, Any], tuple[jnp.ndarray, dict]]
+    logits_fn: Callable[[PyTree, Any], jnp.ndarray]
+    client_data: Sequence[Any]           # per-client (x, y) numpy pairs
+    server_batches: Sequence[Any]        # unlabeled batches for KD
+    make_batch: Callable[[Any, np.ndarray], Any]  # (client_ds, idx) -> batch
+    eval_fn: Optional[Callable[[PyTree], float]] = None
+
+
+@dataclass
+class FedState:
+    round: int
+    global_models: list[PyTree]          # index 0 = main global model
+    ensemble: TemporalEnsemble
+    scaffold_c_global: Optional[PyTree] = None
+    scaffold_c_clients: Optional[list[PyTree]] = None
+    history: list[dict] = field(default_factory=list)
+
+
+# =====================================================================
+# runner
+# =====================================================================
+class FederatedRunner:
+    def __init__(self, cfg: FedConfig, task: FedTask):
+        cfg.validate()
+        self.cfg = cfg
+        self.task = task
+        self._train_step = None
+
+    # ---- init ----------------------------------------------------------
+    def init_state(self) -> FedState:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        models = [self.task.init_fn(k) for k in jax.random.split(key, cfg.K)]
+        state = FedState(
+            round=0,
+            global_models=models,
+            ensemble=TemporalEnsemble(cfg.K, cfg.R),
+        )
+        if cfg.local_algo == "scaffold":
+            state.scaffold_c_global = tree_zeros_like(models[0])
+            state.scaffold_c_clients = [tree_zeros_like(models[0])
+                                        for _ in range(cfg.num_clients)]
+        return state
+
+    # ---- local training --------------------------------------------------
+    def _make_optimizer(self) -> Optimizer:
+        cfg = self.cfg
+        base = sgd(cfg.client_lr, momentum=cfg.client_momentum)
+        if cfg.local_algo == "fedprox":
+            return with_fedprox(base, cfg.fedprox_mu)
+        if cfg.local_algo == "scaffold":
+            return with_scaffold(base, cfg.client_lr)
+        return base
+
+    def _train_batch_step(self):
+        if self._train_step is None:
+            optimizer = self._make_optimizer()
+            loss_fn = self.task.loss_fn
+
+            @jax.jit
+            def step(params, opt_state, batch):
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+                updates, opt_state = optimizer.update(grads, opt_state, params)
+                return apply_updates(params, updates), opt_state, loss
+
+            self._train_step = (optimizer, step)
+        return self._train_step
+
+    def local_train(self, params: PyTree, client_id: int, state: FedState,
+                    rng: np.random.Generator) -> tuple[PyTree, int]:
+        """One client's full local training (cfg.local_epochs over its shard)."""
+        cfg = self.cfg
+        ds = self.task.client_data[client_id]
+        if isinstance(ds, tuple):
+            n = len(ds[0])
+        elif isinstance(ds, dict):
+            n = len(next(iter(ds.values())))
+        else:
+            n = len(ds)
+        optimizer, step = self._train_batch_step()
+        opt_state = optimizer.init(params)
+        if cfg.local_algo == "fedprox":
+            opt_state["anchor"] = params
+        if cfg.local_algo == "scaffold":
+            opt_state = opt_state._replace(
+                c_local=state.scaffold_c_clients[client_id],
+                c_global=state.scaffold_c_global)
+        w_start = params
+        for _ in range(cfg.local_epochs):
+            order = rng.permutation(n)
+            bs = min(cfg.client_batch, n)
+            for i in range(0, n - bs + 1, bs):
+                batch = self.task.make_batch(ds, order[i:i + bs])
+                params, opt_state, _ = step(params, opt_state, batch)
+        if cfg.local_algo == "scaffold":
+            state.scaffold_c_clients[client_id] = scaffold_new_control(
+                opt_state, w_start, params, cfg.client_lr)
+        return params, n
+
+    # ---- one round (Algorithm 1) -----------------------------------------
+    def run_round(self, state: FedState) -> FedState:
+        cfg = self.cfg
+        t = state.round + 1
+        rng = np.random.default_rng(cfg.seed * 100_000 + t)
+
+        active = sample_clients(cfg.num_clients, cfg.participation, rng)
+        groups = assign_groups(active, cfg.K, rng)
+
+        # --- local training + per-group aggregation (Eq. 1-2) ---
+        new_globals: list[PyTree] = []
+        all_client_models: list[PyTree] = []
+        all_client_sizes: list[int] = []
+        scaffold_deltas = []
+        for k, group in enumerate(groups):
+            client_models, sizes = [], []
+            for cid in group:
+                w, n = self.local_train(state.global_models[k], int(cid), state, rng)
+                client_models.append(w)
+                sizes.append(n)
+            if cfg.secure_aggregation:
+                agg, _uploads = secure_aggregate(client_models, sizes, seed=t)
+            else:
+                agg = fedavg_aggregate(client_models, sizes)
+            new_globals.append(agg)
+            all_client_models.extend(client_models)
+            all_client_sizes.extend(sizes)
+
+        if cfg.local_algo == "scaffold":
+            # server control: c += |S|/N * mean_i (c_i' − c_i)  (we use the
+            # simpler running-average form: c = mean of client controls)
+            cs = state.scaffold_c_clients
+            state.scaffold_c_global = jax.tree.map(
+                lambda *xs: sum(xs) / len(xs), *cs)
+
+        # --- temporal ensemble push (Eq. 5) ---
+        state.ensemble.push(t, new_globals)
+
+        # --- distillation (Eq. 3-4) ---
+        kd_info = {}
+        if cfg.distill_target != "none" and t > cfg.distill_warmup_rounds:
+            if cfg.ensemble_source == "clients":
+                teachers = list(all_client_models)
+                if cfg.ensemble_extra_sampled:
+                    teachers += self._sample_posterior(
+                        all_client_models, all_client_sizes,
+                        cfg.ensemble_extra_sampled, t)
+                    teachers.append(new_globals[0])
+            else:
+                teachers = state.ensemble.members()
+            targets = range(cfg.K) if cfg.distill_target == "all" else (0,)
+            for k in targets:
+                new_globals[k], kd_info = dist.distill(
+                    new_globals[k], teachers, self.task.server_batches,
+                    self.task.logits_fn,
+                    steps=cfg.distill_steps, lr=cfg.server_lr,
+                    temperature=cfg.temperature)
+
+        state.global_models = new_globals
+        state.round = t
+        rec = {"round": t, "active": len(active), **kd_info}
+        if self.task.eval_fn is not None:
+            rec["acc_main"] = self.task.eval_fn(new_globals[0])
+        state.history.append(rec)
+        return state
+
+    def _sample_posterior(self, models, sizes, n_samples, seed):
+        """FedBE-style Gaussian posterior samples around the weighted mean."""
+        mean = fedavg_aggregate(models, sizes)
+        # elementwise variance around the mean
+        var = jax.tree.map(lambda m, *xs: sum((x - m) ** 2 for x in xs) / max(1, len(xs) - 1),
+                           mean, *models)
+        out = []
+        for i in range(n_samples):
+            key = jax.random.PRNGKey(seed * 977 + i)
+            keys = iter(jax.random.split(key, len(jax.tree.leaves(mean))))
+            out.append(jax.tree.map(
+                lambda m, v: m + jnp.sqrt(jnp.maximum(v, 0)).astype(m.dtype)
+                * jax.random.normal(next(keys), m.shape, jnp.float32).astype(m.dtype),
+                mean, var))
+        return out
+
+    # ---- full run -----------------------------------------------------------
+    def run(self, rounds: int | None = None, log_every: int = 0,
+            state: FedState | None = None) -> FedState:
+        state = state or self.init_state()
+        for _ in range(rounds or self.cfg.rounds):
+            state = self.run_round(state)
+            if log_every and state.round % log_every == 0:
+                rec = state.history[-1]
+                print(f"[round {state.round:3d}] " +
+                      " ".join(f"{k}={v}" for k, v in rec.items() if k != "round"))
+        return state
+
+    # ---- evaluation helpers ----------------------------------------------
+    def ensemble_eval_fn(self, state: FedState):
+        """Accuracy of the K·R teacher ensemble (paper Table 5)."""
+        teachers = state.ensemble.members() or state.global_models
+        return lambda batch: dist.ensemble_predict(
+            teachers, batch, self.task.logits_fn)
+
+
+def make_runner(preset: str, task: FedTask, **overrides) -> FederatedRunner:
+    return FederatedRunner(make_config(preset, **overrides), task)

@@ -1,0 +1,36 @@
+"""Client sampling and group assignment (paper §3.1.1, Remark 1).
+
+Every round: participating clients are sampled, then "randomly but evenly
+distributed into K groups"; membership is resampled/reshuffled each round so
+every global model sees every client's data distribution over time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_clients(num_clients: int, participation: float, rng: np.random.Generator,
+                   at_least: int = 1) -> np.ndarray:
+    n = max(at_least, int(round(num_clients * participation)))
+    return rng.choice(num_clients, size=min(n, num_clients), replace=False)
+
+
+def assign_groups(active_clients: np.ndarray, K: int,
+                  rng: np.random.Generator,
+                  extra_to_main: bool = True) -> list[np.ndarray]:
+    """Shuffle then deal round-robin into K groups (sizes differ by ≤1).
+
+    When len(active) % K != 0, leftovers go to the lowest group indices; the
+    paper's K=3 appendix experiment allocates the extra client to the main
+    global model (group 0), which round-robin after shuffle reproduces.
+    """
+    assert K >= 1
+    a = np.array(active_clients, copy=True)
+    rng.shuffle(a)
+    groups = [a[k::K] for k in range(K)]
+    if not extra_to_main:
+        groups = groups[::-1]
+    # never return an empty group: K > #clients is a config error
+    if any(len(g) == 0 for g in groups):
+        raise ValueError(f"{len(a)} active clients cannot fill K={K} groups")
+    return groups

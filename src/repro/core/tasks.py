@@ -1,0 +1,143 @@
+"""Ready-made FedTasks: the paper's image-classification setting on the
+synthetic CIFAR stand-in, with either the paper's ResNets or a small CNN
+(for fast CPU benchmarks), plus an LM task over any assigned architecture
+(reduced scale) proving FedSDD is model-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.resnet_cifar import ResNetConfig, get_resnet_config
+from repro.core.fedsdd import FedTask
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import SyntheticClassification, make_model_batch
+from repro.models import build_model
+from repro.models.resnet import init_resnet, resnet_accuracy, resnet_logits, resnet_loss
+
+
+# ---------------------------------------------------------------- small CNN
+def _init_cnn(key, num_classes: int = 10, width: int = 16):
+    ks = jax.random.split(key, 4)
+    return {
+        "c1": jax.random.normal(ks[0], (3, 3, 3, width)) * 0.2,
+        "c2": jax.random.normal(ks[1], (3, 3, width, width * 2)) * 0.1,
+        "w": jax.random.normal(ks[2], (width * 2, num_classes)) * 0.1,
+        "b": jnp.zeros((num_classes,)),
+    }
+
+
+def _cnn_logits(params, x):
+    h = jax.lax.conv_general_dilated(x, params["c1"], (2, 2), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(h)
+    h = jax.lax.conv_general_dilated(h, params["c2"], (2, 2), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(h)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["w"] + params["b"]
+
+
+# ---------------------------------------------------------------- tasks
+def classification_task(model: str = "cnn",
+                        num_clients: int = 20,
+                        alpha: float = 0.1,
+                        num_classes: int = 10,
+                        num_train: int = 4000,
+                        num_server: int = 1024,
+                        server_batch: int = 256,
+                        noise: float = 0.6,
+                        seed: int = 0) -> FedTask:
+    """The paper's CIFAR setting on the synthetic stand-in.
+
+    model: "cnn" (fast) | "resnet20" | "resnet56" | "wrn16-2" (paper's).
+    """
+    data = SyntheticClassification(num_classes=num_classes, num_train=num_train,
+                                   num_server=num_server, noise=noise, seed=seed)
+    x_tr, y_tr = data.train()
+    x_te, y_te = data.test()
+    parts = dirichlet_partition(y_tr, num_clients, alpha, seed=seed + 17)
+    client_data = [(x_tr[ix], y_tr[ix]) for ix in parts]
+    sx = data.server_unlabeled()
+    server_batches = [
+        {"x": jnp.asarray(sx[i:i + server_batch])}
+        for i in range(0, len(sx) - server_batch + 1, server_batch)
+    ]
+
+    if model == "cnn":
+        init_fn = partial(_init_cnn, num_classes=num_classes)
+        logits_fn = lambda p, b: _cnn_logits(p, b["x"])
+
+        def loss_fn(p, b):
+            logits = _cnn_logits(p, b["x"])
+            logp = jax.nn.log_softmax(logits)
+            loss = -jnp.mean(jnp.take_along_axis(logp, b["y"][:, None], -1))
+            return loss, {}
+
+        fwd = jax.jit(_cnn_logits)
+
+        def eval_fn(p):
+            preds = []
+            for i in range(0, len(x_te), 500):
+                preds.append(np.argmax(np.asarray(fwd(p, jnp.asarray(x_te[i:i+500]))), -1))
+            return float(np.mean(np.concatenate(preds) == y_te))
+    else:
+        rcfg = get_resnet_config(model, num_classes)
+        init_fn = lambda key: init_resnet(key, rcfg)
+        logits_fn = lambda p, b: resnet_logits(p, b["x"], rcfg)
+        loss_fn = lambda p, b: resnet_loss(p, b, rcfg)
+        eval_fn = lambda p: resnet_accuracy(p, x_te, y_te, rcfg)
+
+    def make_batch(ds, idx):
+        x, y = ds
+        return {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx])}
+
+    return FedTask(init_fn=init_fn, loss_fn=loss_fn, logits_fn=logits_fn,
+                   client_data=client_data, server_batches=server_batches,
+                   make_batch=make_batch, eval_fn=eval_fn)
+
+
+def lm_task(cfg: ModelConfig,
+            num_clients: int = 8,
+            docs_per_client: int = 8,
+            seq: int = 32,
+            server_batches_n: int = 2,
+            server_batch: int = 4,
+            seed: int = 0) -> FedTask:
+    """FedSDD over a (reduced) assigned architecture: clients hold token
+    shards; the server distills on unlabeled token batches.  Proves the
+    paper's technique runs unchanged on every model family (logits are
+    flattened over sequence positions for the KD loss)."""
+    model = build_model(cfg)
+
+    def init_fn(key):
+        return model.init(key)
+
+    def loss_fn(p, b):
+        return model.loss(p, b)
+
+    def logits_fn(p, b):
+        lg, _ = model.logits(p, b)
+        return lg.reshape(-1, cfg.vocab_size)
+
+    client_data = []
+    for c in range(num_clients):
+        b = make_model_batch(cfg, docs_per_client, seq, seed=seed * 991 + c)
+        client_data.append(b)
+    server_batches = []
+    for i in range(server_batches_n):
+        b = make_model_batch(cfg, server_batch, seq, seed=seed * 7919 + 100 + i)
+        server_batches.append({k: jnp.asarray(v) for k, v in b.items()})
+
+    def make_batch(ds, idx):
+        return {k: jnp.asarray(v[np.asarray(idx)]) for k, v in ds.items()}
+
+    return FedTask(init_fn=init_fn, loss_fn=loss_fn, logits_fn=logits_fn,
+                   client_data=client_data,
+                   server_batches=server_batches, make_batch=make_batch,
+                   eval_fn=None)

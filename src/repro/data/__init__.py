@@ -1,0 +1,4 @@
+from repro.data.partition import dirichlet_partition  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticClassification, make_lm_batch, make_model_batch
+)

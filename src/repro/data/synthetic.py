@@ -1,0 +1,112 @@
+"""Deterministic synthetic datasets (offline container — DESIGN.md §7).
+
+Two corpora:
+  * ``SyntheticClassification`` — a learnable Gaussian-mixture image task
+    standing in for CIFAR10/100 in the faithful FedSDD reproduction: each
+    class c has a fixed template image; samples are template + noise.  A
+    small CNN separates classes well above chance, so FL accuracy *orderings*
+    (FedSDD vs FedAvg vs FedDF, α=1.0 vs α=0.1, R=1 vs 4) are measurable.
+  * LM/token batches for the 10 assigned transformer architectures:
+    deterministic pseudo-random token streams with a planted bigram rule so
+    next-token loss is (slightly) learnable — enough for smoke tests to
+    assert finite, decreasing loss.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class SyntheticClassification:
+    num_classes: int = 10
+    image_shape: tuple = (32, 32, 3)
+    num_train: int = 5000
+    num_test: int = 1000
+    num_server: int = 2000          # unlabeled server distillation set
+    noise: float = 0.6
+    seed: int = 0
+    _cache: dict = field(default_factory=dict, repr=False)
+
+    def _templates(self, rng):
+        """Low-frequency class templates: random 4×4 patterns upsampled to
+        image size (nearest), so convolution + pooling preserves the class
+        signal — pixel-level white-noise templates would be invisible to a
+        globally-pooled CNN."""
+        h, w, c = self.image_shape
+        coarse = rng.normal(0, 1, (self.num_classes, 4, 4, c)).astype(np.float32)
+        reps = (h // 4, w // 4)
+        return np.kron(coarse, np.ones((1, *reps, 1), np.float32))
+
+    def _make(self, n, seed_off, *, shift: float = 0.0):
+        rng = np.random.default_rng(self.seed)
+        templates = self._templates(rng)
+        rng2 = np.random.default_rng(self.seed + seed_off)
+        y = rng2.integers(0, self.num_classes, n)
+        x = templates[y] + rng2.normal(0, self.noise, (n, *self.image_shape)).astype(np.float32)
+        if shift:
+            x = x + shift * rng2.normal(0, 1, (1, *self.image_shape)).astype(np.float32)
+        return x.astype(np.float32), y.astype(np.int32)
+
+    def train(self):
+        if "train" not in self._cache:
+            self._cache["train"] = self._make(self.num_train, 1)
+        return self._cache["train"]
+
+    def test(self):
+        if "test" not in self._cache:
+            self._cache["test"] = self._make(self.num_test, 2)
+        return self._cache["test"]
+
+    def server_unlabeled(self):
+        """Unlabeled distillation set.  Slightly domain-shifted, mirroring the
+        paper's CIFAR100/ImageNet32 server sets (related but not identical
+        distribution); labels are discarded."""
+        if "server" not in self._cache:
+            x, _ = self._make(self.num_server, 3, shift=0.3)
+            self._cache["server"] = x
+        return self._cache["server"]
+
+
+def batches(x, y, batch_size: int, rng: np.random.Generator):
+    """One epoch of shuffled minibatches (drops the ragged tail)."""
+    idx = rng.permutation(len(x))
+    for i in range(0, len(x) - batch_size + 1, batch_size):
+        b = idx[i:i + batch_size]
+        yield x[b], y[b]
+
+
+# ----------------------------------------------------------------- LM data
+def make_lm_batch(vocab: int, batch: int, seq: int, seed: int = 0):
+    """Deterministic token batch with a planted rule: token 2i is followed by
+    token (2i + 7) % vocab half the time — learnable structure."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, vocab, (batch, seq + 1), dtype=np.int64)
+    follow = rng.random((batch, seq)) < 0.5
+    toks[:, 1:][follow] = (toks[:, :-1][follow] * 2 + 7) % vocab
+    return {
+        "tokens": toks[:, :-1].astype(np.int32),
+        "labels": toks[:, 1:].astype(np.int32),
+    }
+
+
+def make_model_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Training batch matching ``Model.loss``'s expectations per family,
+    including the stubbed modality frontends."""
+    rng = np.random.default_rng(seed)
+    if cfg.family == "audio":
+        mask = rng.random((batch, seq)) < 0.15
+        mask[:, 0] = True  # ensure non-empty
+        return {
+            "embeds": rng.normal(0, 1, (batch, seq, cfg.frontend_dim)).astype(np.float32),
+            "labels": rng.integers(0, cfg.vocab_size, (batch, seq)).astype(np.int32),
+            "mask": mask,
+        }
+    b = make_lm_batch(cfg.vocab_size, batch, seq, seed)
+    if cfg.family == "vlm":
+        P = min(cfg.num_prefix_embeds, seq // 2)
+        b["embeds"] = rng.normal(0, 1, (batch, P, cfg.frontend_dim)).astype(np.float32)
+    return b

@@ -1,0 +1,1 @@
+from repro.fedckpt.checkpointer import Checkpointer, load_pytree, save_pytree  # noqa: F401

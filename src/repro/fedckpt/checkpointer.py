@@ -1,0 +1,104 @@
+"""Pytree checkpointing (no orbax in this container).
+
+Arrays are flattened with stable '/'-joined key paths into one ``.npz``
+per step; structure round-trips exactly (dtypes included).  ``Checkpointer``
+adds step management + retention, and is what the temporal-ensembling ring
+persists through when checkpoints must survive the process
+(``core/temporal.py`` keeps the hot ring in memory).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "§"   # unlikely in key names
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            # numpy's npz format cannot serialize ml_dtypes; f32 is a
+            # lossless container for bf16 (load casts back via `like`)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    """Step-indexed checkpoints with retention: ckpt_000042.npz + meta."""
+
+    def __init__(self, directory: str, keep: int = 4):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:06d}.npz")
+
+    def save(self, step: int, tree: PyTree, meta: dict | None = None) -> str:
+        p = self._path(step)
+        save_pytree(p, tree)
+        if meta is not None:
+            with open(p.replace(".npz", ".json"), "w") as f:
+                json.dump(meta, f)
+        self._gc()
+        return p
+
+    def restore(self, step: int, like: PyTree) -> PyTree:
+        return load_pytree(self._path(step), like)
+
+    def steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.dir):
+            m = re.fullmatch(r"ckpt_(\d+)\.npz", fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore_latest(self, like: PyTree) -> tuple[int, PyTree] | None:
+        s = self.latest()
+        if s is None:
+            return None
+        return s, self.restore(s, like)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            for ext in (".npz", ".json"):
+                fp = self._path(s).replace(".npz", ext)
+                if os.path.exists(fp):
+                    os.remove(fp)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package has:
+  kernel.py - pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target,
+              validated in interpret mode on CPU)
+  ops.py    - jit'd public wrapper with custom_vjp where differentiable and
+              automatic XLA fallback off-TPU
+  ref.py    - pure-jnp oracle the tests assert against
+
+Kernels (DESIGN.md section 4): kd_loss (fused ensemble KD - the paper's
+server-side hot spot), weight_avg (Eq. 2 aggregation), flash_attention
+(prefill/train) and flash_decode (serve_step).
+"""

@@ -1,0 +1,176 @@
+"""Flash attention (forward) and split-K flash decode as Pallas TPU kernels.
+
+Tiling (DESIGN.md §4):
+  * ``flash_forward``: grid (B·H, Sq/qb, Skv/kb).  The TPU grid is executed
+    sequentially over the trailing axis, so VMEM scratch (m, l, acc) carries
+    the online-softmax state across KV blocks of one (head, q-block); the
+    output tile is written once on the last KV step.  Blocks: q (qb, dh),
+    k/v (kb, dh) with qb=kb=128 — MXU-aligned (128 lanes) and, at dh=256,
+    4×(128·256·4 B) ≈ 0.5 MB of VMEM.
+  * causal/sliding-window masking happens on block-absolute positions; fully
+    masked KV blocks short-circuit via ``pl.when`` (the grid still visits
+    them, but no FLOPs are issued — on TPU the bound is the visit count,
+    which the sliding-window XLA path in models/attention.py avoids by
+    construction instead).
+  * ``flash_decode``: grid (B·Hkv, S/kb).  One query row per kv-head group
+    (G, dh) lives in VMEM the whole pass; KV cache blocks stream through —
+    the split-K pattern serve_step lowers to at decode_32k/long_500k.
+
+Backward: ops.py wires a custom_vjp that recomputes attention with the
+chunked-XLA reference — the standard "flash-style recompute" trade.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_QB = 128
+DEFAULT_KB = 128
+
+
+# ---------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                      nk: int, qb: int, kb: int, causal: bool, window: int,
+                      scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+    k_pos = ik * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+    rel = q_pos - k_pos
+    block_needed = True
+    if causal:
+        block_needed = (ik * kb) <= (iq * qb + qb - 1)
+    if window > 0:
+        block_needed = jnp.logical_and(
+            block_needed, (ik + 1) * kb - 1 > iq * qb - window)
+
+    @pl.when(block_needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (qb, dh)
+        k = k_ref[0].astype(jnp.float32)                  # (kb, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (qb, kb)
+        ok = jnp.ones((qb, kb), bool)
+        if causal:
+            ok &= rel >= 0
+        if window > 0:
+            ok &= rel < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_forward(q, k, v, *, causal: bool = True, window: int = 0,
+                  qb: int = DEFAULT_QB, kb: int = DEFAULT_KB,
+                  interpret: bool = True):
+    """q (BH, Sq, dh), k/v (BH, Skv, dh) — heads pre-flattened/broadcast."""
+    BH, Sq, dh = q.shape
+    _, Skv, _ = k.shape
+    qb = min(qb, Sq)
+    kb = min(kb, Skv)
+    assert Sq % qb == 0 and Skv % kb == 0, (Sq, qb, Skv, kb)
+    nq, nk = Sq // qb, Skv // kb
+    return pl.pallas_call(
+        functools.partial(_flash_fwd_kernel, nk=nk, qb=qb, kb=kb,
+                          causal=causal, window=window, scale=dh ** -0.5),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kb, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kb, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------
+# decode (split-K over the KV cache)
+# ---------------------------------------------------------------------
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, ns: int, kb: int,
+                         scale: float):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale              # (G, dh)
+    k = k_ref[0].astype(jnp.float32)                      # (kb, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (G, kb)
+    pos = ik * kb + jax.lax.broadcasted_iota(jnp.int32, (1, kb), 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ik == ns - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, cache_len, *, kb: int = 512, interpret: bool = True):
+    """q (BHkv, G, dh); k/v (BHkv, S, dh); cache_len scalar int32."""
+    BH, G, dh = q.shape
+    _, S, _ = k.shape
+    kb = min(kb, S)
+    assert S % kb == 0
+    ns = S // kb
+    return pl.pallas_call(
+        functools.partial(_flash_decode_kernel, ns=ns, kb=kb,
+                          scale=dh ** -0.5),
+        grid=(BH, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (0,)),
+            pl.BlockSpec((1, G, dh), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, kb, dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, kb, dh), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, dh), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.reshape(cache_len, (1,)).astype(jnp.int32), q, k, v)

@@ -1,0 +1,83 @@
+"""Public flash-attention ops: GQA-aware wrappers + custom_vjp backward.
+
+``flash_attention(q, k, v)`` takes (B, S, H, dh) / (B, S, Hkv, dh) layouts
+(the model-side convention) and dispatches:
+  * TPU (or REPRO_FORCE_PALLAS=1): the Pallas kernel, heads flattened to the
+    grid's leading axis, KV heads broadcast to H.
+  * otherwise: the chunked-XLA online-softmax attention in
+    ``models.attention`` (same math, scan instead of grid).
+
+Backward is flash-style recompute: custom_vjp saves only (q, k, v) and
+re-runs the chunked reference under jax.vjp.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel
+from repro.models import attention as xla_attn
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_bh(q, k, v):
+    """(B,S,H,dh)+(B,S,Hkv,dh) -> flattened (B·H, S, dh) with kv broadcast."""
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Skv, dh)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Skv, dh)
+    return qf, kf, vf
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """q (B,Sq,H,dh); k,v (B,Skv,Hkv,dh) -> (B,Sq,H,dh)."""
+    if _use_pallas():
+        B, Sq, H, dh = q.shape
+        qf, kf, vf = _to_bh(q, k, v)
+        of = kernel.flash_forward(qf, kf, vf, causal=causal, window=window,
+                                  interpret=_interpret())
+        return of.reshape(B, H, Sq, dh).transpose(0, 2, 1, 3)
+    return xla_attn.attention(q, k, v, causal=causal, window=window)
+
+
+def _fa_fwd(q, k, v, causal, window):
+    return flash_attention(q, k, v, causal, window), (q, k, v)
+
+
+def _fa_bwd(causal, window, saved, g):
+    q, k, v = saved
+    _, vjp = jax.vjp(lambda q_, k_, v_: xla_attn.attention(
+        q_, k_, v_, causal=causal, window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_decode(q1, k_cache, v_cache, cache_len):
+    """q1 (B,1,H,dh); caches (B,S,Hkv,dh); cache_len scalar -> (B,1,H,dh)."""
+    if not _use_pallas():
+        return xla_attn.decode_attention(q1, k_cache, v_cache, cache_len)
+    B, _, H, dh = q1.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    qf = q1.reshape(B, Hkv, G, dh).reshape(B * Hkv, G, dh)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    of = kernel.flash_decode(qf, kf, vf, cache_len, interpret=_interpret())
+    return of.reshape(B, 1, H, dh)

@@ -1,0 +1,34 @@
+"""Dense-softmax oracle for the flash attention kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,H,Sq,dh), k/v (B,H,Skv,dh) (kv heads pre-broadcast), Sq==Skv."""
+    B, H, S, dh = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    rel = jnp.arange(S)[:, None] - jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    scores = jnp.where(ok, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, cache_len):
+    """q (B,H,dh), k/v (B,H,S,dh) -> (B,H,dh); entries ≥ cache_len masked."""
+    B, H, S, dh = k.shape
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    valid = jnp.arange(S) < cache_len
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

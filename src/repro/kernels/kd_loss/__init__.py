@@ -1,0 +1,1 @@
+from repro.kernels.kd_loss import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,88 @@
+"""Public jit'd KD ops with custom_vjp and backend dispatch.
+
+On TPU the Pallas kernels run compiled; elsewhere they run in interpret
+mode only when ``REPRO_FORCE_PALLAS=1`` (tests do this) — the default
+CPU path is the jnp oracle, which lowers to identical math for the
+dry-run's cost analysis.
+
+Vocab padding: inputs are padded to a multiple of 128 lanes with -1e30
+student logits / 0 teacher probs (exact for softmax + KL).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kd_loss import kernel, ref
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_v(x, fill, multiple: int = 128):
+    V = x.shape[-1]
+    pad = (-V) % multiple
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
+
+
+# ---------------------------------------------------------------- kd_loss
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def kd_loss(student_logits, teacher_probs, temperature: float = 1.0):
+    """mean_b KL(teacher ‖ softmax(student/τ)) · τ².  Differentiable wrt
+    student logits; teachers are constants (paper Eq. 4)."""
+    if _use_pallas():
+        s = _pad_v(student_logits, -1e30)
+        t = _pad_v(teacher_probs, 0.0)
+        return kernel.kd_loss_fwd(s, t, temperature, interpret=_interpret())
+    return ref.kd_loss_ref(student_logits, teacher_probs, temperature)
+
+
+def _kd_fwd(student_logits, teacher_probs, temperature):
+    return kd_loss(student_logits, teacher_probs, temperature), \
+        (student_logits, teacher_probs)
+
+
+def _kd_bwd(temperature, saved, g):
+    s, t = saved
+    if _use_pallas():
+        sp = _pad_v(s, -1e30)
+        tp = _pad_v(t, 0.0)
+        gs = kernel.kd_loss_bwd(sp, tp, g, temperature, interpret=_interpret())
+        gs = gs[..., :s.shape[-1]]
+    else:
+        gs = (ref.kd_loss_grad_ref(s, t, temperature) * g).astype(s.dtype)
+    return gs, None
+
+
+kd_loss.defvjp(_kd_fwd, _kd_bwd)
+
+
+# ------------------------------------------------------- ensemble_softmax
+def ensemble_softmax(teacher_logits, temperature: float = 1.0):
+    """(K, B, V) -> (B, V) τ-softmax of the mean teacher logit (Eq. 3/5).
+    Non-differentiable by design (teachers are frozen)."""
+    teacher_logits = jax.lax.stop_gradient(teacher_logits)
+    if _use_pallas():
+        t = _pad_v(teacher_logits, -1e30)
+        # padding note: -1e30/K per member keeps padded lanes at prob 0
+        out = kernel.ensemble_softmax(t, temperature, interpret=_interpret())
+        return out[..., :teacher_logits.shape[-1]]
+    return ref.ensemble_softmax_ref(teacher_logits, temperature)
+
+
+def ensemble_kd_loss(student_logits, teacher_logits, temperature: float = 1.0):
+    """Fully fused path: teacher stack (K, B, V) + student (B, V) -> loss."""
+    return kd_loss(student_logits,
+                   ensemble_softmax(teacher_logits, temperature), temperature)

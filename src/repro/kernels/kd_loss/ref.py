@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the fused ensemble-KD kernels (Eqs. 3-5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ensemble_softmax_ref(teacher_logits: jnp.ndarray, temperature: float = 1.0):
+    """(K, B, V) teacher logits -> (B, V) τ-softmax of the mean logit (Eq. 3/5)."""
+    mean = jnp.mean(teacher_logits.astype(jnp.float32), axis=0)
+    return jax.nn.softmax(mean / temperature, axis=-1)
+
+
+def kd_loss_ref(student_logits: jnp.ndarray, teacher_probs: jnp.ndarray,
+                temperature: float = 1.0):
+    """Mean_b KL(t_b ‖ softmax(s_b/τ)) · τ²  (Hinton scaling; Eq. 4)."""
+    s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / temperature, axis=-1)
+    t = teacher_probs.astype(jnp.float32)
+    kl = jnp.sum(t * (jnp.log(jnp.clip(t, 1e-20, None)) - s), axis=-1)
+    return jnp.mean(kl) * temperature ** 2
+
+
+def kd_loss_grad_ref(student_logits, teacher_probs, temperature: float = 1.0):
+    """Analytic ∂loss/∂student_logits = τ·(softmax(s/τ) − t)/B."""
+    B = student_logits.shape[0]
+    p = jax.nn.softmax(student_logits.astype(jnp.float32) / temperature, axis=-1)
+    return (temperature * (p - teacher_probs.astype(jnp.float32)) / B)

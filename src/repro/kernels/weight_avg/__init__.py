@@ -1,0 +1,1 @@
+from repro.kernels.weight_avg import kernel, ops, ref  # noqa: F401

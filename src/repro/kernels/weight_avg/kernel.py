@@ -1,0 +1,46 @@
+"""Streaming weighted model average (FedAvg Eq. 2) as a Pallas kernel.
+
+Aggregation is purely memory-bound: read N client parameter shards once,
+write the average once.  The kernel tiles the flattened parameter axis into
+(N, Db) VMEM blocks — the N client rows of one column tile are resident
+together, multiplied by the normalized weight vector (prefetched whole, it
+is tiny) and reduced on the VPU.  HBM traffic is exactly N·D reads + D
+writes with no intermediate (N, D) temporaries, which is what XLA's
+unfused ``sum(stack * w)`` would materialize at this size.
+
+Grid: (D / Db,). Block: (N, Db) f32 — Db=16384 at N≤32 keeps the block
+≤ 2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_DB = 16384
+
+
+def _wavg_kernel(w_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)              # (N, Db)
+    w = w_ref[...].astype(jnp.float32)              # (N, 1)
+    o_ref[...] = jnp.sum(x * w, axis=0, keepdims=True).astype(o_ref.dtype)[0]
+
+
+def weighted_average(stacked: jnp.ndarray, weights: jnp.ndarray,
+                     block_d: int = DEFAULT_DB, interpret: bool = True):
+    """stacked (N, D), weights (N,) -> (D,).  D padded to block_d by ops.py."""
+    N, D = stacked.shape
+    db = min(block_d, D)
+    assert D % db == 0, (D, db)
+    w = (weights.astype(jnp.float32) / jnp.sum(weights.astype(jnp.float32)))
+    return pl.pallas_call(
+        _wavg_kernel,
+        grid=(D // db,),
+        in_specs=[pl.BlockSpec((N, 1), lambda d: (0, 0)),
+                  pl.BlockSpec((N, db), lambda d: (0, d))],
+        out_specs=pl.BlockSpec((db,), lambda d: (d,)),
+        out_shape=jax.ShapeDtypeStruct((D,), stacked.dtype),
+        interpret=interpret,
+    )(w[:, None], stacked)

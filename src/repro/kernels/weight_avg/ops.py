@@ -1,0 +1,46 @@
+"""Public weighted-average ops: 2-D entry point + whole-pytree wrapper used
+by ``core.aggregation`` on TPU."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.weight_avg import kernel, ref
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def weighted_average(stacked, weights, block_d: int | None = None):
+    """stacked (N, D), weights (N,) -> (D,)."""
+    if not _use_pallas():
+        return ref.weighted_average_ref(stacked, weights)
+    N, D = stacked.shape
+    db = block_d or min(kernel.DEFAULT_DB, max(128, D))
+    pad = (-D) % db
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    out = kernel.weighted_average(stacked, weights, block_d=db,
+                                  interpret=_interpret())
+    return out[:D]
+
+
+def weighted_average_pytree(stacked_tree, weights):
+    """Leaves with leading client axis (N, ...) -> averaged leaves (...)."""
+
+    def leaf(x):
+        N = x.shape[0]
+        flat = x.reshape(N, -1)
+        return weighted_average(flat, weights).reshape(x.shape[1:])
+
+    return jax.tree.map(leaf, stacked_tree)

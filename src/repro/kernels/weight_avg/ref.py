@@ -1,0 +1,11 @@
+"""Oracle for the streaming weighted-average kernel (paper Eq. 2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_average_ref(stacked: jnp.ndarray, weights: jnp.ndarray):
+    """stacked (N, D), weights (N,) — returns Σ_i ŵ_i x_i with ŵ normalized."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    return jnp.sum(stacked.astype(jnp.float32) * w[:, None], axis=0).astype(stacked.dtype)

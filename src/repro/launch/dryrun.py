@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  The dry-run — and ONLY the dry-run — sees 512 placeholder
+#   devices so jax.make_mesh can build the production meshes.
+
+"""Multi-pod dry-run driver (deliverable (e), DESIGN.md §5).
+
+For every (architecture × input shape × mesh) combination this lowers the
+appropriate step (train_step / prefill_step / serve_step — plus optionally
+the FedSDD round step itself) with ShapeDtypeStruct inputs, compiles it,
+and records:
+
+  * memory_analysis()  — per-device bytes: proves the sharding fits
+  * cost_analysis()    — FLOPs + HBM bytes for the §Roofline terms
+  * collective bytes   — parsed from the compiled HLO (utils/hlo.py)
+
+CALIBRATION (measured, see EXPERIMENTS.md §Dry-run): XLA cost_analysis
+counts a while-loop/scan body ONCE, not × trip count.  Since every model
+scans over its layer superblocks, the driver compiles the full-depth scan
+program (the sharding/memory/compile PROOF) plus two shallow UNROLLED
+variants (depth q+p and q+2p) and linearly extrapolates per-superblock
+cost:  cost(full) = cost(d1) + (n_super − 1)·(cost(d2) − cost(d1)).
+FLOPs, HBM bytes and collective bytes are all extrapolated this way;
+memory_analysis is taken from the true full-depth compile.
+
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline table in EXPERIMENTS.md §Roofline is generated from them by
+benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  python -m repro.launch.dryrun --all --both-meshes
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --fedsdd
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, get_shape
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import build_model
+from repro.sharding.specs import batch_pspec, cache_pspec, param_pspec, to_shardings
+from repro.utils.hlo import collective_stats, roofline
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2" if multi_pod else "pod1"
+
+
+# ---------------------------------------------------------------------
+def build_jitted(cfg, shape, mesh, *, multi_pod: bool, fedsdd: bool,
+                 period_mult: int = 1, sgd_lr: float = 0.1,
+                 spec_overrides=None, pspec_overrides=None,
+                 cache_seq_axis=None, remat: bool = True):
+    """Build (jitted_fn, abstract_args) for one step variant."""
+    model = build_model(cfg, period_mult=period_mult)
+    batch_axis = ("pod", "data") if (multi_pod and not fedsdd) else "data"
+    p_specs = steps_lib.param_specs(model)
+    ppsec = param_pspec(p_specs, cfg, mesh, fsdp_axis="data")
+    if pspec_overrides:
+        ppsec = pspec_overrides(ppsec)
+    p_shard = to_shardings(ppsec, mesh)
+
+    if fedsdd:
+        from repro.core.distributed import make_fedsdd_round_fn
+        specs = steps_lib.fedsdd_round_specs(
+            cfg, shape, K=mesh.shape.get("pod", 2),
+            period_mult=period_mult, **(spec_overrides or {}))
+        g_axis = "pod" if multi_pod else None
+
+        stacked_shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(g_axis, *s.spec)), p_shard)
+        cb_shard = jax.tree.map(
+            lambda l: NamedSharding(
+                mesh, P(g_axis, "data", *([None] * (len(l.shape) - 2)))),
+            specs["client_batches"])
+        w_shard = NamedSharding(mesh, P(g_axis, "data"))
+        sb_shard = to_shardings(
+            batch_pspec(specs["server_batch"], shape, mesh, batch_axis="data"),
+            mesh)
+        fn = make_fedsdd_round_fn(
+            lambda p, b: model.loss(p, b, remat=True)[0],
+            lambda p, b: model.logits(p, b)[0],
+            client_lr=sgd_lr, server_lr=sgd_lr)
+        jitted = jax.jit(fn, in_shardings=(
+            stacked_shard, cb_shard, w_shard, sb_shard))
+        args = (specs["stacked_globals"], specs["client_batches"],
+                specs["client_weights"], specs["server_batch"])
+    elif shape.kind == "train":
+        b_specs = steps_lib.batch_specs(cfg, shape)
+        b_shard = to_shardings(batch_pspec(b_specs, shape, mesh,
+                                           batch_axis=batch_axis), mesh)
+        fn = steps_lib.make_train_step(model, lr=sgd_lr, remat=remat)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                         donate_argnums=(0,))
+        args = (p_specs, b_specs)
+    elif shape.kind == "prefill":
+        b_specs = steps_lib.batch_specs(cfg, shape)
+        b_shard = to_shardings(batch_pspec(b_specs, shape, mesh,
+                                           batch_axis=batch_axis), mesh)
+        fn = steps_lib.make_prefill_step(model)
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+        args = (p_specs, b_specs)
+    else:  # decode
+        c_specs = steps_lib.cache_specs(model, shape)
+        seq_on_data = shape.global_batch < mesh.shape["data"]
+        c_shard = to_shardings(
+            cache_pspec(c_specs, cfg, mesh, batch_axis=batch_axis,
+                        seq_on_data=seq_on_data,
+                        seq_axis=cache_seq_axis), mesh)
+        t_specs = jax.ShapeDtypeStruct((shape.global_batch, 1), np.int32)
+        t_shard = to_shardings(batch_pspec(
+            {"t": t_specs}, shape, mesh, batch_axis=batch_axis), mesh)["t"]
+        pos_spec = jax.ShapeDtypeStruct((), np.int32)
+        fn = steps_lib.make_serve_step(model)
+        jitted = jax.jit(fn, in_shardings=(
+            p_shard, t_shard, c_shard, NamedSharding(mesh, P())),
+            donate_argnums=(2,))
+        args = (p_specs, t_specs, c_specs, pos_spec)
+    return jitted, args
+
+
+def _compile_and_analyze(jitted, args):
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll.total_bytes),
+        "coll_by_kind": dict(coll.bytes_by_kind),
+        "coll_counts": dict(coll.count_by_kind),
+        "mem": compiled.memory_analysis(),
+    }
+
+
+def _shallow_cfgs(cfg):
+    """Two scan-based estimator variants (see CALIBRATION):
+      d1: depth q+2p, scan body = 1 superblock  -> cost a + body
+      d2: depth q+4p, scan body = 2 superblocks -> cost a + 2·body
+    (scan bodies are counted once by cost_analysis, so d2−d1 = exactly one
+    superblock; both compiles stay on the fast scan path — UNROLLED MoE+MLA
+    graphs trip a pathological XLA:CPU pass, measured 300 s for 2 layers.)
+    """
+    m = build_model(cfg)
+    q, p = m.prefix_period
+    return (dataclasses.replace(cfg, num_layers=q + 2 * p),
+            dataclasses.replace(cfg, num_layers=q + 4 * p),
+            m.n_super)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              fedsdd: bool = False, sgd_lr: float = 0.1,
+              extra_tag: str = "", spec_overrides=None,
+              pspec_overrides=None, skip_full: bool = False,
+              cache_seq_axis=None, remat: bool = True,
+              cfg_override=None, proof_only: bool = False):
+    """Lower + compile one combination; returns the result record."""
+    shape = get_shape(shape_name)
+    cfg0 = get_config(arch)
+    ok, reason = steps_lib.supported(cfg0, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+        "fedsdd": fedsdd, "supported": bool(ok), "skip_reason": reason,
+    }
+    if not ok:
+        return rec
+    cfg = steps_lib.config_for_shape(cfg0, shape)
+    if cfg_override is not None:
+        cfg = cfg_override(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    kw = dict(multi_pod=multi_pod, fedsdd=fedsdd, sgd_lr=sgd_lr,
+              spec_overrides=spec_overrides, pspec_overrides=pspec_overrides,
+              cache_seq_axis=cache_seq_axis, remat=remat)
+
+    with mesh:
+        # 1. full-depth scan program: the sharding/memory/compile PROOF
+        if not skip_full:
+            jitted, args = build_jitted(cfg, shape, mesh, **kw)
+            full = _compile_and_analyze(jitted, args)
+        else:
+            full = None
+        if proof_only:
+            # compile-proof only (multi-pod runs: the roofline table is
+            # single-pod per the brief) — report the raw scan-body costs
+            rec.update({
+                "proof_only": True,
+                "chips": chips,
+                "step_kind": "fedsdd_round" if fedsdd else shape.kind,
+                "compile_s": full["compile_s"],
+                "lower_s": full["lower_s"],
+                "scan_raw_flops_per_chip": full["flops"],
+                "collective_bytes_scan_body": full["coll_bytes"],
+                "collectives_scan_body": full["coll_by_kind"],
+                "memory_analysis": _mem_dict(full["mem"]),
+            })
+            if extra_tag:
+                rec["tag"] = extra_tag
+            return rec
+        # 2. second estimator point: scan whose body is TWO superblocks.
+        #    The full-depth scan already reports (a + body) — scan bodies
+        #    are counted once regardless of depth — so full + d2 suffice:
+        #    body = d2 − full;  total = full + (n_super − 1)·body.
+        c1, c2, n_super = _shallow_cfgs(cfg)
+        if full is not None:
+            r1 = full
+        else:
+            j1, a1 = build_jitted(c1, shape, mesh, period_mult=1, **kw)
+            r1 = _compile_and_analyze(j1, a1)
+        j2, a2 = build_jitted(c2, shape, mesh, period_mult=2, **kw)
+        r2 = _compile_and_analyze(j2, a2)
+
+    def extrap(key):
+        per_sb = r2[key] - r1[key]
+        return r1[key] + max(0.0, per_sb) * (n_super - 1)
+
+    flops = extrap("flops")
+    hbm_bytes = extrap("bytes")
+    coll_bytes = extrap("coll_bytes")
+    coll_kinds = {}
+    for k in set(r1["coll_by_kind"]) | set(r2["coll_by_kind"]):
+        v1 = r1["coll_by_kind"].get(k, 0.0)
+        v2 = r2["coll_by_kind"].get(k, 0.0)
+        coll_kinds[k] = v1 + max(0.0, v2 - v1) * (n_super - 1)
+
+    terms = roofline(flops, hbm_bytes, coll_bytes, chips=1)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind in ("train", "prefill") else 1)
+    if fedsdd:
+        so = spec_overrides or {}
+        K = mesh.shape.get("pod", 2)
+        n_cl = so.get("clients_per_group", 16)
+        bsz = so.get("client_batch") or max(1, shape.global_batch // (K * n_cl))
+        tokens = K * n_cl * bsz * shape.seq_len
+    mult = 6 if shape.kind == "train" or fedsdd else 2
+    model_flops = mult * cfg.num_active_params() * tokens
+    rec.update({
+        "chips": chips,
+        "step_kind": "fedsdd_round" if fedsdd else shape.kind,
+        "n_super": n_super,
+        "flops_per_chip": flops,
+        "hbm_bytes_per_chip": hbm_bytes,
+        "collective_bytes_per_chip": coll_bytes,
+        "collectives": coll_kinds,
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "dominant": terms.dominant,
+        "num_params": cfg.num_params(),
+        "num_active_params": cfg.num_active_params(),
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": (model_flops / (flops * chips)) if flops else None,
+        "shallow_raw": {"d1": {k: r1[k] for k in ("flops", "bytes", "coll_bytes", "compile_s")},
+                        "d2": {k: r2[k] for k in ("flops", "bytes", "coll_bytes", "compile_s")}},
+    })
+    if full is not None:
+        rec.update({
+            "compile_s": full["compile_s"],
+            "lower_s": full["lower_s"],
+            "scan_raw_flops_per_chip": full["flops"],
+            "collective_counts_scan_body": full["coll_counts"],
+            "memory_analysis": _mem_dict(full["mem"]),
+        })
+    if extra_tag:
+        rec["tag"] = extra_tag
+    return rec
+
+
+def _mem_dict(mem):
+    if mem is None:
+        return None
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out or str(mem)
+
+
+def save_rec(rec: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = rec.get("tag")
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if rec.get("fedsdd"):
+        name += "__fedsdd"
+    if tag:
+        name += f"__{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fedsdd", action="store_true",
+                    help="dry-run the FedSDD round step instead")
+    ap.add_argument("--proof-only", action="store_true",
+                    help="compile proof only, skip the cost estimator")
+    ap.add_argument("--redo", action="store_true",
+                    help="recompute combos whose artifact already exists")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch}__{shape}__{_mesh_tag(mp)}"
+                if args.fedsdd:
+                    name += "__fedsdd"
+                if args.tag:
+                    name += f"__{args.tag}"
+                if not args.redo and os.path.exists(
+                        os.path.join(args.out, name + ".json")):
+                    print(f"HAVE  {arch} {shape} {_mesh_tag(mp)}", flush=True)
+                    continue
+                try:
+                    rec = lower_one(arch, shape, multi_pod=mp,
+                                    fedsdd=args.fedsdd, extra_tag=args.tag,
+                                    proof_only=args.proof_only or mp)
+                    path = save_rec(rec, args.out)
+                    if not rec["supported"]:
+                        print(f"SKIP  {arch} {shape} {rec['mesh']}: {rec['skip_reason']}",
+                              flush=True)
+                        continue
+                    if rec.get("proof_only"):
+                        print(f"OK    {arch} {shape} {rec['mesh']} [proof]"
+                              f" compile={rec.get('compile_s')}s -> {path}",
+                              flush=True)
+                        continue
+                    print(f"OK    {arch} {shape} {rec['mesh']}"
+                          f" compile={rec.get('compile_s')}s"
+                          f" flops/chip={rec['flops_per_chip']:.3e}"
+                          f" coll={rec['collective_bytes_per_chip']/1e6:.1f}MB"
+                          f" dominant={rec['dominant']} -> {path}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL  {arch} {shape} multi_pod={mp}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state, so tests/benches see the 1-CPU default while
+dryrun.py (which sets XLA_FLAGS first) sees 512 placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+CHIPS_PER_POD = 256            # 16 × 16 TPU v5e pod
+PODS = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))

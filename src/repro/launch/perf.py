@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede all other imports (see dryrun.py)
+
+"""§Perf hillclimb driver: named, reproducible optimization experiments.
+
+Each experiment re-lowers one (arch × shape) with ONE change relative to
+the baseline dry-run and writes a tagged artifact next to it, so every
+hypothesis → change → measure row in EXPERIMENTS.md §Perf is regenerable:
+
+  python -m repro.launch.perf --exp decode_splitk
+  python -m repro.launch.perf --all
+
+Experiments (see EXPERIMENTS.md §Perf for the napkin math):
+  decode_splitk   qwen decode_32k: cache sequence sharded over `model`
+                  (split-K flash decode) instead of heads/dh — kills the
+                  dynamic_update_slice resharding copy.
+  decode_seqdata  same layout idea applied to long_500k variants.
+  train_fsdp      gemma train_4k: params FSDP over `data` → gradient
+                  all-reduce becomes reduce-scatter(+all-gather of params).
+  train_noremat   gemma train_4k without activation checkpointing —
+                  isolates how much HBM/collective traffic remat re-runs.
+  fedsdd_round    the paper's round step on the 2-pod mesh (K groups on
+                  the pod axis) — the technique-representative pair.
+  fedsdd_round_1pod same, single pod (K stacked, groups on replicas).
+"""
+import argparse
+import dataclasses
+import json
+import traceback
+
+from repro.launch.dryrun import DEFAULT_OUT, lower_one, save_rec
+
+
+def _print(rec):
+    if not rec.get("supported", True):
+        print(f"SKIP: {rec['skip_reason']}")
+        return
+    print(f"  flops/chip={rec['flops_per_chip']:.3e}"
+          f" hbm={rec['hbm_bytes_per_chip']/1e9:.1f}GB"
+          f" coll={rec['collective_bytes_per_chip']/1e9:.2f}GB"
+          f" terms=({rec['compute_s']:.3g},{rec['memory_s']:.3g},"
+          f"{rec['collective_s']:.3g}) dominant={rec['dominant']}")
+
+
+EXPERIMENTS = {}
+
+
+def exp(name):
+    def deco(fn):
+        EXPERIMENTS[name] = fn
+        return fn
+    return deco
+
+
+@exp("decode_splitk")
+def decode_splitk(out):
+    rec = lower_one("qwen2.5-14b", "decode_32k", cache_seq_axis="model",
+                    extra_tag="splitk")
+    save_rec(rec, out)
+    return rec
+
+
+@exp("decode_splitk_llava")
+def decode_splitk_llava(out):
+    rec = lower_one("llava-next-mistral-7b", "decode_32k",
+                    cache_seq_axis="model", extra_tag="splitk")
+    save_rec(rec, out)
+    return rec
+
+
+@exp("train_fsdp")
+def train_fsdp(out):
+    rec = lower_one(
+        "gemma-2b", "train_4k",
+        cfg_override=lambda c: dataclasses.replace(c, fsdp=True),
+        extra_tag="fsdp")
+    save_rec(rec, out)
+    return rec
+
+
+@exp("train_noremat")
+def train_noremat(out):
+    rec = lower_one("gemma-2b", "train_4k", remat=False,
+                    extra_tag="noremat")
+    save_rec(rec, out)
+    return rec
+
+
+@exp("train_remat_dots")
+def train_remat_dots(out):
+    rec = lower_one("gemma-2b", "train_4k", remat="dots",
+                    extra_tag="rematdots")
+    save_rec(rec, out)
+    return rec
+
+
+@exp("fedsdd_round")
+def fedsdd_round(out):
+    rec = lower_one("gemma-2b", "train_4k", multi_pod=True, fedsdd=True,
+                    spec_overrides=dict(clients_per_group=16, client_batch=1,
+                                        server_batch=8))
+    save_rec(rec, out)
+    return rec
+
+
+@exp("fedsdd_round_1pod")
+def fedsdd_round_1pod(out):
+    rec = lower_one("gemma-2b", "train_4k", multi_pod=False, fedsdd=True,
+                    spec_overrides=dict(clients_per_group=16, client_batch=1,
+                                        server_batch=8))
+    save_rec(rec, out)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default=None, choices=sorted(EXPERIMENTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    names = sorted(EXPERIMENTS) if args.all else [args.exp]
+    for n in names:
+        print(f"== {n} ==", flush=True)
+        try:
+            rec = EXPERIMENTS[n](args.out)
+            _print(rec)
+        except Exception as e:
+            print(f"FAIL {n}: {e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

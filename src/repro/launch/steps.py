@@ -1,0 +1,156 @@
+"""The three lowered step functions + per-(arch × shape) input specs.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — no device allocation; the dry-run lowers directly from
+these (DESIGN.md §5).
+
+Shape-kind → step mapping (brief):
+  train_4k    → train_step   loss + grad + SGD update (the FedSDD client step)
+  prefill_32k → prefill_step forward + cache build
+  decode_32k / long_500k → serve_step: ONE token against a seq_len cache
+
+Dense/VLM archs get ``attn_variant='sliding'`` injected for long_500k
+(sub-quadratic requirement; DESIGN.md §3 skip matrix) — starcoder2/llama4
+are natively sliding already.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.model_zoo import Model, build_model
+
+
+# ---------------------------------------------------------------- overrides
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    if (shape.name == "long_500k" and cfg.family in ("dense", "vlm")
+            and cfg.attn_variant != "sliding"):
+        cfg = dataclasses.replace(cfg, attn_variant="sliding", sliding_window=4096)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(runs?, reason-if-not) — the DESIGN.md §3 skip matrix."""
+    if shape.kind == "decode" and cfg.is_encoder:
+        return False, "encoder-only architecture has no decode step"
+    if shape.name == "long_500k":
+        eff = config_for_shape(cfg, shape)
+        if not eff.supports_long_context():
+            return False, "full attention is quadratic at 500k"
+    return True, ""
+
+
+# ---------------------------------------------------------------- steps
+def make_train_step(model: Model, lr: float = 0.1, remat: bool = True):
+    """Client local-training step: loss → grad → plain SGD (paper §4.1)."""
+
+    def train_step(params, batch):
+        def loss_fn(p):
+            loss, _ = model.loss(p, batch, remat=remat)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params = jax.tree.map(
+            lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return loss, new_params
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, tokens, caches, pos):
+        return model.decode_step(params, tokens, caches, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------- specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    """ShapeDtypeStructs for the data batch of train/prefill steps."""
+    B = shape.global_batch
+    S = shape.seq_len
+    if cfg.family == "audio":
+        d = {"embeds": _sds((B, S, cfg.frontend_dim), cfg.cdtype)}
+        if shape.kind == "train":
+            d["labels"] = _sds((B, S), jnp.int32)
+            d["mask"] = _sds((B, S), jnp.bool_)
+        return d
+    d = {"tokens": _sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        d["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        P = min(cfg.num_prefix_embeds, S // 2)
+        d["embeds"] = _sds((B, P, cfg.frontend_dim), cfg.cdtype)
+    return d
+
+
+def cache_specs(model: Model, shape: InputShape) -> Any:
+    shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+    return jax.tree.map(
+        lambda sd: _sds(sd[0], sd[1]), shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+def param_specs(model: Model) -> Any:
+    """ShapeDtypeStructs of the parameter pytree (no allocation)."""
+    return jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    """Everything the lowered step consumes, as ShapeDtypeStructs:
+      train/prefill: {params, batch}
+      decode:        {params, tokens, caches, pos}
+    """
+    cfg = config_for_shape(cfg, shape)
+    model = build_model(cfg)
+    out: dict[str, Any] = {"params": param_specs(model)}
+    if shape.kind in ("train", "prefill"):
+        out["batch"] = batch_specs(cfg, shape)
+    else:
+        out["tokens"] = _sds((shape.global_batch, 1), jnp.int32)
+        out["caches"] = cache_specs(model, shape)
+        out["pos"] = _sds((), jnp.int32)
+    return out
+
+
+# ------------------------------------------------- FedSDD round specs
+def fedsdd_round_specs(cfg: ModelConfig, shape: InputShape, *,
+                       K: int = 2, clients_per_group: int = 16,
+                       client_batch: int | None = None,
+                       server_batch: int = 8,
+                       local_steps: int = 1,
+                       period_mult: int = 1) -> dict[str, Any]:
+    """Specs for core.distributed.make_fedsdd_round_fn's arguments —
+    stacked over K groups (pod axis) × N clients (data axis)."""
+    model = build_model(cfg, period_mult=period_mult)
+    p = param_specs(model)
+    B = client_batch or max(local_steps, shape.global_batch // (K * clients_per_group))
+    B = max(B, local_steps)
+    S = shape.seq_len
+    stacked = jax.tree.map(lambda l: _sds((K,) + l.shape, l.dtype), p)
+
+    def per_client(spec_dict):
+        return {k: _sds((K, clients_per_group) + v.shape, v.dtype)
+                for k, v in spec_dict.items()}
+
+    tb = InputShape("t", S, B, "train")
+    return {
+        "stacked_globals": stacked,
+        "client_batches": per_client(batch_specs(cfg, tb)),
+        "client_weights": _sds((K, clients_per_group), jnp.float32),
+        "server_batch": batch_specs(cfg, InputShape("s", S, server_batch, "prefill")),
+    }

@@ -1,0 +1,91 @@
+"""End-to-end federated training driver (deliverable (b)).
+
+Runs FedSDD (or any preset baseline) over either
+  * the paper's image-classification setting (synthetic CIFAR stand-in,
+    ResNet20/56, WRN16-2 or the fast CNN), or
+  * any assigned architecture at reduced scale (``--arch``), proving the
+    technique is model-agnostic.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --preset fedsdd --rounds 10
+  PYTHONPATH=src python -m repro.launch.train --preset feddf --model resnet20
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --rounds 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.fedsdd import PRESETS, make_runner
+from repro.core.tasks import classification_task, lm_task
+from repro.fedckpt.checkpointer import Checkpointer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="fedsdd", choices=sorted(PRESETS))
+    ap.add_argument("--model", default="cnn",
+                    choices=["cnn", "resnet20", "resnet56", "wrn16-2"])
+    ap.add_argument("--arch", default=None, choices=list(ASSIGNED_ARCHS),
+                    help="run the LM task on a reduced assigned architecture "
+                         "instead of image classification")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--K", type=int, default=4)
+    ap.add_argument("--R", type=int, default=1)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--client-lr", type=float, default=0.05)
+    ap.add_argument("--server-lr", type=float, default=0.05)
+    ap.add_argument("--distill-steps", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out", default=None, help="write history JSON here")
+    args = ap.parse_args()
+
+    if args.arch:
+        cfg = get_config(args.arch).reduced()
+        task = lm_task(cfg, num_clients=args.clients, seed=args.seed)
+        overrides = dict(client_lr=0.01, server_lr=0.01, client_batch=4)
+    else:
+        task = classification_task(model=args.model, num_clients=args.clients,
+                                   alpha=args.alpha, seed=args.seed)
+        overrides = dict(client_lr=args.client_lr, server_lr=args.server_lr)
+
+    runner = make_runner(
+        args.preset, task,
+        num_clients=args.clients, participation=args.participation,
+        rounds=args.rounds, local_epochs=args.local_epochs,
+        distill_steps=args.distill_steps, seed=args.seed,
+        **({"K": args.K, "R": args.R}
+           if PRESETS[args.preset].get("K", 1) > 1 else {}),
+        **overrides)
+
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    t0 = time.time()
+    state = runner.init_state()
+    for _ in range(args.rounds):
+        state = runner.run_round(state)
+        rec = state.history[-1]
+        msg = f"[{args.preset}] round {state.round}/{args.rounds}"
+        if "acc_main" in rec:
+            msg += f" acc={rec['acc_main']:.4f}"
+        if rec.get("kd_loss_last") is not None:
+            msg += f" kd={rec['kd_loss_last']:.4f}"
+        print(msg, flush=True)
+        if ckpt:
+            ckpt.save(state.round, state.global_models[0],
+                      meta={"round": state.round})
+    print(f"done in {time.time() - t0:.1f}s")
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(state.history, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

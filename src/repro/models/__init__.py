@@ -1,0 +1,2 @@
+from repro.models import model_zoo  # noqa: F401
+from repro.models.model_zoo import Model, build_model  # noqa: F401

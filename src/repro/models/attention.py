@@ -1,0 +1,339 @@
+"""Attention variants: GQA/MQA (full, causal, sliding-window), MLA, KV caches.
+
+Three execution paths:
+  * ``attention``            — chunked online-softmax attention in pure XLA
+                                (lax.scan over KV blocks; O(S·block) memory).
+                                This is what all train/prefill steps lower to
+                                unless the Pallas flash kernel is enabled.
+  * ``sliding_attention``    — block-local sliding-window attention whose
+                                FLOPs are O(S·window), not O(S²): each query
+                                block only visits the KV blocks its window
+                                can reach (beyond-paper serving optimization).
+  * ``decode_attention``     — single-token attention against a cache.
+
+KV caches are plain dicts of arrays so they shard like any other pytree.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_norm, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# =====================================================================
+# parameter init
+# =====================================================================
+def init_gqa(key, cfg):
+    D, H, Hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * dh, cfg.pdtype),
+        "wk": dense_init(ks[1], D, Hkv * dh, cfg.pdtype),
+        "wv": dense_init(ks[2], D, Hkv * dh, cfg.pdtype),
+        "wo": dense_init(ks[3], H * dh, D, cfg.pdtype, scale=1.0 / math.sqrt(H * dh)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), cfg.pdtype)
+        p["bk"] = jnp.zeros((Hkv * dh,), cfg.pdtype)
+        p["bv"] = jnp.zeros((Hkv * dh,), cfg.pdtype)
+    return p
+
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], D, H * qd, cfg.pdtype),
+        "w_dkv": dense_init(ks[1], D, m.kv_lora_rank + m.rope_head_dim, cfg.pdtype),
+        "kv_norm_scale": jnp.ones((m.kv_lora_rank,), cfg.pdtype),
+        "w_uk": dense_init(ks[2], m.kv_lora_rank, H * m.nope_head_dim, cfg.pdtype),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank, H * m.v_head_dim, cfg.pdtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, D, cfg.pdtype,
+                         scale=1.0 / math.sqrt(H * m.v_head_dim)),
+    }
+
+
+# =====================================================================
+# core softmax-attention primitives
+# =====================================================================
+def _gqa_scores_einsum(q, k):
+    """q (B,Sq,Hkv,G,dh) x k (B,Skv,Hkv,dh) -> (B,Hkv,G,Sq,Skv), f32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def _band_mask(q_pos, k_pos, *, causal: bool, window: int):
+    """True where attention is allowed. q_pos (Sq,), k_pos (Skv,)."""
+    rel = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    return ok
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_offset=0, kv_block: int = 1024, kv_valid_start=0):
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh); GQA via H = Hkv * G.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill=0).
+    ``window``>0: sliding window (queries see the last `window` keys).
+    ``kv_valid_start``: keys before this index are masked (front padding).
+    Returns (B, Sq, H, dh) in q.dtype.
+    """
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    dv = v.shape[-1]              # may differ from dh (MLA)
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, dh) * (dh ** -0.5)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    nblk = max(1, math.ceil(Skv / kv_block))
+    if nblk == 1:
+        scores = _gqa_scores_einsum(qg, k)
+        mask = _band_mask(q_pos, jnp.arange(Skv), causal=causal, window=window)
+        mask &= (jnp.arange(Skv) >= kv_valid_start)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(q.dtype), v)
+        return out.reshape(B, Sq, H, dv)
+
+    pad = nblk * kv_block - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(B, nblk, kv_block, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nblk, kv_block, Hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, i = blk
+        scores = _gqa_scores_einsum(qg, kblk)                       # (B,Hkv,G,Sq,kb)
+        k_pos = i * kv_block + jnp.arange(kv_block)
+        mask = _band_mask(q_pos, k_pos, causal=causal, window=window)
+        mask &= ((k_pos < Skv) & (k_pos >= kv_valid_start))[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def sliding_attention(q, k, v, *, window: int, q_block: int = 512):
+    """Causal sliding-window attention with O(S·window) FLOPs.
+
+    Each query block of length qb attends only the KV slice
+    [blk_start - window, blk_end): one dynamic_slice per block instead of a
+    full S×S score matrix.  Requires Sq == Skv (training/prefill self-attn).
+    """
+    B, S, H, dh = q.shape
+    _, _, Hkv, _ = k.shape
+    if S <= q_block or S <= window:
+        return attention(q, k, v, causal=True, window=window)
+    qb = q_block
+    nblk = S // qb
+    assert S % qb == 0, "sliding_attention requires seq divisible by q_block"
+    span = window + qb                       # kv context visible to one block
+    span = min(span, S)
+
+    kp = jnp.pad(k, ((0, 0), (span, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (span, 0), (0, 0), (0, 0)))
+
+    def one_block(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * qb, qb, axis=1)
+        # kv window ending at block end (padded coords: +span offset)
+        start = i * qb + qb - span + span    # == i*qb + qb
+        ki = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        # absolute positions: query j at i*qb+j; key slot s maps to global
+        # index i*qb+qb-span+s — slots with negative global index are front
+        # padding and must be masked out
+        q_off = span - qb                    # q[0] sits at key index span-qb
+        valid_from = span - (i + 1) * qb
+        out = attention(qi, ki, vi, causal=True, window=window,
+                        q_offset=q_off, kv_block=span,
+                        kv_valid_start=valid_from)
+        return out
+
+    outs = jax.lax.map(one_block, jnp.arange(nblk))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+
+
+def decode_attention(q1, k_cache, v_cache, cache_len=None):
+    """One-token attention.  q1 (B,1,H,dh); caches (B,S,Hkv,dh).
+
+    ``cache_len``: number of valid cache entries (scalar); None = all.
+    """
+    B, _, H, dh = q1.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    qg = q1.reshape(B, Hkv, G, dh) * (dh ** -0.5)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    if cache_len is not None:
+        valid = jnp.arange(S) < cache_len
+        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(q1.dtype), v_cache)
+    return out.reshape(B, 1, H, dh)
+
+
+# =====================================================================
+# GQA block forward (train / prefill / decode)
+# =====================================================================
+def _project_qkv(p, x, cfg):
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(B, S, H, dh), k.reshape(B, S, Hkv, dh),
+            v.reshape(B, S, Hkv, dh))
+
+
+def gqa_forward(p, x, cfg, *, positions=None, window_override=None):
+    """Full-sequence self-attention (train / encoder / prefill compute)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.sliding_window if cfg.attn_variant == "sliding" else 0
+    if window_override is not None:
+        window = window_override
+    if window and cfg.causal and S > 4 * window:
+        out = sliding_attention(q, k, v, window=window)
+    else:
+        out = attention(q, k, v, causal=cfg.causal, window=window)
+    return out.reshape(B, S, -1) @ p["wo"].astype(x.dtype), (k, v)
+
+
+def gqa_decode(p, x1, cache, cfg, pos):
+    """x1 (B,1,D); cache {'k','v'} (B,S,Hkv,dh); pos: scalar write index.
+
+    Returns (out (B,1,D), new_cache).  For sliding-window configs the cache
+    is a ring buffer of length min(S, window) and pos wraps.
+    """
+    B = x1.shape[0]
+    q, k, v = _project_qkv(p, x1, cfg)
+    S = cache["k"].shape[1]
+    abs_pos = jnp.full((B, 1), pos)
+    q = apply_rope(q, abs_pos, cfg.rope_theta)
+    k = apply_rope(k, abs_pos, cfg.rope_theta)
+    slot = pos % S if cfg.attn_variant == "sliding" else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    out = decode_attention(q, k_cache, v_cache,
+                           cache_len=jnp.minimum(pos + 1, S))
+    return out.reshape(B, 1, -1) @ p["wo"].astype(x1.dtype), {"k": k_cache, "v": v_cache}
+
+
+def gqa_cache_shape(cfg, batch: int, seq_len: int):
+    S = min(seq_len, cfg.sliding_window) if cfg.attn_variant == "sliding" else seq_len
+    return {
+        "k": (batch, S, cfg.num_kv_heads, cfg.head_dim),
+        "v": (batch, S, cfg.num_kv_heads, cfg.head_dim),
+    }
+
+
+# =====================================================================
+# MLA (DeepSeek-V2 multi-head latent attention)
+# =====================================================================
+def _mla_q(p, x, cfg):
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, qd)
+    return jnp.split(q, [m.nope_head_dim], axis=-1)      # q_nope, q_rope
+
+
+def _mla_compress(p, x, cfg):
+    m = cfg.mla
+    ckr = x @ p["w_dkv"].astype(x.dtype)                 # (B,S,rank+rope)
+    c_kv, k_rope = jnp.split(ckr, [m.kv_lora_rank], axis=-1)
+    # rmsnorm on the latent
+    cf = c_kv.astype(jnp.float32)
+    c_kv = (cf * jax.lax.rsqrt(jnp.mean(cf * cf, -1, keepdims=True) + cfg.norm_eps)
+            * p["kv_norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    return c_kv, k_rope
+
+
+def mla_forward(p, x, cfg, *, positions=None):
+    """Expanded (train/prefill) MLA: decompress K/V and run GQA math."""
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    c_kv, k_rope = _mla_compress(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)  # (B,S,1,rd)
+    k_nope = (c_kv @ p["w_uk"].astype(x.dtype)).reshape(B, S, H, m.nope_head_dim)
+    v = (c_kv @ p["w_uv"].astype(x.dtype)).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.rope_head_dim))],
+                        axis=-1)
+    out = attention(q, k, v, causal=cfg.causal)
+    return out.reshape(B, S, -1) @ p["wo"].astype(x.dtype), (c_kv, k_rope[..., 0, :])
+
+
+def mla_decode(p, x1, cache, cfg, pos):
+    """Absorbed-form MLA decode: attention runs in the latent space, cache is
+    the compressed (B,S,rank) latent + (B,S,rope) shared key — the memory win
+    that lets deepseek-v2 run long_500k."""
+    B = x1.shape[0]
+    m, H = cfg.mla, cfg.num_heads
+    q_nope, q_rope = _mla_q(p, x1, cfg)                   # (B,1,H,*)
+    abs_pos = jnp.full((B, 1), pos)
+    q_rope = apply_rope(q_rope, abs_pos, cfg.rope_theta)
+    c_new, kr_new = _mla_compress(p, x1, cfg)
+    kr_new = apply_rope(kr_new[..., None, :], abs_pos, cfg.rope_theta)[..., 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, axis=1)
+    S = c_kv.shape[1]
+    # absorb w_uk into the query: q_abs (B,H,rank)
+    w_uk = p["w_uk"].astype(x1.dtype).reshape(m.kv_lora_rank, H, m.nope_head_dim)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bhr,bsr->bhs", q_abs, c_kv, preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(S) < pos + 1
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x1.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, c_kv)         # latent-space context
+    w_uv = p["w_uv"].astype(x1.dtype).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(B, 1, H * m.v_head_dim)
+    return o @ p["wo"].astype(x1.dtype), {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_shape(cfg, batch: int, seq_len: int):
+    m = cfg.mla
+    return {
+        "c_kv": (batch, seq_len, m.kv_lora_rank),
+        "k_rope": (batch, seq_len, m.rope_head_dim),
+    }

@@ -1,0 +1,106 @@
+"""Shared neural-net building blocks (pure JAX, functional params-in/out).
+
+Conventions used across all model families:
+  * params are nested dicts of jnp arrays;
+  * every ``init_*`` takes a PRNG key first;
+  * every ``apply``-style function takes (params, inputs, cfg-ish kwargs);
+  * compute happens in cfg.compute_dtype, reductions/softmax in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# -------------------------------------------------------------- initializers
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(cfg, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.pdtype)}
+    if cfg.norm_variant == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+def apply_norm(p, x, cfg):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_variant == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta))                    # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, dh/2)
+    angles = angles[..., None, :]                                 # (..., S, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, cfg, d_in: int | None = None, d_ff: int | None = None):
+    d_in = d_in or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_out": dense_init(ks[2], d_ff, d_in, cfg.pdtype)}
+    p["w_in"] = dense_init(ks[0], d_in, d_ff, cfg.pdtype)
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[1], d_in, d_ff, cfg.pdtype)
+    return p
+
+
+def apply_mlp(p, x, cfg):
+    h = x @ p["w_in"].astype(x.dtype)
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * h
+    elif cfg.mlp_variant == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w_out"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------- losses
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy in f32.  logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def kl_divergence(student_logits, teacher_probs, temperature: float = 1.0):
+    """KL(teacher || student) at temperature τ (Hinton KD), mean over batch."""
+    s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / temperature, axis=-1)
+    t = teacher_probs.astype(jnp.float32)
+    loss = jnp.sum(t * (jnp.log(jnp.clip(t, 1e-20)) - s), axis=-1)
+    return jnp.mean(loss) * temperature ** 2

@@ -1,0 +1,407 @@
+"""Model zoo: builds every assigned architecture from one ``ModelConfig``.
+
+Layer-stack compilation strategy (DESIGN.md §3): the per-layer schedule
+(mixer ∈ {gqa, mla, mamba, mlstm, slstm} × ffn ∈ {dense, moe, none}) is
+decomposed into an optional *prefix* (unrolled) plus a repeating
+*superblock* executed with ``jax.lax.scan`` over stacked parameters — one
+scan body regardless of depth, which keeps the HLO compact enough that the
+512-device multi-pod dry-runs of 398 B-parameter configs compile in
+seconds.
+
+Modes:
+  loss(params, batch)                    training objective (LM / masked)
+  logits(params, batch)                  full-sequence forward
+  prefill(params, batch)                 forward + KV-cache/state build
+  decode_step(params, tok, cache, pos)   ONE token against the cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import cached_property, partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_mlp, apply_norm, cross_entropy,
+                                 dense_init, embed_init, init_mlp, init_norm)
+
+
+# ======================================================================
+# layer schedule
+# ======================================================================
+@dataclass(frozen=True)
+class BlockKind:
+    mixer: str   # gqa | mla | mamba | mlstm | slstm
+    ffn: str     # dense | moe | none
+
+
+def layer_schedule(cfg: ModelConfig) -> list[BlockKind]:
+    attn_flags = cfg.attn_layer_flags()
+    moe_flags = cfg.moe_layer_flags()
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm" and cfg.ssm.variant == "xlstm":
+            r = cfg.ssm.xlstm_slstm_ratio
+            mixer = "slstm" if (r and i % r == r - 1) else "mlstm"
+            ffn = "none"
+        elif attn_flags[i]:
+            mixer = "mla" if cfg.mla is not None else "gqa"
+            ffn = "moe" if moe_flags[i] else "dense"
+        else:  # hybrid non-attention layer
+            mixer = cfg.ssm.variant
+            ffn = "moe" if moe_flags[i] else "dense"
+        if cfg.d_ff == 0 and ffn == "dense":
+            ffn = "none"
+        kinds.append(BlockKind(mixer, ffn))
+    return kinds
+
+
+def split_schedule(kinds: list[BlockKind]) -> tuple[int, int]:
+    """Return (prefix_len, period): repeating superblock period covering
+    everything after a small unrolled prefix.
+
+    SMALLEST PERIOD wins, then smallest prefix — searching prefix-first
+    would always accept the degenerate (q=0, p=L) decomposition (every
+    schedule is trivially 'periodic' with p == length), silently unrolling
+    whole models like deepseek whose first layer breaks p=1 periodicity.
+    """
+    L = len(kinds)
+    for p in range(1, L + 1):
+        for q in range(0, min(4, L - p) + 1):
+            rest = kinds[q:]
+            n = len(rest)
+            if n % p == 0 and all(rest[i] == rest[i % p] for i in range(n)):
+                return q, p
+    return 0, L  # fully irregular: one superblock covering everything
+
+
+# ======================================================================
+# single block
+# ======================================================================
+def init_block(key, cfg: ModelConfig, kind: BlockKind):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_norm(cfg)}
+    if kind.mixer == "gqa":
+        p["attn"] = attn.init_gqa(k1, cfg)
+    elif kind.mixer == "mla":
+        p["attn"] = attn.init_mla(k1, cfg)
+    elif kind.mixer == "mamba":
+        p["ssm"] = ssm_lib.init_mamba(k1, cfg)
+    elif kind.mixer == "mlstm":
+        p["ssm"] = ssm_lib.init_mlstm(k1, cfg)
+    elif kind.mixer == "slstm":
+        p["ssm"] = ssm_lib.init_slstm(k1, cfg)
+    if kind.ffn != "none":
+        p["norm2"] = init_norm(cfg)
+        if kind.ffn == "moe":
+            p["moe"] = moe_lib.init_moe(k2, cfg)
+        else:
+            p["mlp"] = init_mlp(k3, cfg)
+    return p
+
+
+def apply_block(p, x, cfg: ModelConfig, kind: BlockKind, *,
+                mode: str, cache=None, pos=None, window_override=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg)
+    new_cache = cache
+    if kind.mixer in ("gqa", "mla"):
+        if mode == "decode":
+            fwd = attn.mla_decode if kind.mixer == "mla" else attn.gqa_decode
+            a, new_cache = fwd(p["attn"], h, cache, cfg, pos)
+        else:
+            fwd = attn.mla_forward if kind.mixer == "mla" else attn.gqa_forward
+            kwargs = {} if kind.mixer == "mla" else {"window_override": window_override}
+            a, kv = fwd(p["attn"], h, cfg, **kwargs)
+            if mode == "prefill":
+                if kind.mixer == "mla":
+                    new_cache = {"c_kv": kv[0], "k_rope": kv[1]}
+                else:
+                    new_cache = {"k": kv[0], "v": kv[1]}
+    else:
+        mod = {"mamba": (ssm_lib.mamba_forward, ssm_lib.mamba_decode),
+               "mlstm": (ssm_lib.mlstm_forward, ssm_lib.mlstm_decode),
+               "slstm": (ssm_lib.slstm_forward, ssm_lib.slstm_decode)}[kind.mixer]
+        if mode == "decode":
+            a, new_cache = mod[1](p["ssm"], h, cache, cfg)
+        else:
+            a, state = mod[0](p["ssm"], h, cfg)
+            if mode == "prefill":
+                new_cache = state
+    x = x + a
+    if kind.ffn != "none":
+        h = apply_norm(p["norm2"], x, cfg)
+        if kind.ffn == "moe":
+            T = h.shape[0] * h.shape[1]
+            out, aux = moe_lib.moe_ffn(p["moe"], h.reshape(T, -1), cfg)
+            out = out.reshape(h.shape)
+        else:
+            out = apply_mlp(p["mlp"], h, cfg)
+        x = x + out
+    return x, new_cache, aux
+
+
+def block_cache_shapes(cfg: ModelConfig, kind: BlockKind, batch: int, seq_len: int):
+    if kind.mixer == "gqa":
+        return attn.gqa_cache_shape(cfg, batch, seq_len)
+    if kind.mixer == "mla":
+        return attn.mla_cache_shape(cfg, batch, seq_len)
+    if kind.mixer == "mamba":
+        return ssm_lib.mamba_state_shape(cfg, batch)
+    if kind.mixer == "mlstm":
+        return ssm_lib.mlstm_state_shape(cfg, batch)
+    if kind.mixer == "slstm":
+        return ssm_lib.slstm_state_shape(cfg, batch)
+    raise ValueError(kind.mixer)
+
+
+def _cache_dtype(cfg, kind: BlockKind, name: str):
+    # recurrent normalizer/stabilizer states stay f32; kv caches follow compute dtype
+    if kind.mixer in ("mamba", "mlstm", "slstm"):
+        return jnp.float32
+    return cfg.cdtype
+
+
+# ======================================================================
+# Model
+# ======================================================================
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    # unroll=True replaces the layer-stack lax.scan with a python loop.
+    # Used by the roofline estimator: XLA's cost_analysis counts a scan
+    # body once (not × trip count), so the dry-run lowers two shallow
+    # UNROLLED variants and extrapolates (see launch/dryrun.py).
+    unroll: bool = False
+    # period_mult=m groups m superblocks into one scan body.  The roofline
+    # estimator compiles period_mult=1 and =2 variants: their cost_analysis
+    # difference is EXACTLY one superblock (scan bodies are counted once),
+    # while both stay on the fast scan compile path — unrolled MoE+MLA
+    # graphs hit a pathological XLA:CPU pass (~300 s for 2 layers).
+    period_mult: int = 1
+
+    # ---- structure ---------------------------------------------------
+    @cached_property
+    def schedule(self) -> list[BlockKind]:
+        return layer_schedule(self.cfg)
+
+    @cached_property
+    def prefix_period(self) -> tuple[int, int]:
+        q, p = split_schedule(self.schedule)
+        if self.period_mult > 1:
+            pm = p * self.period_mult
+            if (len(self.schedule) - q) % pm == 0:
+                p = pm
+        return q, p
+
+    @property
+    def superblock(self) -> list[BlockKind]:
+        q, p = self.prefix_period
+        return self.schedule[q:q + p]
+
+    @property
+    def n_super(self) -> int:
+        q, p = self.prefix_period
+        return (len(self.schedule) - q) // p if p else 0
+
+    # ---- init ---------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        q, p = self.prefix_period
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, cfg.pdtype),
+            "final_norm": init_norm(cfg),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                           cfg.pdtype, scale=0.02)
+        if cfg.frontend_dim:
+            fk = jax.random.split(keys[2], 3)
+            params["frontend"] = {
+                "proj1": dense_init(fk[0], cfg.frontend_dim, cfg.d_model, cfg.pdtype),
+                "proj2": dense_init(fk[1], cfg.d_model, cfg.d_model, cfg.pdtype),
+            }
+            if cfg.family == "audio":
+                params["frontend"]["mask_embed"] = (
+                    jax.random.normal(fk[2], (cfg.d_model,), jnp.float32) * 0.02
+                ).astype(cfg.pdtype)
+        if q:
+            params["prefix"] = [init_block(k, cfg, self.schedule[i])
+                                for i, k in enumerate(jax.random.split(keys[3], q))]
+        if self.n_super:
+            sb = self.superblock
+            sb_keys = jax.random.split(keys[4], self.n_super)
+
+            def init_sb(k):
+                ks = jax.random.split(k, len(sb))
+                return {f"b{j}": init_block(ks[j], cfg, sb[j]) for j in range(len(sb))}
+
+            params["blocks"] = jax.vmap(init_sb)(sb_keys)
+        return params
+
+    # ---- embedding in / logits out ------------------------------------
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = batch["embeds"].astype(cfg.cdtype) @ params["frontend"]["proj1"].astype(cfg.cdtype)
+            x = jax.nn.gelu(x) @ params["frontend"]["proj2"].astype(cfg.cdtype)
+            if "mask" in batch:
+                me = params["frontend"]["mask_embed"].astype(cfg.cdtype)
+                x = jnp.where(batch["mask"][..., None], me, x)
+            return x
+        tok = batch["tokens"]
+        x = jnp.take(params["embed"], tok, axis=0).astype(cfg.cdtype)
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.cdtype)
+        if cfg.family == "vlm" and "embeds" in batch:
+            pe = batch["embeds"].astype(cfg.cdtype)
+            pe = pe @ params["frontend"]["proj1"].astype(cfg.cdtype)
+            pe = jax.nn.gelu(pe) @ params["frontend"]["proj2"].astype(cfg.cdtype)
+            P = pe.shape[1]
+            x = jnp.concatenate([pe, x[:, P:]], axis=1)
+        return x
+
+    def _logits_out(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(params["final_norm"], x, cfg)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(x.dtype)
+        return x @ head
+
+    # ---- full-sequence forward -----------------------------------------
+    def _stack_forward(self, params, x, *, mode: str, caches=None, pos=None,
+                       window_override=None, remat: bool = False):
+        cfg = self.cfg
+        q, p = self.prefix_period
+        aux_total = jnp.zeros((), jnp.float32)
+        new_prefix = []
+        for i in range(q):
+            c = caches["prefix"][i] if caches else None
+            x, nc, aux = apply_block(params["prefix"][i], x, cfg, self.schedule[i],
+                                     mode=mode, cache=c, pos=pos,
+                                     window_override=window_override)
+            new_prefix.append(nc)
+            aux_total = aux_total + aux
+        new_blocks = None
+        if self.n_super:
+            sb = self.superblock
+
+            def body(carry, xs):
+                xc, auxc = carry
+                bp = xs[0]
+                bc = xs[1] if len(xs) > 1 else None
+                ncs = {}
+                for j, kind in enumerate(sb):
+                    c = bc[f"b{j}"] if bc is not None else None
+                    xc, nc, aux = apply_block(bp[f"b{j}"], xc, cfg, kind,
+                                              mode=mode, cache=c, pos=pos,
+                                              window_override=window_override)
+                    auxc = auxc + aux
+                    if nc is not None:
+                        ncs[f"b{j}"] = nc
+                return (xc, auxc), (ncs if ncs else None)
+
+            if remat == "dots":
+                # middle ground: save matmul outputs (no recompute of the
+                # TP-collective-producing dots), recompute elementwise only
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            elif remat:
+                body = jax.checkpoint(body)
+            xs = (params["blocks"],) if caches is None else (params["blocks"], caches["blocks"])
+            if self.unroll:
+                carry = (x, aux_total)
+                ys = []
+                for i in range(self.n_super):
+                    xs_i = jax.tree.map(lambda a: a[i], xs)
+                    carry, y = body(carry, xs_i)
+                    ys.append(y)
+                (x, aux_total) = carry
+                new_blocks = (None if ys[0] is None else
+                              jax.tree.map(lambda *ls: jnp.stack(ls), *ys))
+            else:
+                (x, aux_total), new_blocks = jax.lax.scan(body, (x, aux_total), xs)
+        out_caches = None
+        if mode in ("prefill", "decode"):
+            out_caches = {"prefix": new_prefix, "blocks": new_blocks}
+        return x, out_caches, aux_total
+
+    # ---- public API ------------------------------------------------------
+    def logits(self, params, batch, *, remat: bool = False):
+        x = self._embed_in(params, batch)
+        x, _, aux = self._stack_forward(params, x, mode="train", remat=remat)
+        return self._logits_out(params, x), aux
+
+    def loss(self, params, batch, *, remat: bool = False):
+        cfg = self.cfg
+        logits, aux = self.logits(params, batch, remat=remat)
+        mask = batch.get("mask")
+        if cfg.family == "audio":
+            # masked-frame prediction: CE only at masked positions
+            loss = cross_entropy(logits, batch["labels"], mask)
+        else:
+            lm_mask = batch.get("loss_mask")
+            if cfg.family == "vlm" and lm_mask is None:
+                P = cfg.num_prefix_embeds
+                S = batch["labels"].shape[1]
+                lm_mask = jnp.broadcast_to(jnp.arange(S) >= P, batch["labels"].shape)
+            loss = cross_entropy(logits, batch["labels"], lm_mask)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.router_aux_coef * aux / max(1, sum(cfg.moe_layer_flags()))
+        return loss, {"ce": loss, "moe_aux": aux}
+
+    def prefill(self, params, batch):
+        """Returns (last-token logits (B,V), caches)."""
+        x = self._embed_in(params, batch)
+        x, caches, _ = self._stack_forward(params, x, mode="prefill")
+        return self._logits_out(params, x[:, -1:])[:, 0], caches
+
+    def decode_step(self, params, tokens, caches, pos):
+        """tokens (B,1) int32, pos scalar int32.  -> (logits (B,V), caches)."""
+        batch = {"tokens": tokens}
+        x = self._embed_in(params, batch)
+        x, caches, _ = self._stack_forward(params, x, mode="decode",
+                                           caches=caches, pos=pos)
+        return self._logits_out(params, x)[:, 0], caches
+
+    # ---- caches ----------------------------------------------------------
+    def cache_shapes(self, batch: int, seq_len: int):
+        """Shape pytree mirroring what prefill/decode exchange."""
+        cfg = self.cfg
+        q, p = self.prefix_period
+        prefix = [
+            {k: (s, _cache_dtype(cfg, self.schedule[i], k))
+             for k, s in block_cache_shapes(cfg, self.schedule[i], batch, seq_len).items()}
+            for i in range(q)
+        ]
+        blocks = None
+        if self.n_super:
+            blocks = {}
+            for j, kind in enumerate(self.superblock):
+                shapes = block_cache_shapes(cfg, kind, batch, seq_len)
+                blocks[f"b{j}"] = {
+                    k: ((self.n_super,) + s, _cache_dtype(cfg, kind, k))
+                    for k, s in shapes.items()
+                }
+        return {"prefix": prefix, "blocks": blocks}
+
+    def init_cache(self, batch: int, seq_len: int):
+        shapes = self.cache_shapes(batch, seq_len)
+        return jax.tree.map(lambda sd: jnp.zeros(sd[0], sd[1]), shapes,
+                            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                            and isinstance(x[0], tuple))
+
+
+def build_model(cfg: ModelConfig, unroll: bool = False,
+                period_mult: int = 1) -> Model:
+    return Model(cfg, unroll=unroll, period_mult=period_mult)

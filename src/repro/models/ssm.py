@@ -1,0 +1,354 @@
+"""State-space / recurrent blocks: Mamba (S6) and xLSTM (mLSTM + sLSTM).
+
+TPU adaptation (DESIGN.md §2):
+  * Mamba's selective scan runs CHUNKWISE: an outer ``lax.scan`` carries the
+    (B, d_inner, d_state) state across chunks; within a chunk an associative
+    scan computes prefix states in parallel (MXU/VPU-friendly, no 4096-step
+    serial dependency).  The chunk body is ``jax.checkpoint``-ed so training
+    activation memory is O(chunk), not O(seq).
+  * mLSTM uses the chunkwise linear-attention form: intra-chunk (ch × ch)
+    decayed attention + inter-chunk recurrent matrix state (B, nh, dh, dh).
+    Gating is sigmoid-bounded (|decay| ≤ 1) instead of the paper's
+    exp-with-max-stabilizer — the stabilizer state is unnecessary once gates
+    are bounded, and the chunk algebra stays associative (recorded as an
+    adaptation in DESIGN.md).
+  * sLSTM keeps the faithful exponential gating + m-stabilizer and is
+    genuinely sequential (recurrent weight mixing); it runs as a time-step
+    ``lax.scan`` — xLSTM places only 1 sLSTM per 4 blocks, so this is not
+    the dominant cost.
+
+All blocks expose: init, forward (full sequence, returns final state) and
+a single-token decode step — decode states are what ``long_500k`` carries
+instead of a KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ======================================================================
+# Mamba (S6)
+# ======================================================================
+def _mamba_dims(cfg):
+    di = cfg.ssm.expand * cfg.d_model
+    ds = cfg.ssm.d_state
+    dt_rank = max(1, cfg.d_model // 16)
+    return di, ds, dt_rank
+
+
+def init_mamba(key, cfg):
+    D = cfg.d_model
+    di, ds, dt_rank = _mamba_dims(cfg)
+    dc = cfg.ssm.d_conv
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32) * 0.2).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((di,), cfg.pdtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * ds, cfg.pdtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, cfg.pdtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.pdtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(cfg.pdtype),
+        "D_skip": jnp.ones((di,), cfg.pdtype),
+        "out_proj": dense_init(ks[4], di, D, cfg.pdtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x (B,S,di), w (dc,di) -> (B,S,di)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(xp[:, j:j + x.shape[1]] * w[j] for j in range(dc))
+    return out + b
+
+
+def _mamba_gates(p, x, cfg):
+    """Common pre-scan computation.  x (B,S,D) -> (a, b, Cc, x_conv, z)."""
+    di, ds, dt_rank = _mamba_dims(cfg)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_conv(x_in, p["conv_w"].astype(x.dtype),
+                                      p["conv_b"].astype(x.dtype)))
+    dbc = x_conv @ p["x_proj"].astype(x.dtype)
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))          # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                      # (di,ds)
+    a = jnp.exp(dt[..., None] * A)                                    # (B,S,di,ds)
+    b = (dt[..., None] * Bc[:, :, None, :].astype(jnp.float32)
+         * x_conv[..., None].astype(jnp.float32))                     # (B,S,di,ds)
+    return a, b, Cc, x_conv, z
+
+
+def mamba_forward(p, x, cfg, state=None):
+    """x (B,S,D) -> (out (B,S,D), final_state)."""
+    B, S, D = x.shape
+    di, ds, _ = _mamba_dims(cfg)
+    ch = min(cfg.ssm.chunk_size, S)
+    assert S % ch == 0, f"seq {S} not divisible by chunk {ch}"
+    nc = S // ch
+    a, b, Cc, x_conv, z = _mamba_gates(p, x, cfg)
+
+    a = a.reshape(B, nc, ch, di, ds).transpose(1, 0, 2, 3, 4)
+    b = b.reshape(B, nc, ch, di, ds).transpose(1, 0, 2, 3, 4)
+
+    if state is None:
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+    else:
+        h0 = state["h"]
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint
+    def chunk(h, ab):
+        ac, bc = ab                                      # (B,ch,di,ds)
+        Ac, Bc_ = jax.lax.associative_scan(assoc, (ac, bc), axis=1)
+        hs = Ac * h[:, None] + Bc_                       # prefix states
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(chunk, h0, (a, b))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, di, ds)
+    # y_t = Σ_n h_t[..., n] * C_t[..., n]
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cc.astype(jnp.float32))
+    y = y + p["D_skip"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    dc = cfg.ssm.d_conv
+    # store the last dc-1 pre-conv inputs so decode can continue the conv
+    x_in_tail = (x @ p["in_proj"].astype(x.dtype))[:, -(dc - 1):, :di]
+    return out, {"h": h_last, "conv": x_in_tail}
+
+
+def mamba_decode(p, x1, state, cfg):
+    """Single-token step.  x1 (B,1,D); state {'h': (B,di,ds), 'conv': (B,dc-1,di)}."""
+    B = x1.shape[0]
+    di, ds, dt_rank = _mamba_dims(cfg)
+    dc = cfg.ssm.d_conv
+    xz = x1 @ p["in_proj"].astype(x1.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)                  # (B,1,di)
+    hist = jnp.concatenate([state["conv"], x_in], axis=1)  # (B,dc,di)
+    w = p["conv_w"].astype(x1.dtype)
+    x_conv = jax.nn.silu(jnp.einsum("bcd,cd->bd", hist[:, -dc:], w)
+                         + p["conv_b"].astype(x1.dtype))[:, None]      # (B,1,di)
+    dbc = x_conv @ p["x_proj"].astype(x1.dtype)
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * A)                   # (B,di,ds)
+    b = dt[:, 0, :, None] * Bc[:, 0, None, :].astype(jnp.float32) \
+        * x_conv[:, 0, :, None].astype(jnp.float32)
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = y + p["D_skip"].astype(jnp.float32) * x_conv[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x1.dtype)[:, None]
+    out = y @ p["out_proj"].astype(x1.dtype)
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def mamba_state_shape(cfg, batch: int):
+    di, ds, _ = _mamba_dims(cfg)
+    return {"h": (batch, di, ds), "conv": (batch, cfg.ssm.d_conv - 1, di)}
+
+
+# ======================================================================
+# mLSTM (chunkwise linear attention with matrix memory)
+# ======================================================================
+def init_mlstm(key, cfg):
+    D, nh = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], D, D, cfg.pdtype),
+        "wk": dense_init(ks[1], D, D, cfg.pdtype),
+        "wv": dense_init(ks[2], D, D, cfg.pdtype),
+        "w_i": dense_init(ks[3], D, nh, cfg.pdtype, scale=0.02),
+        "w_f": dense_init(ks[4], D, nh, cfg.pdtype, scale=0.02),
+        "b_f": jnp.full((nh,), 3.0, cfg.pdtype),   # start with long memory
+        "w_z": dense_init(ks[5], D, D, cfg.pdtype),
+        "out_proj": dense_init(ks[6], D, D, cfg.pdtype),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    B, S, D = x.shape
+    nh = cfg.num_heads
+    dh = D // nh
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, nh, dh)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, nh, dh) * (dh ** -0.5)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, nh, dh)
+    i = jax.nn.sigmoid((x @ p["w_i"].astype(x.dtype)).astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(
+        (x @ p["w_f"].astype(x.dtype)).astype(jnp.float32)
+        + p["b_f"].astype(jnp.float32))
+    return q, k, v, i, logf
+
+
+def mlstm_forward(p, x, cfg, state=None):
+    """x (B,S,D) -> (out, final_state {'C': (B,nh,dh,dh), 'n': (B,nh,dh)})."""
+    B, S, D = x.shape
+    nh = cfg.num_heads
+    dh = D // nh
+    ch = min(cfg.ssm.chunk_size, S)
+    assert S % ch == 0
+    nc = S // ch
+    q, k, v, i, logf = _mlstm_qkvif(p, x, cfg)
+
+    def reshape_c(t):
+        return t.reshape((B, nc, ch) + t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qc, kc, vc = reshape_c(q), reshape_c(k), reshape_c(v)
+    ic, lfc = reshape_c(i), reshape_c(logf)
+
+    if state is None:
+        C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    else:
+        C0, n0 = state["C"], state["n"]
+
+    @jax.checkpoint
+    def chunk(carry, blk):
+        C, n = carry
+        qb, kb, vb, ib, lfb = blk                        # (B,ch,...)
+        F = jnp.cumsum(lfb, axis=1)                      # (B,ch,nh) ≤ 0
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        # intra-chunk decayed attention: att[t,s] = (q_t k_s) e^{F_t - F_s} i_s
+        scores = jnp.einsum("bthd,bshd->bhts", qf, kf)
+        decay = F.transpose(0, 2, 1)[..., :, None] - F.transpose(0, 2, 1)[..., None, :]
+        mask = jnp.tril(jnp.ones((ch, ch), bool))
+        att = jnp.where(mask, jnp.exp(decay) * ib.transpose(0, 2, 1)[:, :, None, :], 0.0)
+        att = att * scores
+        num_intra = jnp.einsum("bhts,bshd->bthd", att, vf)
+        den_intra = jnp.sum(att, axis=-1).transpose(0, 2, 1)          # (B,ch,nh)
+        # inter-chunk
+        ef = jnp.exp(F)                                               # (B,ch,nh)
+        num_inter = jnp.einsum("bthd,bhde->bthe", qf, C) * ef[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qf, n) * ef
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+        h = num / den[..., None]
+        # state update: C' = e^{F_ch} C + Σ_s e^{F_ch - F_s} i_s k_s v_s^T
+        w_s = jnp.exp(F[:, -1:, :] - F) * ib                          # (B,ch,nh)
+        C_new = C * jnp.exp(F[:, -1]).transpose(0, 1)[:, :, None, None] \
+            + jnp.einsum("bshd,bshe,bsh->bhde", kf, vf, w_s)
+        n_new = n * jnp.exp(F[:, -1])[..., None] + jnp.einsum("bshd,bsh->bhd", kf, w_s)
+        return (C_new, n_new), h
+
+    (C, n), hs = jax.lax.scan(chunk, (C0, n0), (qc, kc, vc, ic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, D).astype(x.dtype)
+    z = x @ p["w_z"].astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ p["out_proj"].astype(x.dtype)
+    return out, {"C": C, "n": n}
+
+
+def mlstm_decode(p, x1, state, cfg):
+    B = x1.shape[0]
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    q, k, v, i, logf = _mlstm_qkvif(p, x1, cfg)          # (B,1,...)
+    f = jnp.exp(logf[:, 0])                              # (B,nh)
+    i0 = i[:, 0]
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    qf = q[:, 0].astype(jnp.float32)
+    C = state["C"] * f[..., None, None] + i0[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n = state["n"] * f[..., None] + i0[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), 1.0)
+    h = (num / den[..., None]).reshape(B, 1, cfg.d_model).astype(x1.dtype)
+    z = x1 @ p["w_z"].astype(x1.dtype)
+    out = (h * jax.nn.silu(z)) @ p["out_proj"].astype(x1.dtype)
+    return out, {"C": C, "n": n}
+
+
+def mlstm_state_shape(cfg, batch: int):
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    return {"C": (batch, nh, dh, dh), "n": (batch, nh, dh)}
+
+
+# ======================================================================
+# sLSTM (sequential, exponential gating with stabilizer — faithful)
+# ======================================================================
+def init_slstm(key, cfg):
+    D, nh = cfg.d_model, cfg.num_heads
+    dh = D // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], D, 4 * D, cfg.pdtype),     # z,i,f,o stacked
+        "r": (jax.random.normal(ks[1], (nh, dh, 4 * dh), jnp.float32)
+              / jnp.sqrt(dh)).astype(cfg.pdtype),
+        "b": jnp.zeros((4 * D,), cfg.pdtype),
+        "out_proj": dense_init(ks[2], D, D, cfg.pdtype),
+    }
+
+
+def _slstm_step(p, xw, carry, cfg):
+    """xw: pre-computed input projection for one step (B, 4D)."""
+    B = xw.shape[0]
+    D, nh = cfg.d_model, cfg.num_heads
+    dh = D // nh
+    c, n, h, m = carry                                   # each (B,nh,dh)
+    rec = jnp.einsum("bhd,hde->bhe", h, p["r"].astype(h.dtype))  # (B,nh,4dh)
+    pre = xw.reshape(B, nh, 4 * dh).astype(jnp.float32) + rec.astype(jnp.float32)
+    z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    log_i = i_
+    log_f = jax.nn.log_sigmoid(f_)                        # sigmoid forget (stable)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p, x, cfg, state=None):
+    B, S, D = x.shape
+    nh = cfg.num_heads
+    dh = D // nh
+    xw = x @ p["w_in"].astype(x.dtype) + p["b"].astype(x.dtype)   # (B,S,4D)
+    if state is None:
+        # m starts at 0 (not -inf) so a zeros-initialized decode state pytree
+        # is exactly equivalent to a fresh forward pass
+        zeros = jnp.zeros((B, nh, dh), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros)
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(carry, xw_t):
+        new = _slstm_step(p, xw_t, carry, cfg)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry, xw.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    out = h @ p["out_proj"].astype(x.dtype)
+    c, n, hh, m = carry
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_decode(p, x1, state, cfg):
+    xw = (x1 @ p["w_in"].astype(x1.dtype) + p["b"].astype(x1.dtype))[:, 0]
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    c, n, h, m = _slstm_step(p, xw, carry, cfg)
+    B = x1.shape[0]
+    out = h.reshape(B, 1, cfg.d_model).astype(x1.dtype) @ p["out_proj"].astype(x1.dtype)
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_state_shape(cfg, batch: int):
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    s = (batch, nh, dh)
+    return {"c": s, "n": s, "h": s, "m": s}

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, sgd, with_fedprox, with_scaffold
+)

@@ -1,0 +1,135 @@
+"""Minimal functional optimizer library (no optax in this container).
+
+An ``Optimizer`` is an (init, update) pair over param pytrees:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+FL-specific transforms:
+  * ``with_fedprox``  — adds the FedProx proximal gradient μ(w − w_global)
+                         [Li et al., MLSys 2020]; the anchor is carried in
+                         the optimizer state so the client loop stays generic.
+  * ``with_scaffold`` — SCAFFOLD control-variate correction g − c_i + c
+                         [Karimireddy et al., ICML 2020].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_scale, tree_sub, tree_zeros_like
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+# ---------------------------------------------------------------- SGD
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": tree_zeros_like(params)}
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                                 grads, params)
+        if momentum == 0.0:
+            return tree_scale(grads, -lr), state
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        return tree_scale(mu, -lr), {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- Adam
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        tf = t.astype(jnp.float32)
+        bc1 = 1 - b1 ** tf
+        bc2 = 1 - b2 ** tf
+
+        def upd(m_, v_, p):
+            u = -lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(u.dtype)
+            return u
+
+        return (jax.tree.map(upd, m, v, params),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- FedProx
+def with_fedprox(base: Optimizer, mu: float) -> Optimizer:
+    """Adds μ(w − w_anchor) to the gradient.  State carries the anchor;
+    set it once per round via ``state['anchor'] = global_params``."""
+
+    def init(params):
+        return {"base": base.init(params), "anchor": params}
+
+    def update(grads, state, params):
+        grads = jax.tree.map(
+            lambda g, p, a: g + mu * (p - a).astype(g.dtype),
+            grads, params, state["anchor"])
+        upd, bstate = base.update(grads, state["base"], params)
+        return upd, {"base": bstate, "anchor": state["anchor"]}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- SCAFFOLD
+class ScaffoldState(NamedTuple):
+    base: Any
+    c_local: Any     # client control variate c_i
+    c_global: Any    # server control variate c
+    steps: Any       # local step counter (for the c_i update rule)
+
+
+def with_scaffold(base: Optimizer, lr: float) -> Optimizer:
+    """SCAFFOLD option-II.  Correction g − c_i + c each step; after local
+    training, ``scaffold_new_control`` yields the updated c_i."""
+
+    def init(params):
+        return ScaffoldState(base.init(params), tree_zeros_like(params),
+                             tree_zeros_like(params), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        grads = jax.tree.map(lambda g, ci, c: g - ci + c,
+                             grads, state.c_local, state.c_global)
+        upd, bstate = base.update(grads, state.base, params)
+        return upd, ScaffoldState(bstate, state.c_local, state.c_global,
+                                  state.steps + 1)
+
+    return Optimizer(init, update)
+
+
+def scaffold_new_control(state: ScaffoldState, w_start: PyTree, w_end: PyTree,
+                         lr: float) -> PyTree:
+    """Option-II control update: c_i' = c_i − c + (w_start − w_end)/(K·lr)."""
+    K = jnp.maximum(state.steps.astype(jnp.float32), 1.0)
+    delta = tree_sub(w_start, w_end)
+    return jax.tree.map(
+        lambda ci, c, d: ci - c + d.astype(ci.dtype) / (K * lr),
+        state.c_local, state.c_global, delta)

@@ -1,0 +1,3 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_pspec, cache_pspec, param_pspec
+)

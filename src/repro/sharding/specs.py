@@ -1,0 +1,207 @@
+"""PartitionSpec policies per architecture family × input shape.
+
+Conventions on the production mesh (DESIGN.md §5):
+  axis "data"  — batch / clients / (for long_500k) the KV-cache sequence
+  axis "model" — tensor parallel: attention projections are sharded on the
+                 flattened H·dh dim, FFN on the hidden dim, MoE expert banks
+                 on the expert dim, SSM blocks on the inner/state channels
+  axis "pod"   — K FedSDD groups (core/distributed.py) or extra data
+                 parallelism for plain scale-out
+
+FSDP configs (≥10 B params) additionally shard the non-'model' weight dim
+over "data".  A dim is only sharded when divisible by the axis size —
+otherwise the leaf falls back to replication on that dim (recorded; the
+roofline pass watches the resulting all-gathers).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+
+
+# ---------------------------------------------------------------- helpers
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = np.prod([_axis_size(mesh, a) for a in
+                    (axis if isinstance(axis, tuple) else (axis,))])
+    return dim % int(size) == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axis):
+    return axis if _fits(dim, mesh, axis) else None
+
+
+# ---------------------------------------------------------------- params
+# (regex on the '/‐joined path, logical spec for the TRAILING dims;
+#  leading stacked-scan axes are padded with None)
+def _param_rules(fsdp: Optional[str], tp: str):
+    d = fsdp  # data-axis shard for fsdp configs, else None
+    return [
+        (r"embed$",                   (tp, d)),
+        (r"lm_head$",                 (d, tp)),
+        (r"frontend/proj1$",          (None, tp)),
+        (r"frontend/proj2$",          (tp, None)),
+        (r"frontend/mask_embed$",     (None,)),
+        # attention (gqa + mla)
+        (r"attn/w[qkv]$",             (d, tp)),
+        (r"attn/b[qkv]$",             (tp,)),
+        (r"attn/wo$",                 (tp, d)),
+        (r"attn/w_dkv$",              (d, None)),
+        (r"attn/kv_norm_scale$",      (None,)),
+        (r"attn/w_u[kv]$",            (None, tp)),
+        # moe
+        (r"moe/router$",              (d, None)),
+        (r"moe/w_(in|gate)$",         (tp, d, None)),
+        (r"moe/w_out$",               (tp, None, d)),
+        (r"moe/shared/w_(in|gate)$",  (d, tp)),
+        (r"moe/shared/w_out$",        (tp, d)),
+        # dense mlp
+        (r"mlp/w_(in|gate)$",         (d, tp)),
+        (r"mlp/w_out$",               (tp, d)),
+        # mamba
+        (r"ssm/in_proj$",             (d, tp)),
+        (r"ssm/conv_[wb]$",           None),        # tiny; replicate
+        (r"ssm/x_proj$",              (tp, None)),
+        (r"ssm/dt_proj$",             (None, tp)),
+        (r"ssm/dt_bias$",             (tp,)),
+        (r"ssm/A_log$",               (tp, None)),
+        (r"ssm/D_skip$",              (tp,)),
+        (r"ssm/out_proj$",            (tp, d)),
+        # mlstm
+        (r"ssm/w[qkvz]$",             (d, tp)),
+        (r"ssm/w_[if]$",              (d, None)),
+        (r"ssm/b_f$",                 (None,)),
+        # slstm (small; replicate)
+        (r"ssm/w_in$",                (d, None)),
+        (r"ssm/r$",                   None),
+        (r"ssm/b$",                   (None,)),
+        (r"ssm/out_proj$",            (tp, d)),
+        # norms / everything 1-D
+        (r"(norm|scale|bias)",        None),
+    ]
+
+
+def param_pspec(params_shapes, cfg: ModelConfig, mesh: Mesh,
+                tp_axis: str = "model",
+                fsdp_axis: Optional[str] = None):
+    """PartitionSpec pytree mirroring the params pytree (of arrays or
+    ShapeDtypeStructs)."""
+    fsdp = fsdp_axis if cfg.fsdp else None
+    rules = [(re.compile(pat), spec) for pat, spec in _param_rules(fsdp, tp_axis)]
+
+    def assign(path, leaf):
+        pstr = jax.tree_util.keystr(path, simple=True, separator="/")
+        shape = leaf.shape
+        for pat, logical in rules:
+            if pat.search(pstr):
+                if logical is None:
+                    return P()
+                nlead = len(shape) - len(logical)
+                if nlead < 0:   # e.g. 1-D bias matched a 2-D rule: replicate
+                    return P()
+                full = (None,) * nlead + tuple(logical)
+                full = tuple(_maybe(shape[i], mesh, a) for i, a in enumerate(full))
+                return P(*full)
+        return P()  # default: replicate
+
+    return jax.tree_util.tree_map_with_path(assign, params_shapes)
+
+
+# ---------------------------------------------------------------- batches
+def batch_pspec(batch_shapes, shape: InputShape, mesh: Mesh,
+                batch_axis="data"):
+    """Shard the leading (batch) dim of every input leaf over `batch_axis`
+    (falls back to replication when batch < axis size, e.g. long_500k)."""
+
+    def assign(leaf):
+        b = leaf.shape[0]
+        ax = _maybe(b, mesh, batch_axis)
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(assign, batch_shapes)
+
+
+# ---------------------------------------------------------------- caches
+def cache_pspec(cache_shapes, cfg: ModelConfig, mesh: Mesh, *,
+                batch_axis="data", tp_axis="model", seq_on_data: bool = False,
+                seq_axis: Optional[str] = None):
+    """KV caches / SSM states for serve_step.
+
+    Layouts handled:
+      (n_super, B, S, Hkv, dh)  attn k/v      → B@data, (Hkv|dh)@model
+      (n_super, B, S, rank)     mla latents   → B@data, rank@model
+      (n_super, B, di, ds)      mamba h       → B@data, di@model
+      (n_super, B, nh, dk, dv)  mlstm C       → B@data, (nh|dk)@model
+      (n_super, B, x, di)       conv state    → B@data, di@model
+
+    ``seq_on_data``: long_500k (B=1) — shard the cache SEQUENCE over data;
+    softmax/scan reductions over it become the flash-decode split-K
+    collectives.
+    ``seq_axis``: explicit axis for the cache sequence dim (the §Perf
+    split-K layout: batch@data + seq@model instead of heads/dh@model —
+    the per-shard partial-softmax combine is a tiny psum, vs. resharding
+    the whole cache around the dynamic_update_slice).  ``"auto"`` applies
+    it exactly where the §Perf measurements showed it wins 23×: attention
+    caches whose Hkv does NOT divide the tensor-parallel axis (GSPMD
+    otherwise reshards the whole cache around every update).
+    """
+
+    def assign(path, leaf):
+        pstr = jax.tree_util.keystr(path, simple=True, separator="/")
+        shape = leaf.shape
+        # find the batch dim: first dim after optional stacked prefix.
+        # stacked leaves come from the scan ('blocks') subtree.
+        lead = 1 if "blocks" in pstr else 0
+        spec = [None] * len(shape)
+        bdim = lead
+        if not seq_on_data:
+            spec[bdim] = _maybe(shape[bdim], mesh, batch_axis)
+        is_attn_kv = re.search(r"/(k|v)$", pstr) is not None
+        is_mla = re.search(r"/(c_kv|k_rope)$", pstr) is not None
+        s_ax = seq_axis or (batch_axis if seq_on_data else None)
+        if s_ax == "auto":
+            hkv_fits = is_attn_kv and _fits(shape[lead + 2], mesh, tp_axis)
+            s_ax = None if (not is_attn_kv or hkv_fits) else tp_axis
+        if is_attn_kv:
+            sdim, hdim, ddim = lead + 1, lead + 2, lead + 3
+            if s_ax is not None:
+                spec[sdim] = _maybe(shape[sdim], mesh, s_ax)
+            if s_ax != tp_axis:
+                if _fits(shape[hdim], mesh, tp_axis):
+                    spec[hdim] = tp_axis
+                else:
+                    spec[ddim] = _maybe(shape[ddim], mesh, tp_axis)
+        elif is_mla:
+            sdim = lead + 1
+            if s_ax is not None:
+                spec[sdim] = _maybe(shape[sdim], mesh, s_ax)
+            if s_ax != tp_axis:
+                spec[-1] = _maybe(shape[-1], mesh, tp_axis)
+        else:
+            # ssm states: shard the widest non-batch dim over model
+            dims = list(range(lead + 1, len(shape)))
+            if dims:
+                widest = max(dims, key=lambda i: shape[i])
+                spec[widest] = _maybe(shape[widest], mesh, tp_axis)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+
+
+def to_shardings(pspec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

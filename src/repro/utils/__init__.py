@@ -1,0 +1,1 @@
+from repro.utils import pytree, hlo  # noqa: F401

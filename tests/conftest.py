@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src layout without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — tests and
+# benches must see the 1-CPU default; only launch/dryrun.py forces 512.

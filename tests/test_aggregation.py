@@ -1,0 +1,67 @@
+"""Eq. 2 aggregation + the secure-aggregation privacy property (§3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (
+    fedavg_aggregate, fedavg_aggregate_stacked, secure_aggregate
+)
+
+
+def models(rng, n):
+    return [{"w": jnp.asarray(rng.normal(0, 1, (4, 3)), jnp.float32),
+             "b": jnp.asarray(rng.normal(0, 1, (3,)), jnp.float32)}
+            for _ in range(n)]
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 8), st.integers(0, 999))
+def test_eq2_weighted_average(n, seed):
+    rng = np.random.default_rng(seed)
+    ms = models(rng, n)
+    sizes = rng.integers(1, 100, n)
+    agg = fedavg_aggregate(ms, sizes)
+    w = sizes / sizes.sum()
+    expect = sum(wi * np.asarray(m["w"]) for wi, m in zip(w, ms))
+    np.testing.assert_allclose(np.asarray(agg["w"]), expect, rtol=1e-5, atol=1e-6)
+
+
+def test_stacked_matches_listwise():
+    rng = np.random.default_rng(0)
+    ms = models(rng, 5)
+    sizes = [10, 20, 30, 40, 50]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+    a = fedavg_aggregate_stacked(stacked, sizes)
+    b = fedavg_aggregate(ms, sizes)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6), a, b)
+
+
+def test_secure_aggregation_hides_clients_but_preserves_sum():
+    """The FedSDD privacy claim: the server sees only masked uploads, yet the
+    aggregate equals plain Eq. 2 — impossible for FedDF-style client-model
+    ensembles (test_fedsdd covers the config-level incompatibility)."""
+    rng = np.random.default_rng(3)
+    ms = models(rng, 4)
+    sizes = [5, 10, 15, 20]
+    agg_plain = fedavg_aggregate(ms, sizes)
+    agg_sec, uploads = secure_aggregate(ms, sizes, seed=7)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-3, atol=1e-4),
+                 agg_sec, agg_plain)
+    for m, u in zip(ms, uploads):
+        # each upload is very far from the raw model (masks are N(0,1)-scale
+        # divided by weights ≤ 1 ⇒ large)
+        diff = float(jnp.max(jnp.abs(u["w"] - m["w"])))
+        assert diff > 1.0, "upload leaked a (nearly) raw client model"
+
+
+def test_pallas_weight_avg_matches_aggregate(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    from repro.kernels.weight_avg import ops as wops
+    rng = np.random.default_rng(0)
+    ms = models(rng, 3)
+    sizes = jnp.asarray([1.0, 2.0, 3.0])
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+    a = wops.weighted_average_pytree(stacked, sizes)
+    b = fedavg_aggregate(ms, [1, 2, 3])
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5), a, b)

@@ -1,0 +1,120 @@
+"""Unit tests for the attention variants and SSM blocks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import attention as A
+from repro.models import ssm as S
+
+
+# ------------------------------------------------------------- attention
+def test_chunked_attention_matches_dense():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 512, 4, 32))
+    k = jax.random.normal(ks[1], (2, 512, 2, 32))
+    v = jax.random.normal(ks[2], (2, 512, 2, 32))
+    a = A.attention(q, k, v, causal=True, kv_block=128)
+    b = A.attention(q, k, v, causal=True, kv_block=4096)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_sliding_attention_blockwise_matches_masked():
+    """The O(S·window) sliding path == full attention with a band mask."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    S_, W = 2048, 128
+    q = jax.random.normal(ks[0], (1, S_, 2, 32))
+    k = jax.random.normal(ks[1], (1, S_, 2, 32))
+    v = jax.random.normal(ks[2], (1, S_, 2, 32))
+    fast = A.sliding_attention(q, k, v, window=W, q_block=256)
+    ref = A.attention(q, k, v, causal=True, window=W, kv_block=S_)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(ref), atol=2e-5)
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    p = A.init_mla(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 12, cfg.d_model))
+    full, _ = A.mla_forward(p, x, cfg)
+    m = cfg.mla
+    cache = {"c_kv": jnp.zeros((2, 12, m.kv_lora_rank)),
+             "k_rope": jnp.zeros((2, 12, m.rope_head_dim))}
+    outs = []
+    for t in range(12):
+        o, cache = A.mla_decode(p, x[:, t:t + 1], cache, cfg, t)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=5e-5)
+
+
+def test_rope_rotation_preserves_norm_and_relative_scores():
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None]
+    r = A.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(r, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    # relative property: q_i·k_j depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 1, 16))
+    def score(i, j):
+        qr = A.apply_rope(q, jnp.array([[i]]), 1e4)
+        kr = A.apply_rope(k, jnp.array([[j]]), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(3, 1) - score(7, 5)) < 1e-4
+
+
+# ------------------------------------------------------------------ ssm
+def _ssm_cfg(variant, d_model=64, heads=4):
+    return ModelConfig(
+        name="t", family="ssm", num_layers=2, d_model=d_model,
+        num_heads=heads, num_kv_heads=heads, d_ff=0, vocab_size=64,
+        ssm=SSMConfig(variant=variant, d_state=8, chunk_size=8,
+                      xlstm_slstm_ratio=2))
+
+
+@pytest.mark.parametrize("mod,init,fwd,dec,stsh", [
+    ("mamba", S.init_mamba, S.mamba_forward, S.mamba_decode, S.mamba_state_shape),
+    ("mlstm", S.init_mlstm, S.mlstm_forward, S.mlstm_decode, S.mlstm_state_shape),
+    ("slstm", S.init_slstm, S.slstm_forward, S.slstm_decode, S.slstm_state_shape),
+])
+def test_ssm_forward_matches_stepwise(mod, init, fwd, dec, stsh):
+    cfg = _ssm_cfg("xlstm" if mod != "mamba" else "mamba")
+    p = init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.5
+    full, _ = fwd(p, x, cfg)
+    state = jax.tree.map(lambda s: jnp.zeros(s, jnp.float32),
+                         stsh(cfg, 2), is_leaf=lambda s: isinstance(s, tuple))
+    outs = []
+    for t in range(16):
+        o, state = dec(p, x[:, t:t + 1], state, cfg)
+        outs.append(o)
+    dec_out = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_out), np.asarray(full),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_mamba_chunk_size_invariance():
+    """Chunked scan must be exact: output independent of chunk size."""
+    cfg = _ssm_cfg("mamba")
+    p = S.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model))
+    o1, _ = S.mamba_forward(p, x, cfg)
+    cfg2 = dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk_size=32))
+    o2, _ = S.mamba_forward(p, x, cfg2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4, rtol=1e-3)
+
+
+def test_mlstm_state_carry_across_calls():
+    """forward(x[0:8]) then forward(x[8:16], state) == forward(x[0:16])."""
+    cfg = _ssm_cfg("xlstm")
+    p = S.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model)) * 0.5
+    full, _ = S.mlstm_forward(p, x, cfg)
+    h1, st = S.mlstm_forward(p, x[:, :8], cfg)
+    h2, _ = S.mlstm_forward(p, x[:, 8:], cfg, state=st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), atol=5e-4, rtol=1e-3)

@@ -1,0 +1,46 @@
+"""Checkpointer round-trips + retention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fedckpt.checkpointer import Checkpointer, load_pytree, save_pytree
+
+
+def tree(seed):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "layer": {"w": jax.random.normal(k, (4, 3)),
+                  "b": jnp.zeros((3,), jnp.bfloat16)},
+        "stack": [jnp.arange(5), jnp.ones((2, 2), jnp.int32)],
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = tree(0)
+    p = str(tmp_path / "x.npz")
+    save_pytree(p, t)
+    t2 = load_pytree(p, jax.tree.map(jnp.zeros_like, t))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)), t, t2)
+    assert t2["layer"]["b"].dtype == jnp.bfloat16
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    p = str(tmp_path / "x.npz")
+    save_pytree(p, {"w": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        load_pytree(p, {"w": jnp.zeros((3,))})
+
+
+def test_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree(s), meta={"round": s})
+    assert ck.steps() == [3, 4]
+    assert ck.latest() == 4
+    got = ck.restore(4, jax.tree.map(jnp.zeros_like, tree(4)))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)), tree(4), got)
+    step, _ = ck.restore_latest(jax.tree.map(jnp.zeros_like, tree(4)))
+    assert step == 4

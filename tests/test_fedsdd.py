@@ -1,0 +1,121 @@
+"""FedSDD runner behaviour: Algorithm 1 semantics, scalability and privacy
+properties, baseline presets (deliverable (c), integration level)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distillation as dist
+from repro.core.fedsdd import FedConfig, PRESETS, make_config, make_runner
+from repro.core.tasks import classification_task
+
+
+@pytest.fixture(scope="module")
+def task():
+    return classification_task(model="cnn", num_clients=8, alpha=0.5,
+                               num_train=400, num_server=256, seed=0)
+
+
+def small(**kw):
+    base = dict(num_clients=8, participation=1.0, local_epochs=1,
+                client_lr=0.05, server_lr=0.05, distill_steps=4,
+                client_batch=32, rounds=2)
+    base.update(kw)
+    return base
+
+
+def test_presets_all_validate():
+    for name in PRESETS:
+        make_config(name).validate()
+
+
+def test_fedsdd_round_structure(task):
+    r = make_runner("fedsdd", task, K=4, R=2, **small())
+    st = r.run(rounds=2)
+    assert st.round == 2
+    assert len(st.global_models) == 4
+    assert st.ensemble.num_members == 8          # K*R after 2 rounds
+    assert st.ensemble.rounds_held() == [1, 2]
+
+
+def test_distillation_updates_only_main_model(task):
+    """The diversity mechanism (§3.1.2): models k>0 must equal their plain
+    aggregation result, i.e. a no-distillation run with the same seed."""
+    r_kd = make_runner("fedsdd", task, K=3, **small(distill_steps=3))
+    r_no = make_runner("fed_ensemble", task, K=3, **small(distill_steps=3))
+    st_kd = r_kd.run(rounds=1)
+    st_no = r_no.run(rounds=1)
+    # non-main models identical with and without KD
+    for k in (1, 2):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+            st_kd.global_models[k], st_no.global_models[k])
+    # main model differs (KD moved it)
+    diffs = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        st_kd.global_models[0], st_no.global_models[0]))
+    assert max(diffs) > 0
+
+
+def test_kd_cost_independent_of_clients(task):
+    """Remark 2 / Table 1: FedSDD's teacher count is K·R regardless of C;
+    FedDF's equals C."""
+    calls = []
+    orig = dist.ensemble_probs
+
+    def counting(teachers, batch, logits_fn, temperature=1.0):
+        calls.append(len(teachers))
+        return orig(teachers, batch, logits_fn, temperature)
+
+    dist.ensemble_probs = counting
+    try:
+        for n_clients in (4, 8):
+            t = classification_task(model="cnn", num_clients=n_clients,
+                                    alpha=0.5, num_train=200, num_server=256)
+            calls.clear()
+            make_runner("fedsdd", t, K=2, R=1,
+                        **small(num_clients=n_clients, distill_steps=2)
+                        ).run(rounds=1)
+            assert all(c == 2 for c in calls), (n_clients, calls)
+        for n_clients, expect in ((4, 4), (8, 8)):
+            t = classification_task(model="cnn", num_clients=n_clients,
+                                    alpha=0.5, num_train=200, num_server=256)
+            calls.clear()
+            make_runner("feddf", t,
+                        **small(num_clients=n_clients, distill_steps=2)
+                        ).run(rounds=1)
+            assert all(c == expect for c in calls), (n_clients, calls)
+    finally:
+        dist.ensemble_probs = orig
+
+
+def test_secure_aggregation_runs_with_fedsdd_not_feddf(task):
+    make_config("fedsdd", secure_aggregation=True).validate()
+    with pytest.raises(AssertionError):
+        make_config("feddf", secure_aggregation=True).validate()
+    r = make_runner("fedsdd", task, K=2, secure_aggregation=True,
+                    **small(distill_steps=2))
+    st = r.run(rounds=1)
+    assert st.round == 1
+
+
+def test_temporal_r_enlarges_teacher_bank(task):
+    r = make_runner("fedsdd", task, K=2, R=3, **small(distill_steps=2))
+    st = r.run(rounds=3)
+    assert st.ensemble.num_members == 6
+
+
+def test_warmup_skips_early_distillation(task):
+    r = make_runner("fedsdd", task, K=2, distill_warmup_rounds=1,
+                    **small(distill_steps=2))
+    st = r.run(rounds=2)
+    assert st.history[0].get("kd_steps") is None      # round 1: skipped
+    assert st.history[1].get("kd_steps") == 2         # round 2: ran
+
+
+def test_scaffold_controls_updated(task):
+    r = make_runner("scaffold", task, **small())
+    st = r.run(rounds=1)
+    norms = [float(sum(jnp.sum(jnp.abs(l)) for l in jax.tree.leaves(c)))
+             for c in st.scaffold_c_clients]
+    assert any(n > 0 for n in norms)

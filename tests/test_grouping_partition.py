@@ -1,0 +1,62 @@
+"""Properties of client sampling / grouping (§3.1.1) and the Dirichlet
+non-IID partitioner."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grouping import assign_groups, sample_clients
+from repro.data.partition import dirichlet_partition, heterogeneity
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 40), st.integers(1, 8), st.integers(0, 1000))
+def test_groups_partition_exactly(n_active, K, seed):
+    if n_active < K:
+        return
+    rng = np.random.default_rng(seed)
+    active = np.arange(100, 100 + n_active)
+    groups = assign_groups(active, K, rng)
+    assert len(groups) == K
+    allg = np.concatenate(groups)
+    assert sorted(allg.tolist()) == sorted(active.tolist())
+    sizes = [len(g) for g in groups]
+    assert max(sizes) - min(sizes) <= 1            # "evenly distributed"
+
+
+def test_groups_reshuffle_each_round():
+    active = np.arange(16)
+    g1 = assign_groups(active, 4, np.random.default_rng(1))
+    g2 = assign_groups(active, 4, np.random.default_rng(2))
+    assert any(set(a.tolist()) != set(b.tolist()) for a, b in zip(g1, g2))
+
+
+def test_groups_error_when_too_few_clients():
+    with pytest.raises(ValueError):
+        assign_groups(np.arange(2), 4, np.random.default_rng(0))
+
+
+def test_sample_clients_participation():
+    rng = np.random.default_rng(0)
+    s = sample_clients(20, 0.4, rng)
+    assert len(s) == 8
+    assert len(set(s.tolist())) == 8
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 100))
+def test_dirichlet_partition_covers_exactly(seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 500)
+    parts = dirichlet_partition(labels, 8, alpha=0.5, seed=seed)
+    allidx = np.concatenate(parts)
+    assert sorted(allidx.tolist()) == list(range(500))
+
+
+def test_dirichlet_alpha_ordering():
+    """Smaller α ⇒ more heterogeneous client label distributions (paper §4.1)."""
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 4000)
+    h_iid = heterogeneity(dirichlet_partition(labels, 20, 100.0, seed=1), labels)
+    h_mid = heterogeneity(dirichlet_partition(labels, 20, 1.0, seed=1), labels)
+    h_bad = heterogeneity(dirichlet_partition(labels, 20, 0.1, seed=1), labels)
+    assert h_iid < h_mid < h_bad

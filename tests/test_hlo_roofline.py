@@ -1,0 +1,66 @@
+"""utils/hlo.py: collective-bytes parser + roofline terms."""
+import numpy as np
+import pytest
+
+from repro.utils.hlo import (
+    TPUv5eSpec, collective_stats, duplicate_fusion_count, roofline
+)
+
+SAMPLE_HLO = """
+HloModule jit_step
+%fused_add.1 (a: f32[8]) -> f32[8] { ... }
+ENTRY %main {
+  %ar = f32[8,1024]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[16,512]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[4,256]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%w), dimensions={0}
+  %cp = u8[128]{0} collective-permute(%v)
+  %tup = (f32[4,4]{1,0}, f32[2]{0}) all-reduce(%p, %q)
+}
+"""
+
+
+def test_collective_bytes_parsed():
+    st = collective_stats(SAMPLE_HLO)
+    assert st.bytes_by_kind["all-reduce"] == 8 * 1024 * 4 + (4 * 4 * 4 + 2 * 4)
+    assert st.bytes_by_kind["all-gather"] == 16 * 512 * 2
+    assert st.bytes_by_kind["reduce-scatter"] == 4 * 256 * 4
+    assert st.bytes_by_kind["all-to-all"] == 8 * 8 * 4
+    assert st.bytes_by_kind["collective-permute"] == 128
+    assert st.count_by_kind["all-reduce"] == 2
+    assert st.total_count == 6
+
+
+def test_no_collectives():
+    st = collective_stats("ENTRY %m { %a = f32[2]{0} add(%x, %y) }")
+    assert st.total_bytes == 0
+    assert "no collectives" in st.summary()
+
+
+def test_roofline_terms_and_dominance():
+    spec = TPUv5eSpec()
+    t = roofline(flops=197e12, hbm_bytes=0, collective_bytes=0, chips=1)
+    assert abs(t.compute_s - 1.0) < 1e-9 and t.dominant == "compute"
+    t = roofline(flops=0, hbm_bytes=819e9, collective_bytes=1, chips=1)
+    assert abs(t.memory_s - 1.0) < 1e-9 and t.dominant == "memory"
+    t = roofline(flops=1, hbm_bytes=1, collective_bytes=50e9, chips=1)
+    assert abs(t.collective_s - 1.0) < 1e-9 and t.dominant == "collective"
+    # chips scale all terms down
+    t2 = roofline(197e12, 819e9, 50e9, chips=4)
+    assert abs(t2.compute_s - 0.25) < 1e-9
+
+
+def test_real_jit_module_parses(tmp_path):
+    """End-to-end: lower a sharded computation and find its all-reduce."""
+    import os
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device to emit collectives")
+    mesh = jax.make_mesh((2,), ("d",))
+    x = jax.ShapeDtypeStruct((8, 4), jnp.float32)
+    f = jax.jit(lambda a: a.sum(), in_shardings=NamedSharding(mesh, P("d")))
+    hlo = f.lower(x).compile().as_text()
+    st = collective_stats(hlo)
+    assert st.total_count >= 1

@@ -1,0 +1,81 @@
+"""Property tests for the pytree algebra the FedSDD core is built on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.utils import pytree as pt
+
+
+def make_tree(rng, scale=1.0):
+    return {
+        "a": jnp.asarray(rng.normal(0, scale, (3, 4)), jnp.float32),
+        "b": {"c": jnp.asarray(rng.normal(0, scale, (5,)), jnp.float32),
+              "d": jnp.asarray(rng.normal(0, scale, (2, 2, 2)), jnp.float32)},
+    }
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_weighted_mean_matches_numpy(n, seed):
+    rng = np.random.default_rng(seed)
+    trees = [make_tree(rng) for _ in range(n)]
+    w = rng.uniform(0.1, 5.0, n)
+    out = pt.tree_weighted_mean(trees, w)
+    wn = w / w.sum()
+    for path in (("a",), ("b", "c"), ("b", "d")):
+        leaves = [t[path[0]] if len(path) == 1 else t[path[0]][path[1]] for t in trees]
+        expect = sum(wi * np.asarray(l) for wi, l in zip(wn, leaves))
+        got = out[path[0]] if len(path) == 1 else out[path[0]][path[1]]
+        np.testing.assert_allclose(np.asarray(got), expect, rtol=1e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 5), st.integers(0, 10_000))
+def test_stacked_weighted_mean_equals_listwise(n, seed):
+    rng = np.random.default_rng(seed)
+    trees = [make_tree(rng) for _ in range(n)]
+    w = rng.uniform(0.5, 2.0, n)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    a = pt.tree_stacked_weighted_mean(stacked, w)
+    b = pt.tree_weighted_mean(trees, w)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6), a, b)
+
+
+def test_weighted_mean_identity():
+    rng = np.random.default_rng(0)
+    t = make_tree(rng)
+    out = pt.tree_weighted_mean([t, t, t], [1.0, 2.0, 3.0])
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-6), out, t)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000))
+def test_flatten_unflatten_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    t = make_tree(rng)
+    v = pt.tree_flatten_to_vector(t)
+    assert v.shape == (pt.tree_size(t),)
+    t2 = pt.tree_unflatten_from_vector(v, t)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-6), t, t2)
+
+
+def test_tree_algebra():
+    rng = np.random.default_rng(1)
+    a, b = make_tree(rng), make_tree(rng)
+    s = pt.tree_add(a, b)
+    d = pt.tree_sub(s, b)
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6), d, a)
+    assert float(pt.tree_sq_dist(a, a)) == 0.0
+    assert float(pt.tree_sq_dist(a, b)) > 0.0
+    assert bool(pt.tree_all_finite(a))
+    bad = {"x": jnp.array([1.0, np.nan])}
+    assert not bool(pt.tree_all_finite(bad))
+
+
+def test_tree_cast_preserves_ints():
+    t = {"w": jnp.ones((2,), jnp.float32), "step": jnp.zeros((), jnp.int32)}
+    out = pt.tree_cast(t, jnp.bfloat16)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["step"].dtype == jnp.int32

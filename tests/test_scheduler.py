@@ -1,0 +1,47 @@
+"""Round-time scheduler: reproduces the STRUCTURE of paper Table 3 and the
+Fig. 2 parallelism example."""
+from repro.core.scheduler import Workload, round_time_comparison, simulate
+
+
+def test_feddf_kd_grows_with_clients_fedsdd_flat():
+    """Table 3's key claim: FedDF's KD overhead over FedAvg scales with C;
+    FedSDD's is constant (K·R teachers only)."""
+    overheads = {}
+    for C in (8, 14, 20):
+        r = round_time_comparison(C, K=4, local_train_time=100,
+                                  kd_time_per_member=10, rounds=6,
+                                  concurrent_clients=C)  # unconstrained clients
+        overheads[C] = (r["feddf"] - r["fedavg"], r["fedsdd"] - r["fedavg"])
+    feddf = [overheads[c][0] for c in (8, 14, 20)]
+    fedsdd = [overheads[c][1] for c in (8, 14, 20)]
+    assert feddf[0] < feddf[1] < feddf[2]          # grows linearly in C
+    assert max(fedsdd) - min(fedsdd) < 1e-6        # flat
+    assert all(s < f for s, f in zip(fedsdd, feddf))
+
+
+def test_fig2_parallelism_hides_kd():
+    """Fig. 2: 4 clients, 1 available at a time.  FedSDD (K=4) overlaps the
+    server KD with other groups' local training; FedDF cannot."""
+    base = dict(rounds=4, clients_per_round=4, local_train_time=10.0,
+                kd_time=8.0, concurrent_clients=1)
+    feddf = simulate(Workload(K=1, kd_blocks_all=True, **base))
+    fedsdd = simulate(Workload(K=4, kd_blocks_all=False, **base))
+    assert fedsdd.makespan < feddf.makespan
+
+
+def test_zero_kd_equals_fedavg():
+    w1 = Workload(rounds=3, K=1, clients_per_round=4, local_train_time=5.0,
+                  kd_time=0.0, concurrent_clients=2)
+    t = simulate(w1)
+    # 3 rounds × (4 clients / 2 slots) × 5s
+    assert abs(t.makespan - 3 * 2 * 5.0) < 1e-6
+
+
+def test_trace_events_cover_all_jobs():
+    w = Workload(rounds=2, K=2, clients_per_round=4, local_train_time=1.0,
+                 kd_time=1.0, concurrent_clients=4)
+    t = simulate(w)
+    train_events = [e for e in t.events if "/c" in e[2]]
+    kd_events = [e for e in t.events if e[2].endswith("KD")]
+    assert len(train_events) == 2 * 4  # rounds × clients
+    assert len(kd_events) == 2

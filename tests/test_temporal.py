@@ -1,0 +1,50 @@
+"""Temporal-ensembling ring semantics (§3.1.3, Eq. 5)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.temporal import TemporalEnsemble
+
+
+def model(v):
+    return {"w": jnp.full((2,), float(v))}
+
+
+def test_members_are_K_times_R():
+    te = TemporalEnsemble(K=3, R=2)
+    te.push(1, [model(10), model(11), model(12)])
+    assert te.num_members == 3          # first round: only K so far
+    te.push(2, [model(20), model(21), model(22)])
+    assert te.num_members == 6
+    te.push(3, [model(30), model(31), model(32)])
+    assert te.num_members == 6          # ring evicted round 1
+    assert te.rounds_held() == [2, 3]
+
+
+def test_newest_round_first_and_eviction():
+    te = TemporalEnsemble(K=1, R=3)
+    for r in range(1, 6):
+        te.push(r, [model(r)])
+    vals = [float(m["w"][0]) for m in te.members()]
+    assert vals == [5.0, 4.0, 3.0]
+
+
+def test_r1_is_current_round_only():
+    te = TemporalEnsemble(K=2, R=1)
+    te.push(1, [model(1), model(2)])
+    te.push(2, [model(3), model(4)])
+    vals = sorted(float(m["w"][0]) for m in te.members())
+    assert vals == [3.0, 4.0]
+
+
+def test_wrong_k_rejected():
+    te = TemporalEnsemble(K=2, R=1)
+    with pytest.raises(AssertionError):
+        te.push(1, [model(0)])
+
+
+def test_spill_to_disk(tmp_path):
+    te = TemporalEnsemble(K=1, R=1, spill_dir=str(tmp_path))
+    te.push(1, [model(1)])
+    te.push(2, [model(2)])
+    spilled = list(tmp_path.iterdir())
+    assert len(spilled) == 1 and "r00001_g0" in spilled[0].name
