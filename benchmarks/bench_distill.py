@@ -11,7 +11,6 @@ no-distillation ensemble while improving the global model.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -40,7 +40,6 @@ def _ens_acc(task, teachers):
 
 
 def run(scale: BenchScale, csv: CSV, alpha: float = 0.1) -> dict:
-    from repro.core.tasks import classification_task
     from repro.data.synthetic import SyntheticClassification
 
     results = {}

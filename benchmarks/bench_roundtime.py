@@ -1,22 +1,27 @@
 """Table 3: round-time / KD-cost scaling with the number of clients.
 
-Two measurements:
+Three measurements:
   (a) REAL wall-clock of the server distillation stage — teacher-ensemble
       forward + KD steps — with a FedDF ensemble (C client models) vs a
       FedSDD ensemble (K·R aggregated models).  The paper's claim: FedSDD's
       KD time is flat in C, FedDF's grows linearly.
   (b) the event-driven round scheduler (core/scheduler.py) reproducing the
       Fig. 2 / appendix A.6 parallelism accounting.
+  (c) end-to-end rounds/sec of the sequential oracle vs the vectorized
+      client engine (FedConfig.execution) — the per-client Python loop is
+      what makes wall-clock scale with participation; the stacked engine
+      decouples them.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from benchmarks.common import CSV
 from repro.core import distillation as dist
+from repro.core.fedsdd import make_runner
 from repro.core.scheduler import round_time_comparison
 from repro.core.tasks import classification_task
 
@@ -50,6 +55,51 @@ def _measure_kd(task, n_teachers: int, steps: int = 10) -> float:
     return time.time() - t0
 
 
+def measure_round_time(n_clients: int, execution: str, *,
+                       per_client: int = 128, client_batch: int = 32,
+                       local_epochs: int = 1, reps: int = 2,
+                       preset: str = "fedavg", model: str = "mlp",
+                       **overrides) -> float:
+    """Mean seconds per federated round (after a compile/warm-up round).
+
+    Per-client shard size is FIXED so client count scales total work —
+    that is the regime where the sequential loop's cost is linear in C.
+    Default model is the tiny MLP: per-step compute is small enough that
+    the sequential path is dominated by its C·S per-client dispatches,
+    which is exactly the server-side serialization the engine removes.
+    """
+    task = classification_task(model=model, num_clients=n_clients,
+                               alpha=100.0,  # ~uniform shards: one bucket
+                               num_train=n_clients * per_client,
+                               num_server=256, seed=0)
+    task = dataclasses.replace(task, eval_fn=None)  # time the round only
+    r = make_runner(preset, task, num_clients=n_clients, participation=1.0,
+                    local_epochs=local_epochs, client_batch=client_batch,
+                    client_lr=0.05, distill_steps=2, server_lr=0.05,
+                    execution=execution, seed=0, **overrides)
+    state = r.run_round(r.init_state())       # compile + warm caches
+    t0 = time.time()
+    for _ in range(reps):
+        state = r.run_round(state)
+    return (time.time() - t0) / reps
+
+
+def engine_comparison(csv: CSV, client_counts=(8, 20),
+                      prefix: str = "t3/roundtime", reps: int = 2) -> dict:
+    """(c): rounds/sec, sequential vs vectorized, same protocol.
+    Shared by bench_scaling's t9 sweep (different prefix/counts)."""
+    out = {}
+    for C in client_counts:
+        t_seq = measure_round_time(C, "sequential", reps=reps)
+        t_vec = measure_round_time(C, "vectorized", reps=reps)
+        out[C] = (t_seq, t_vec)
+        csv.add(f"{prefix}_seq/C{C}", t_seq * 1e6,
+                f"rounds_per_s={1.0 / t_seq:.2f}")
+        csv.add(f"{prefix}_vec/C{C}", t_vec * 1e6,
+                f"rounds_per_s={1.0 / t_vec:.2f};speedup={t_seq / t_vec:.2f}x")
+    return out
+
+
 def run(scale, csv: CSV) -> dict:
     task = classification_task(model=scale.model, num_clients=8,
                                num_train=800, num_server=512)
@@ -74,4 +124,5 @@ def run(scale, csv: CSV) -> dict:
     flat = abs(out[20][1] - out[8][1]) < 0.4 * max(out[8][1], 1e-9)
     csv.add("t3/claim_feddf_kd_grows", 0, f"pass={grew}")
     csv.add("t3/claim_fedsdd_kd_flat", 0, f"pass={flat}")
+    out["engine"] = engine_comparison(csv)
     return out

@@ -1,5 +1,8 @@
 """Tables 7-9: communication intervals, number of global models K, and
-client scaling (fixed K vs scaled K)."""
+client scaling (fixed K vs scaled K) — plus the execution-engine scaling
+claim: vectorized round time must grow SUBLINEARLY in the sampled-client
+count (the sequential Python loop grows ~linearly, which is precisely the
+serialization the paper argues a scalable server must avoid)."""
 from __future__ import annotations
 
 import dataclasses
@@ -7,8 +10,32 @@ import dataclasses
 from benchmarks.common import BenchScale, CSV, run_method
 
 
+def engine_scaling(csv: CSV, client_counts=(4, 8, 32), reps: int = 2) -> dict:
+    """Round wall-clock vs sampled-client count for both execution modes.
+
+    Per-client work is held fixed (see measure_round_time), so a server
+    whose cost is decoupled from participation shows sublinear growth.
+    Emits a pass/fail claim row: vectorized growth factor < 0.75 * the
+    client-count growth factor.
+    """
+    from benchmarks.bench_roundtime import engine_comparison
+    out = engine_comparison(csv, client_counts=client_counts,
+                            prefix="t9/engine_roundtime", reps=reps)
+    lo, hi = min(client_counts), max(client_counts)
+    ratio_c = hi / lo
+    growth_vec = out[hi][1] / max(out[lo][1], 1e-9)
+    growth_seq = out[hi][0] / max(out[lo][0], 1e-9)
+    sublinear = growth_vec < 0.75 * ratio_c
+    csv.add("t9/claim_vectorized_sublinear", 0,
+            f"pass={sublinear};vec_growth={growth_vec:.2f};"
+            f"seq_growth={growth_seq:.2f};client_growth={ratio_c:.1f}")
+    out["sublinear"] = sublinear
+    return out
+
+
 def run(scale: BenchScale, csv: CSV, alpha: float = 0.1) -> dict:
     results = {}
+    results["engine"] = engine_scaling(csv)
 
     # ---- Table 7: rounds × local epochs at fixed total work --------------
     total = scale.rounds * scale.local_epochs

@@ -9,6 +9,7 @@ the paper's setting for offline runs.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -42,11 +43,15 @@ QUICK = BenchScale()
 FULL = BenchScale(num_clients=20, rounds=30, local_epochs=5,
                   distill_steps=200, num_train=8000, num_server=2048,
                   model="resnet20", seeds=(0, 1, 2))
+# CI smoke: tiny shapes, seconds not minutes — exists to fail loudly on
+# kernel/engine regressions, not to measure anything
+SMOKE = BenchScale(num_clients=4, rounds=1, local_epochs=1,
+                   distill_steps=2, num_train=256, num_server=256)
 
 
 def run_method(preset: str, alpha: float, scale: BenchScale, seed: int = 0,
                **overrides):
-    """One federated run; returns (final_main_acc, state, wallclock_s)."""
+    """One federated run; returns (final_main_acc, state, wallclock_s, task)."""
     task = classification_task(model=scale.model, num_clients=scale.num_clients,
                                alpha=alpha, num_train=scale.num_train,
                                num_server=scale.num_server, noise=scale.noise,
@@ -69,14 +74,30 @@ def mean_std(vals):
 
 
 class CSV:
-    """Collects ``name,us_per_call,derived`` rows (scaffold contract)."""
+    """Collects ``name,us_per_call,derived`` rows (scaffold contract).
 
-    def __init__(self):
+    When constructed with ``jsonl_path`` (or with the ``REPRO_BENCH_JSONL``
+    env var set) every row is ALSO appended to that file as one JSON
+    object per line — the machine-readable feed BENCH_*.json trajectory
+    tracking consumes from CI bench-smoke runs.
+    """
+
+    def __init__(self, jsonl_path: str | None = None):
         self.rows = []
+        self.jsonl_path = jsonl_path or os.environ.get("REPRO_BENCH_JSONL")
+        if self.jsonl_path:
+            # truncate: one file per bench invocation
+            open(self.jsonl_path, "w").close()
 
     def add(self, name: str, us_per_call: float, derived: str = ""):
         self.rows.append((name, us_per_call, derived))
         print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+        if self.jsonl_path:
+            with open(self.jsonl_path, "a") as f:
+                f.write(json.dumps({"name": name,
+                                    "us_per_call": round(us_per_call, 1),
+                                    "derived": derived,
+                                    "ts": time.time()}) + "\n")
 
     def header(self):
         print("name,us_per_call,derived", flush=True)

@@ -14,16 +14,37 @@ Table map:
   t6 -> bench_distill    (Table 6: distillation schemes)
   t7 -> bench_scaling    (Tables 7-9: intervals, K, client scaling)
   kern -> bench_kernels  (Pallas kernel microbenches + TPU projections)
+
+CI smoke mode (minutes, tiny shapes — regression tripwire, not science):
+  PYTHONPATH=src python benchmarks/run.py --smoke --jsonl bench-smoke.jsonl
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
-from benchmarks.common import CSV, FULL, QUICK
+# allow both `python -m benchmarks.run` and `python benchmarks/run.py`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import CSV, FULL, QUICK, SMOKE  # noqa: E402
 
 BENCHES = ["t2", "t3", "t4", "t5", "t6", "t7", "kern"]
+
+
+def run_smoke(csv: CSV) -> None:
+    """Tiny-shape invocations of the hot paths: Pallas kernel microbenches
+    plus one sequential-vs-vectorized engine round — fails loudly if a
+    kernel or the execution engine regresses."""
+    from benchmarks import bench_kernels
+    from benchmarks.bench_roundtime import measure_round_time
+    bench_kernels.run(SMOKE, csv)
+    for mode in ("sequential", "vectorized"):
+        dt = measure_round_time(SMOKE.num_clients, mode, per_client=64,
+                                local_epochs=1, reps=1)
+        csv.add(f"smoke/roundtime_{mode}/C{SMOKE.num_clients}", dt * 1e6,
+                f"rounds_per_s={1.0 / dt:.2f}")
 
 
 def main() -> None:
@@ -31,13 +52,22 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(BENCHES))
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape CI smoke: kernels + engine round")
+    ap.add_argument("--jsonl", default=None, metavar="PATH",
+                    help="also append one JSON object per bench row to PATH")
     args = ap.parse_args()
 
     scale = FULL if args.full else QUICK
     only = args.only.split(",") if args.only else BENCHES
-    csv = CSV()
+    csv = CSV(jsonl_path=args.jsonl)
     csv.header()
     t0 = time.time()
+
+    if args.smoke:
+        run_smoke(csv)
+        print(f"# total_bench_time_s={time.time() - t0:.1f}", file=sys.stderr)
+        return
 
     if "t2" in only:
         from benchmarks import bench_accuracy

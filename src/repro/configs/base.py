@@ -13,7 +13,7 @@ smoke tests; the full configs are only ever lowered via ShapeDtypeStructs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax.numpy as jnp

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.utils.pytree import (
-    tree_stacked_weighted_mean, tree_weighted_mean, tree_zeros_like
+    tree_group_weighted_mean, tree_stacked_weighted_mean, tree_weighted_mean,
+    tree_zeros_like,
 )
 
 PyTree = Any
@@ -30,6 +31,32 @@ def fedavg_aggregate_stacked(stacked: PyTree, num_samples) -> PyTree:
     """Same, over leaves with a leading client axis (the pjit'd path —
     this is what the weight_avg Pallas kernel implements on TPU)."""
     return tree_stacked_weighted_mean(stacked, num_samples)
+
+
+def fedavg_aggregate_grouped(stacked: PyTree, num_samples, group_ids,
+                             num_groups: int) -> PyTree:
+    """Eq. 2 for ALL K groups in one pass over a client-stacked pytree.
+
+    ``stacked`` leaves are (C, ...) in group-major client order,
+    ``group_ids`` (C,) maps each row to its group.  When the groups are
+    uniform (|S|/K clients each — the production shape) the reduction
+    routes through the batched multi-model ``weight_avg`` Pallas kernel;
+    ragged groups (C % K != 0) fall back to a fused segment reduction.
+    Either way there is no per-group Python loop.
+    """
+    from repro.kernels.weight_avg import ops as wops
+    gid = np.asarray(group_ids)
+    counts = np.bincount(gid, minlength=num_groups)
+    uniform = (counts == counts[0]).all() and counts[0] > 0
+    group_major = bool((np.diff(gid) >= 0).all())
+    if uniform and group_major and wops._use_pallas():
+        n = int(counts[0])
+        w = jnp.asarray(np.asarray(num_samples, np.float64).reshape(
+            num_groups, n), jnp.float32)
+        regrouped = jax.tree.map(
+            lambda x: x.reshape((num_groups, n) + x.shape[1:]), stacked)
+        return wops.group_weighted_average_pytree(regrouped, w)
+    return tree_group_weighted_mean(stacked, num_samples, gid, num_groups)
 
 
 # ---------------------------------------------------------------- secure agg

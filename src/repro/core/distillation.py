@@ -10,12 +10,10 @@ ensemble-KD kernel on TPU, its jnp oracle elsewhere.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.kd_loss import ops as kd_ops
 from repro.optim.optimizers import Optimizer, apply_updates, sgd
@@ -31,6 +29,28 @@ def ensemble_logits(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn):
         lg = logits_fn(t, batch).astype(jnp.float32)
         acc = lg if acc is None else acc + lg
     return acc / len(teachers)
+
+
+# ----------------------------------------------------- stacked teachers
+def stacked_teacher_logits(stacked_teachers: PyTree, batch,
+                           logits_fn: LogitsFn) -> jnp.ndarray:
+    """(M, B, V) teacher logit stack from ONE batched forward.
+
+    ``stacked_teachers`` leaves carry a leading member axis (M = K·R for
+    FedSDD, M = C for FedDF); the vmap turns the teacher-at-a-time Python
+    loop into a single batched forward, so adding members grows one array
+    dim instead of adding sequential dispatches.
+    """
+    return jax.vmap(lambda p: logits_fn(p, batch))(
+        stacked_teachers).astype(jnp.float32)
+
+
+def ensemble_probs_stacked(stacked_teachers: PyTree, batch,
+                           logits_fn: LogitsFn, temperature: float = 1.0):
+    """τ-softened ensemble probs via the fused ensemble_softmax kernel:
+    the (M, B, V) stack reduces over M and normalizes in one pass."""
+    lg = stacked_teacher_logits(stacked_teachers, batch, logits_fn)
+    return kd_ops.ensemble_softmax(lg, temperature)
 
 
 def ensemble_probs(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn,
@@ -67,19 +87,31 @@ def distill(student: PyTree,
             steps: int,
             lr: float = 0.1,
             temperature: float = 4.0,
-            momentum: float = 0.9) -> tuple[PyTree, dict]:
+            momentum: float = 0.9,
+            stacked_teachers: bool = False) -> tuple[PyTree, dict]:
     """Run ``steps`` KD minibatch steps (paper: 5000 steps, SGD, τ=4).
 
     ``server_batches``: sequence of batches cycled over; teacher probs are
     computed per batch (teachers are frozen — Eq. 4's argmin is over the
     student only).
+
+    ``stacked_teachers=True``: ``teachers`` is one pytree whose leaves
+    carry a leading member axis (the vectorized engine's representation);
+    the teacher forward is a single (M, B, V) batched pass instead of a
+    member-at-a-time loop.
     """
     optimizer = sgd(lr, momentum=momentum)
     opt_state = optimizer.init(student)
     kd_step = make_kd_step(logits_fn, optimizer, temperature)
 
-    teacher_probs_fn = jax.jit(
-        lambda batch: ensemble_probs(teachers, batch, logits_fn, temperature))
+    if stacked_teachers:
+        teacher_probs_fn = jax.jit(
+            lambda batch: ensemble_probs_stacked(
+                teachers, batch, logits_fn, temperature))
+    else:
+        teacher_probs_fn = jax.jit(
+            lambda batch: ensemble_probs(teachers, batch, logits_fn,
+                                         temperature))
 
     losses = []
     n = len(server_batches)

@@ -25,7 +25,6 @@ faithful per step.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -19,7 +19,6 @@ transformer architectures.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
@@ -28,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distillation as dist
+from repro.core import engine as vec_engine
 from repro.core.aggregation import fedavg_aggregate, secure_aggregate
 from repro.core.grouping import assign_groups, sample_clients
 from repro.core.temporal import TemporalEnsemble
@@ -35,7 +35,7 @@ from repro.optim.optimizers import (
     Optimizer, apply_updates, scaffold_new_control, sgd, with_fedprox,
     with_scaffold,
 )
-from repro.utils.pytree import tree_zeros_like
+from repro.utils.pytree import tree_concat, tree_stack, tree_zeros_like
 
 PyTree = Any
 
@@ -67,6 +67,9 @@ class FedConfig:
     server_batch: int = 256
     temperature: float = 4.0
     distill_warmup_rounds: int = 0  # codistillation-style KD skip
+    # execution engine
+    execution: str = "sequential"   # sequential (oracle) | vectorized
+    client_sharding: str = "auto"   # auto | vmap | shard_map
     # misc
     secure_aggregation: bool = False
     seed: int = 0
@@ -76,6 +79,8 @@ class FedConfig:
         assert self.distill_target in ("main", "all", "none")
         assert self.ensemble_source in ("aggregated", "clients")
         assert self.local_algo in ("fedavg", "fedprox", "scaffold")
+        assert self.execution in ("sequential", "vectorized")
+        assert self.client_sharding in ("auto", "vmap", "shard_map")
         if self.distill_target != "none" and self.ensemble_source == "clients":
             assert not self.secure_aggregation, \
                 "client-model ensembles (FedDF/FedBE) are incompatible with " \
@@ -137,6 +142,7 @@ class FederatedRunner:
         self.cfg = cfg
         self.task = task
         self._train_step = None
+        self._engine = None
 
     # ---- init ----------------------------------------------------------
     def init_state(self) -> FedState:
@@ -211,6 +217,11 @@ class FederatedRunner:
 
     # ---- one round (Algorithm 1) -----------------------------------------
     def run_round(self, state: FedState) -> FedState:
+        if self.cfg.execution == "vectorized":
+            return self._run_round_vectorized(state)
+        return self._run_round_sequential(state)
+
+    def _run_round_sequential(self, state: FedState) -> FedState:
         cfg = self.cfg
         t = state.round + 1
         rng = np.random.default_rng(cfg.seed * 100_000 + t)
@@ -266,6 +277,105 @@ class FederatedRunner:
                     self.task.logits_fn,
                     steps=cfg.distill_steps, lr=cfg.server_lr,
                     temperature=cfg.temperature)
+
+        state.global_models = new_globals
+        state.round = t
+        rec = {"round": t, "active": len(active), **kd_info}
+        if self.task.eval_fn is not None:
+            rec["acc_main"] = self.task.eval_fn(new_globals[0])
+        state.history.append(rec)
+        return state
+
+    # ---- one round, vectorized engine ------------------------------------
+    def _make_engine(self) -> vec_engine.VectorizedClientEngine:
+        if self._engine is None:
+            from repro.launch.mesh import make_client_mesh
+            self._engine = vec_engine.VectorizedClientEngine(
+                self.task.loss_fn, self._make_optimizer(),
+                mesh=make_client_mesh(),
+                client_sharding=self.cfg.client_sharding)
+        return self._engine
+
+    def _run_round_vectorized(self, state: FedState) -> FedState:
+        """Same round semantics as the sequential oracle, with local
+        training / aggregation / teacher forwards over stacked client
+        axes (see core.engine).  Secure aggregation needs no simulation
+        here: pairwise masks cancel identically inside the fused Eq. 2
+        reduction, so the plain weighted mean IS the unmasked result.
+        """
+        cfg = self.cfg
+        t = state.round + 1
+        rng = np.random.default_rng(cfg.seed * 100_000 + t)
+
+        active = sample_clients(cfg.num_clients, cfg.participation, rng)
+        groups = assign_groups(active, cfg.K, rng)
+        eng = self._make_engine()
+        rplan = vec_engine.build_round_plan(self.task, cfg, groups, rng,
+                                            data_cache=eng.data_cache)
+        optimizer = eng.optimizer
+
+        stacked_k = tree_stack(state.global_models)  # (K, ...) once per round
+
+        def init_params_for(plan):
+            gid = jnp.asarray(plan.group_of)
+            return jax.tree.map(lambda x: x[gid], stacked_k)
+
+        def init_opt_state_for(plan, w0):
+            s0 = jax.vmap(optimizer.init)(w0)
+            if cfg.local_algo == "scaffold":
+                c_loc = tree_stack([state.scaffold_c_clients[int(c)]
+                                    for c in plan.cids])
+                nb = len(plan.cids)
+                c_glob = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (nb,) + x.shape),
+                    state.scaffold_c_global)
+                s0 = s0._replace(c_local=c_loc, c_global=c_glob)
+            return s0
+
+        stacked_clients, group_ids, sizes, buckets = eng.train_round(
+            rplan, init_params_for, init_opt_state_for)
+
+        if cfg.local_algo == "scaffold":
+            for plan, p, s, w0 in buckets:
+                new_c = jax.vmap(
+                    lambda st, a, b: scaffold_new_control(
+                        st, a, b, cfg.client_lr))(s, w0, p)
+                for i, cid in enumerate(plan.cids):
+                    state.scaffold_c_clients[int(cid)] = jax.tree.map(
+                        lambda x, i=i: x[i], new_c)
+            cs = state.scaffold_c_clients
+            state.scaffold_c_global = jax.tree.map(
+                lambda *xs: sum(xs) / len(xs), *cs)
+
+        # --- per-group aggregation (Eq. 2): one fused segment reduction ---
+        stacked_globals = vec_engine.aggregate_groups(
+            stacked_clients, sizes, group_ids, cfg.K)
+        new_globals = vec_engine.unstack_models(stacked_globals)
+
+        # --- temporal ensemble push (Eq. 5) ---
+        state.ensemble.push(t, new_globals)
+
+        # --- distillation (Eq. 3-4), teachers as one stacked forward ---
+        kd_info = {}
+        if cfg.distill_target != "none" and t > cfg.distill_warmup_rounds:
+            if cfg.ensemble_source == "clients":
+                teacher_stack = stacked_clients
+                if cfg.ensemble_extra_sampled:
+                    extras = self._sample_posterior(
+                        vec_engine.unstack_models(stacked_clients),
+                        list(sizes), cfg.ensemble_extra_sampled, t)
+                    extras.append(new_globals[0])
+                    teacher_stack = tree_concat(
+                        [teacher_stack, tree_stack(extras)])
+            else:
+                teacher_stack = tree_stack(state.ensemble.members())
+            targets = range(cfg.K) if cfg.distill_target == "all" else (0,)
+            for k in targets:
+                new_globals[k], kd_info = dist.distill(
+                    new_globals[k], teacher_stack, self.task.server_batches,
+                    self.task.logits_fn,
+                    steps=cfg.distill_steps, lr=cfg.server_lr,
+                    temperature=cfg.temperature, stacked_teachers=True)
 
         state.global_models = new_globals
         state.round = t

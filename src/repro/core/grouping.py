@@ -15,6 +15,21 @@ def sample_clients(num_clients: int, participation: float, rng: np.random.Genera
     return rng.choice(num_clients, size=min(n, num_clients), replace=False)
 
 
+def group_major_order(groups) -> tuple[np.ndarray, np.ndarray]:
+    """Flatten K groups into the round's canonical client order.
+
+    Group-major: group 0's clients first, then group 1's, ...  This is
+    both the order the sequential runner trains clients in and the row
+    order of the vectorized engine's stacked client axis, so the two
+    executions consume the shared round RNG identically.  Returns
+    ``(client_ids (C,), group_ids (C,))``.
+    """
+    cids = np.concatenate([np.asarray(g) for g in groups])
+    gids = np.concatenate([np.full(len(g), k, dtype=np.int32)
+                           for k, g in enumerate(groups)])
+    return cids, gids
+
+
 def assign_groups(active_clients: np.ndarray, K: int,
                   rng: np.random.Generator,
                   extra_to_main: bool = True) -> list[np.ndarray]:

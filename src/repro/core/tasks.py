@@ -5,7 +5,6 @@ synthetic CIFAR stand-in, with either the paper's ResNets or a small CNN
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -13,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.configs.resnet_cifar import ResNetConfig, get_resnet_config
+from repro.configs.resnet_cifar import get_resnet_config
 from repro.core.fedsdd import FedTask
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import SyntheticClassification, make_model_batch
@@ -43,6 +42,23 @@ def _cnn_logits(params, x):
     return h @ params["w"] + params["b"]
 
 
+# ---------------------------------------------------------------- tiny MLP
+def _init_mlp(key, num_classes: int = 10, width: int = 32):
+    ks = jax.random.split(key, 2)
+    d_in = 32 * 32 * 3
+    return {
+        "w1": jax.random.normal(ks[0], (d_in, width)) * (1.0 / np.sqrt(d_in)),
+        "b1": jnp.zeros((width,)),
+        "w2": jax.random.normal(ks[1], (width, num_classes)) * 0.1,
+        "b2": jnp.zeros((num_classes,)),
+    }
+
+
+def _mlp_logits(params, x):
+    h = x.reshape(x.shape[0], -1) @ params["w1"] + params["b1"]
+    return jax.nn.relu(h) @ params["w2"] + params["b2"]
+
+
 # ---------------------------------------------------------------- tasks
 def classification_task(model: str = "cnn",
                         num_clients: int = 20,
@@ -55,7 +71,8 @@ def classification_task(model: str = "cnn",
                         seed: int = 0) -> FedTask:
     """The paper's CIFAR setting on the synthetic stand-in.
 
-    model: "cnn" (fast) | "resnet20" | "resnet56" | "wrn16-2" (paper's).
+    model: "cnn" (fast) | "mlp" (tiny, dispatch-bound — engine benches)
+           | "resnet20" | "resnet56" | "wrn16-2" (paper's).
     """
     data = SyntheticClassification(num_classes=num_classes, num_train=num_train,
                                    num_server=num_server, noise=noise, seed=seed)
@@ -69,17 +86,19 @@ def classification_task(model: str = "cnn",
         for i in range(0, len(sx) - server_batch + 1, server_batch)
     ]
 
-    if model == "cnn":
-        init_fn = partial(_init_cnn, num_classes=num_classes)
-        logits_fn = lambda p, b: _cnn_logits(p, b["x"])
+    if model in ("cnn", "mlp"):
+        net = _cnn_logits if model == "cnn" else _mlp_logits
+        init_fn = partial(_init_cnn if model == "cnn" else _init_mlp,
+                          num_classes=num_classes)
+        logits_fn = lambda p, b: net(p, b["x"])
 
         def loss_fn(p, b):
-            logits = _cnn_logits(p, b["x"])
+            logits = net(p, b["x"])
             logp = jax.nn.log_softmax(logits)
             loss = -jnp.mean(jnp.take_along_axis(logp, b["y"][:, None], -1))
             return loss, {}
 
-        fwd = jax.jit(_cnn_logits)
+        fwd = jax.jit(net)
 
         def eval_fn(p):
             preds = []

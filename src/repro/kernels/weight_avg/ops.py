@@ -6,7 +6,6 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.weight_avg import kernel, ref
 
@@ -42,5 +41,32 @@ def weighted_average_pytree(stacked_tree, weights):
         N = x.shape[0]
         flat = x.reshape(N, -1)
         return weighted_average(flat, weights).reshape(x.shape[1:])
+
+    return jax.tree.map(leaf, stacked_tree)
+
+
+def group_weighted_average(stacked, weights, block_d: int | None = None):
+    """Batched multi-model path: stacked (G, N, D), weights (G, N) ->
+    (G, D) — all G group averages in one fused pass."""
+    if not _use_pallas():
+        return ref.group_weighted_average_ref(stacked, weights)
+    _, _, D = stacked.shape
+    db = block_d or min(kernel.DEFAULT_DB, max(128, D))
+    pad = (-D) % db
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, 0), (0, pad)))
+    out = kernel.multi_weighted_average(stacked, weights, block_d=db,
+                                        interpret=_interpret())
+    return out[:, :D]
+
+
+def group_weighted_average_pytree(stacked_tree, weights):
+    """Leaves with leading (G, N, ...) axes -> averaged leaves (G, ...)."""
+
+    def leaf(x):
+        G, N = x.shape[:2]
+        flat = x.reshape(G, N, -1)
+        return group_weighted_average(flat, weights).reshape(
+            (G,) + x.shape[2:])
 
     return jax.tree.map(leaf, stacked_tree)

@@ -9,3 +9,12 @@ def weighted_average_ref(stacked: jnp.ndarray, weights: jnp.ndarray):
     w = weights.astype(jnp.float32)
     w = w / jnp.sum(w)
     return jnp.sum(stacked.astype(jnp.float32) * w[:, None], axis=0).astype(stacked.dtype)
+
+
+def group_weighted_average_ref(stacked: jnp.ndarray, weights: jnp.ndarray):
+    """Batched multi-model Eq. 2: stacked (G, N, D), weights (G, N) ->
+    (G, D), normalizing weights per group."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w, axis=1, keepdims=True)
+    return jnp.einsum("gn,gnd->gd", w,
+                      stacked.astype(jnp.float32)).astype(stacked.dtype)

@@ -24,3 +24,14 @@ def make_local_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, n // data)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_client_mesh(num_devices: int | None = None):
+    """1-D ``('clients',)`` mesh for the vectorized client engine.
+
+    The engine stacks sampled clients along a leading axis and shard_maps
+    local training over this mesh; with one device (CPU tests) the engine
+    degenerates to plain vmap unless REPRO_FORCE_SHARD_MAP=1.
+    """
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("clients",))

@@ -26,7 +26,6 @@ Experiments (see EXPERIMENTS.md §Perf for the napkin math):
 """
 import argparse
 import dataclasses
-import json
 import traceback
 
 from repro.launch.dryrun import DEFAULT_OUT, lower_one, save_rec

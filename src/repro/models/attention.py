@@ -16,12 +16,11 @@ KV caches are plain dicts of arrays so they shard like any other pytree.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import apply_norm, apply_rope, dense_init
+from repro.models.layers import apply_rope, dense_init
 
 NEG_INF = -1e30
 

@@ -16,10 +16,9 @@ Modes:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import cached_property, partial
-from typing import Any, Optional
+from functools import cached_property
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,36 @@ from repro.configs.base import ModelConfig
 from repro.configs.shapes import InputShape
 
 
+# The vectorized client engine's stacking axis (launch.mesh.make_client_mesh)
+CLIENT_AXIS = "clients"
+
+
+def client_stack_pspec(stacked_tree):
+    """P('clients', None, ...) for every leaf of a client-stacked pytree
+    (params, optimizer state, or per-step batch stacks): the leading axis
+    is the stacked-client dim, everything else replicated — tensor
+    parallelism inside a client composes via the nested 'model' axis."""
+    return jax.tree.map(
+        lambda x: P(CLIENT_AXIS, *([None] * (x.ndim - 1))), stacked_tree)
+
+
 # ---------------------------------------------------------------- helpers
+def _keystr(path) -> str:
+    """'/'-joined simple key path; ``keystr(..., simple=True)`` only
+    exists in newer jax, so build it from the key entries directly."""
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
 def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
     if name is None:
         return 1
@@ -104,7 +133,7 @@ def param_pspec(params_shapes, cfg: ModelConfig, mesh: Mesh,
     rules = [(re.compile(pat), spec) for pat, spec in _param_rules(fsdp, tp_axis)]
 
     def assign(path, leaf):
-        pstr = jax.tree_util.keystr(path, simple=True, separator="/")
+        pstr = _keystr(path)
         shape = leaf.shape
         for pat, logical in rules:
             if pat.search(pstr):
@@ -161,7 +190,7 @@ def cache_pspec(cache_shapes, cfg: ModelConfig, mesh: Mesh, *,
     """
 
     def assign(path, leaf):
-        pstr = jax.tree_util.keystr(path, simple=True, separator="/")
+        pstr = _keystr(path)
         shape = leaf.shape
         # find the batch dim: first dim after optional stacked prefix.
         # stacked leaves come from the scan ('blocks') subtree.

@@ -8,6 +8,7 @@ weight-averaging Pallas kernel.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, Sequence
 
 import jax
@@ -70,6 +71,59 @@ def tree_stacked_weighted_mean(stacked: PyTree, weights) -> PyTree:
         return jnp.sum(x * w, axis=0)
 
     return jax.tree.map(leaf, stacked)
+
+
+def tree_stack(trees: Sequence[PyTree]) -> PyTree:
+    """List of congruent pytrees -> one pytree with a new leading axis.
+
+    The stacked form is the vectorized-engine representation: leaf i of
+    client c lives at ``stacked_leaf[c]``.
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(stacked: PyTree) -> list[PyTree]:
+    """Inverse of ``tree_stack``: split the leading axis back into a list."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(n)]
+
+
+def tree_concat(trees: Sequence[PyTree], axis: int = 0) -> PyTree:
+    """Concatenate congruent pytrees along an existing (leading) axis."""
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=axis), *trees)
+
+
+def tree_where(pred, on_true: PyTree, on_false: PyTree) -> PyTree:
+    """Leafwise ``jnp.where`` with a scalar/broadcastable predicate — the
+    masked-step combinator the vectorized engine uses for padded steps."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups",))
+def _group_weighted_mean(stacked, w, gid, *, num_groups):
+    # jitted: eager scatter_add dispatch is ~100x slower on CPU
+    totals = jax.ops.segment_sum(w, gid, num_segments=num_groups)
+    norm = w / totals[gid]
+
+    def leaf(x):
+        wx = norm.astype(x.dtype).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jax.ops.segment_sum(x * wx, gid, num_segments=num_groups)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def tree_group_weighted_mean(stacked: PyTree, weights, group_ids,
+                             num_groups: int) -> PyTree:
+    """Per-group Eq. 2 over a client-stacked pytree in one fused pass.
+
+    ``stacked`` leaves have shape (C, ...); ``group_ids`` (C,) maps each
+    client row to one of ``num_groups`` segments; returns leaves of shape
+    (num_groups, ...) where row g is the |X_i|-weighted mean of g's
+    clients.  Ragged groups need no padding — this is a segment reduction.
+    """
+    w = jnp.asarray(np.asarray(weights), dtype=jnp.float32)
+    gid = jnp.asarray(np.asarray(group_ids), dtype=jnp.int32)
+    return _group_weighted_mean(stacked, w, gid, num_groups=num_groups)
 
 
 def tree_dot(a: PyTree, b: PyTree):

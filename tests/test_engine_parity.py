@@ -1,0 +1,212 @@
+"""Vectorized client-execution engine vs the sequential oracle.
+
+The engine (core/engine.py) must reproduce the sequential runner's round
+results exactly (same seeds -> same batches -> allclose params/metrics)
+for every local algorithm, including ragged group sizes (sampled-client
+count not divisible by K) and heterogeneous client batch sizes (tiny
+shards bucketed by bs).  Also covers the batched multi-model weight_avg
+path and the stacked-teacher distillation forward.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distillation as dist
+from repro.core import engine as eng
+from repro.core.aggregation import fedavg_aggregate, fedavg_aggregate_grouped
+from repro.core.fedsdd import make_runner
+from repro.core.tasks import classification_task
+from repro.utils.pytree import tree_stack
+
+ATOL, RTOL = 1e-4, 1e-4
+
+
+@pytest.fixture(scope="module")
+def task():
+    # 7 clients: indivisible by K=2 -> ragged groups (4 vs 3)
+    return classification_task(model="cnn", num_clients=7, alpha=0.5,
+                               num_train=400, num_server=256, seed=0)
+
+
+def small(**kw):
+    base = dict(num_clients=7, participation=1.0, local_epochs=1,
+                client_lr=0.05, server_lr=0.05, distill_steps=3,
+                client_batch=32, rounds=2)
+    base.update(kw)
+    return base
+
+
+def assert_models_close(ms_a, ms_b):
+    assert len(ms_a) == len(ms_b)
+    for a, b in zip(ms_a, ms_b):
+        jax.tree.map(lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=RTOL, atol=ATOL), a, b)
+
+
+def run_pair(task, preset, **kw):
+    ss = make_runner(preset, task, **small(**kw)).run(rounds=2)
+    sv = make_runner(preset, task, execution="vectorized",
+                     **small(**kw)).run(rounds=2)
+    return ss, sv
+
+
+# ---------------------------------------------------------------- parity
+@pytest.mark.parametrize("preset", ["fedavg", "fedprox", "scaffold"])
+def test_local_algo_parity(task, preset):
+    ss, sv = run_pair(task, preset)
+    assert_models_close(ss.global_models, sv.global_models)
+    assert ss.history[-1]["acc_main"] == pytest.approx(
+        sv.history[-1]["acc_main"], abs=1e-3)
+
+
+def test_fedsdd_parity_with_distillation(task):
+    """Full Algorithm 1 (ragged K=2 groups over 7 clients + KD)."""
+    ss, sv = run_pair(task, "fedsdd", K=2)
+    assert_models_close(ss.global_models, sv.global_models)
+    assert ss.history[-1]["kd_steps"] == sv.history[-1]["kd_steps"]
+
+
+def test_scaffold_controls_parity(task):
+    ss, sv = run_pair(task, "scaffold")
+    for a, b in zip(ss.scaffold_c_clients, sv.scaffold_c_clients):
+        jax.tree.map(lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=RTOL, atol=ATOL), a, b)
+
+
+def test_parity_heterogeneous_batch_sizes():
+    """Tiny shards force |X_i| < client_batch for some clients, so the
+    engine must bucket clients by local batch size and still match."""
+    t = classification_task(model="cnn", num_clients=6, alpha=0.1,
+                            num_train=120, num_server=256, seed=3)
+    sizes = {len(d[0]) for d in t.client_data}
+    assert len(sizes) > 1, "fixture should produce heterogeneous shards"
+    ss = make_runner("fedsdd", t, K=2, **small(num_clients=6,
+                                               local_epochs=2)).run(rounds=2)
+    sv = make_runner("fedsdd", t, K=2, execution="vectorized",
+                     **small(num_clients=6, local_epochs=2)).run(rounds=2)
+    assert_models_close(ss.global_models, sv.global_models)
+
+
+def test_parity_partial_participation_single_bucket():
+    """Partial sampling + every shard >= client_batch: ONE bucket whose
+    sorted-cid row order differs from the round's group-major order —
+    the reassembly permutation must still align params with their
+    per-client weights and group ids (regression: the single-bucket
+    fast path once skipped it)."""
+    t = classification_task(model="cnn", num_clients=10, alpha=0.5,
+                            num_train=500, num_server=256, seed=5)
+    assert min(len(d[0]) for d in t.client_data) >= 32  # single bucket
+    kw = small(num_clients=10, participation=0.5, distill_steps=2)
+    ss = make_runner("fedsdd", t, K=2, **kw).run(rounds=3)
+    sv = make_runner("fedsdd", t, K=2, execution="vectorized",
+                     **kw).run(rounds=3)
+    assert_models_close(ss.global_models, sv.global_models)
+
+
+def test_parity_under_forced_shard_map(task, monkeypatch):
+    """shard_map over a 1-device 'clients' mesh must be a refactoring of
+    vmap, not a different computation."""
+    monkeypatch.setenv("REPRO_FORCE_SHARD_MAP", "1")
+    ss, sv = run_pair(task, "fedsdd", K=2)
+    assert_models_close(ss.global_models, sv.global_models)
+
+
+def test_client_teacher_stack_parity(task):
+    """FedDF-style client-model ensembles ride the same stacked path."""
+    ss, sv = run_pair(task, "feddf")
+    assert_models_close(ss.global_models, sv.global_models)
+
+
+# ------------------------------------------------- scalability structure
+def test_round_plan_matches_sequential_rng(task):
+    """The plan draws permutations in sequential order: rng state after
+    planning equals rng state after the sequential group loop."""
+    from repro.core.fedsdd import make_config
+    from repro.core.grouping import assign_groups, sample_clients
+    cfg = make_config("fedavg", **small())
+    rng_a = np.random.default_rng(1)
+    rng_b = np.random.default_rng(1)
+    act_a = sample_clients(cfg.num_clients, 1.0, rng_a)
+    act_b = sample_clients(cfg.num_clients, 1.0, rng_b)
+    groups_a = assign_groups(act_a, 1, rng_a)
+    groups_b = assign_groups(act_b, 1, rng_b)
+    eng.build_round_plan(task, cfg, groups_a, rng_a)
+    for g in groups_b:
+        for cid in g:
+            n = len(task.client_data[int(cid)][0])
+            for _ in range(cfg.local_epochs):
+                rng_b.permutation(n)
+    assert rng_a.bit_generator.state == rng_b.bit_generator.state
+
+
+def test_teacher_stack_size_independent_of_clients():
+    """Remark 2 in stacked form: the vectorized teacher bank's leading
+    axis is K*R however many clients participate."""
+    for n_clients in (4, 8):
+        t = classification_task(model="cnn", num_clients=n_clients,
+                                alpha=0.5, num_train=200, num_server=256)
+        st = make_runner("fedsdd", t, K=2, execution="vectorized",
+                         **small(num_clients=n_clients, distill_steps=2)
+                         ).run(rounds=1)
+        stack = tree_stack(st.ensemble.members())
+        assert jax.tree.leaves(stack)[0].shape[0] == 2  # K*R, not C
+
+
+def test_stacked_ensemble_probs_match_listwise(task):
+    key = jax.random.PRNGKey(0)
+    teachers = [task.init_fn(k) for k in jax.random.split(key, 3)]
+    batch = task.server_batches[0]
+    a = dist.ensemble_probs(teachers, batch, task.logits_fn, 4.0)
+    b = dist.ensemble_probs_stacked(tree_stack(teachers), batch,
+                                    task.logits_fn, 4.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- batched weight_avg
+def _models(rng, n):
+    return [{"w": jnp.asarray(rng.normal(0, 1, (4, 3)), jnp.float32),
+             "b": jnp.asarray(rng.normal(0, 1, (3,)), jnp.float32)}
+            for _ in range(n)]
+
+
+def test_grouped_aggregate_matches_per_group_listwise():
+    rng = np.random.default_rng(0)
+    ms = _models(rng, 6)
+    sizes = rng.integers(1, 50, 6)
+    gid = np.array([0, 0, 0, 0, 1, 1])  # ragged on purpose
+    agg = fedavg_aggregate_grouped(tree_stack(ms), sizes, gid, 2)
+    for g, sl in ((0, slice(0, 4)), (1, slice(4, 6))):
+        expect = fedavg_aggregate(ms[sl], sizes[sl])
+        jax.tree.map(lambda x, y, g=g: np.testing.assert_allclose(
+            np.asarray(x[g]), np.asarray(y), rtol=1e-5, atol=1e-6),
+            agg, expect)
+
+
+def test_multi_weight_avg_pallas_matches_ref(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    from repro.kernels.weight_avg import ops as wops
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (3, 5, 517)), jnp.float32)  # odd D
+    w = jnp.asarray(rng.integers(1, 40, (3, 5)), jnp.float32)
+    out = wops.group_weighted_average(x, w)
+    ref = jnp.einsum("gn,gnd->gd", w / w.sum(1, keepdims=True), x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_grouped_aggregate_uniform_routes_through_kernel(monkeypatch):
+    """Uniform group-major stacks take the batched multi-model kernel
+    path and still equal the listwise oracle."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    rng = np.random.default_rng(2)
+    ms = _models(rng, 6)
+    sizes = rng.integers(1, 50, 6)
+    gid = np.array([0, 0, 0, 1, 1, 1])
+    agg = fedavg_aggregate_grouped(tree_stack(ms), sizes, gid, 2)
+    for g, sl in ((0, slice(0, 3)), (1, slice(3, 6))):
+        expect = fedavg_aggregate(ms[sl], sizes[sl])
+        jax.tree.map(lambda x, y, g=g: np.testing.assert_allclose(
+            np.asarray(x[g]), np.asarray(y), rtol=1e-4, atol=1e-5),
+            agg, expect)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import distillation as dist
-from repro.core.fedsdd import FedConfig, PRESETS, make_config, make_runner
+from repro.core.fedsdd import PRESETS, make_config, make_runner
 from repro.core.tasks import classification_task
 
 

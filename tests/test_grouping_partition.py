@@ -2,7 +2,10 @@
 non-IID partitioner."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the dev extra: pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.grouping import assign_groups, sample_clients
 from repro.data.partition import dirichlet_partition, heterogeneity

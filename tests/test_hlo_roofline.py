@@ -1,9 +1,8 @@
 """utils/hlo.py: collective-bytes parser + roofline terms."""
-import numpy as np
 import pytest
 
 from repro.utils.hlo import (
-    TPUv5eSpec, collective_stats, duplicate_fusion_count, roofline
+    TPUv5eSpec, collective_stats, roofline
 )
 
 SAMPLE_HLO = """
@@ -52,7 +51,6 @@ def test_roofline_terms_and_dominance():
 
 def test_real_jit_module_parses(tmp_path):
     """End-to-end: lower a sharded computation and find its all-reduce."""
-    import os
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P

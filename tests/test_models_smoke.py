@@ -5,11 +5,9 @@ superblocks, d_model ≤ 256, ≤4 experts) and runs one forward + one train
 step on CPU, asserting output shapes and the absence of NaNs.  The FULL
 configs are exercised only via the dry-run (ShapeDtypeStructs).
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config

@@ -3,8 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.models.model_zoo import BlockKind, build_model, layer_schedule, split_schedule

@@ -1,9 +1,7 @@
 """Sharding policy: specs mirror the param tree and never request an
 indivisible partition (deliverable (e) support)."""
-import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P

@@ -7,7 +7,6 @@ the serving path, and checkpoint/resume.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core.fedsdd import make_runner
