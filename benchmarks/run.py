@@ -34,10 +34,12 @@ BENCHES = ["t2", "t3", "t4", "t5", "t6", "t7", "kern"]
 
 
 def run_smoke(csv: CSV) -> None:
-    """Tiny-shape invocations of the hot paths: Pallas kernel microbenches
-    plus one sequential-vs-vectorized engine round — fails loudly if a
-    kernel or the execution engine regresses."""
+    """Tiny-shape invocations of the hot paths: Pallas kernel microbenches,
+    one sequential-vs-vectorized engine round, and one legacy-vs-fused KD
+    phase — fails loudly if a kernel, the execution engine, or the KD
+    pipeline regresses."""
     from benchmarks import bench_kernels
+    from benchmarks.bench_distill import kd_throughput
     from benchmarks.bench_roundtime import measure_round_time
     bench_kernels.run(SMOKE, csv)
     for mode in ("sequential", "vectorized"):
@@ -45,6 +47,7 @@ def run_smoke(csv: CSV) -> None:
                                 local_epochs=1, reps=1)
         csv.add(f"smoke/roundtime_{mode}/C{SMOKE.num_clients}", dt * 1e6,
                 f"rounds_per_s={1.0 / dt:.2f}")
+    kd_throughput(csv, K=4, R=2, steps=20, reps=1, prefix="smoke")
 
 
 def main() -> None:

@@ -7,6 +7,11 @@ paper's ResNets and any assigned transformer architecture.
 
 The KL step dispatches through ``kernels.kd_loss.ops`` — the fused Pallas
 ensemble-KD kernel on TPU, its jnp oracle elsewhere.
+
+``distill`` here is the host-driven loop (one dispatch per step, teacher
+probs cached per batch on the host side).  It is kept as the parity
+oracle for the fully-jitted pipeline in ``repro.distill.pipeline``, which
+FedSDD selects with ``FedConfig.kd_pipeline="fused"``.
 """
 from __future__ import annotations
 
@@ -124,7 +129,9 @@ def distill(student: PyTree,
             cache[bi] = teacher_probs_fn(server_batches[bi])
         student, opt_state, loss = kd_step(student, opt_state,
                                            server_batches[bi], cache[bi])
-        losses.append(float(loss))
-    return student, {"kd_loss_first": losses[0] if losses else None,
-                     "kd_loss_last": losses[-1] if losses else None,
+        losses.append(loss)  # device scalar — converted ONCE below, so the
+        #                      loop never blocks on a device→host sync
+    first = float(losses[0]) if losses else None
+    last = float(losses[-1]) if losses else None
+    return student, {"kd_loss_first": first, "kd_loss_last": last,
                      "kd_steps": steps}

@@ -30,7 +30,7 @@ from repro.core import distillation as dist
 from repro.core import engine as vec_engine
 from repro.core.aggregation import fedavg_aggregate, secure_aggregate
 from repro.core.grouping import assign_groups, sample_clients
-from repro.core.temporal import TemporalEnsemble
+from repro.distill import KDPipeline, TeacherBank
 from repro.optim.optimizers import (
     Optimizer, apply_updates, scaffold_new_control, sgd, with_fedprox,
     with_scaffold,
@@ -70,6 +70,7 @@ class FedConfig:
     # execution engine
     execution: str = "sequential"   # sequential (oracle) | vectorized
     client_sharding: str = "auto"   # auto | vmap | shard_map
+    kd_pipeline: str = "legacy"     # legacy (oracle) | fused (one program)
     # misc
     secure_aggregation: bool = False
     seed: int = 0
@@ -81,6 +82,7 @@ class FedConfig:
         assert self.local_algo in ("fedavg", "fedprox", "scaffold")
         assert self.execution in ("sequential", "vectorized")
         assert self.client_sharding in ("auto", "vmap", "shard_map")
+        assert self.kd_pipeline in ("legacy", "fused")
         if self.distill_target != "none" and self.ensemble_source == "clients":
             assert not self.secure_aggregation, \
                 "client-model ensembles (FedDF/FedBE) are incompatible with " \
@@ -127,7 +129,7 @@ class FedTask:
 class FedState:
     round: int
     global_models: list[PyTree]          # index 0 = main global model
-    ensemble: TemporalEnsemble
+    ensemble: TeacherBank                # device-resident K·R teacher ring
     scaffold_c_global: Optional[PyTree] = None
     scaffold_c_clients: Optional[list[PyTree]] = None
     history: list[dict] = field(default_factory=list)
@@ -143,6 +145,7 @@ class FederatedRunner:
         self.task = task
         self._train_step = None
         self._engine = None
+        self._kd_pipe = None
 
     # ---- init ----------------------------------------------------------
     def init_state(self) -> FedState:
@@ -152,7 +155,7 @@ class FederatedRunner:
         state = FedState(
             round=0,
             global_models=models,
-            ensemble=TemporalEnsemble(cfg.K, cfg.R),
+            ensemble=TeacherBank(cfg.K, cfg.R),
         )
         if cfg.local_algo == "scaffold":
             state.scaffold_c_global = tree_zeros_like(models[0])
@@ -215,6 +218,52 @@ class FederatedRunner:
                 opt_state, w_start, params, cfg.client_lr)
         return params, n
 
+    # ---- distillation phase (Eq. 3-4), shared by both round paths --------
+    def _kd_pipeline(self) -> KDPipeline:
+        if self._kd_pipe is None:
+            cfg = self.cfg
+            self._kd_pipe = KDPipeline(
+                self.task.logits_fn, steps=cfg.distill_steps,
+                lr=cfg.server_lr, temperature=cfg.temperature)
+        return self._kd_pipe
+
+    def _distill_models(self, new_globals: list[PyTree], teachers,
+                        *, stacked: bool,
+                        stacked_students: PyTree | None = None) -> dict:
+        """Distill the round's targets in place; returns the kd record.
+
+        ``teachers``: a list of member pytrees (``stacked=False``) or one
+        pytree whose leaves carry the leading (M, ...) member axis.  The
+        fused pipeline always consumes the stacked form (the teacher bank
+        hands it over without re-stacking); the legacy oracle takes either.
+        ``stacked_students``: the (K, ...) stack of ``new_globals`` when
+        the caller already has one (the vectorized engine) — skips a
+        re-stack on the ``distill_target='all'`` path.
+        """
+        cfg = self.cfg
+        if cfg.kd_pipeline == "fused":
+            pipe = self._kd_pipeline()
+            tstack = teachers if stacked else tree_stack(list(teachers))
+            if cfg.distill_target == "all":
+                if stacked_students is None:
+                    stacked_students = tree_stack(new_globals)
+                out, kd_info = pipe.distill_all(
+                    stacked_students, tstack, self.task.server_batches)
+                new_globals[:] = vec_engine.unstack_models(out)
+            else:
+                new_globals[0], kd_info = pipe.distill(
+                    new_globals[0], tstack, self.task.server_batches)
+            return kd_info
+        kd_info = {}
+        targets = range(cfg.K) if cfg.distill_target == "all" else (0,)
+        for k in targets:
+            new_globals[k], kd_info = dist.distill(
+                new_globals[k], teachers, self.task.server_batches,
+                self.task.logits_fn,
+                steps=cfg.distill_steps, lr=cfg.server_lr,
+                temperature=cfg.temperature, stacked_teachers=stacked)
+        return kd_info
+
     # ---- one round (Algorithm 1) -----------------------------------------
     def run_round(self, state: FedState) -> FedState:
         if self.cfg.execution == "vectorized":
@@ -268,15 +317,16 @@ class FederatedRunner:
                         all_client_models, all_client_sizes,
                         cfg.ensemble_extra_sampled, t)
                     teachers.append(new_globals[0])
+                kd_info = self._distill_models(new_globals, teachers,
+                                               stacked=False)
+            elif cfg.kd_pipeline == "fused":
+                # fused path reads the (M, ...) stack straight off the bank
+                kd_info = self._distill_models(
+                    new_globals, state.ensemble.members_stacked(),
+                    stacked=True)
             else:
-                teachers = state.ensemble.members()
-            targets = range(cfg.K) if cfg.distill_target == "all" else (0,)
-            for k in targets:
-                new_globals[k], kd_info = dist.distill(
-                    new_globals[k], teachers, self.task.server_batches,
-                    self.task.logits_fn,
-                    steps=cfg.distill_steps, lr=cfg.server_lr,
-                    temperature=cfg.temperature)
+                kd_info = self._distill_models(
+                    new_globals, state.ensemble.members(), stacked=False)
 
         state.global_models = new_globals
         state.round = t
@@ -352,8 +402,9 @@ class FederatedRunner:
             stacked_clients, sizes, group_ids, cfg.K)
         new_globals = vec_engine.unstack_models(stacked_globals)
 
-        # --- temporal ensemble push (Eq. 5) ---
-        state.ensemble.push(t, new_globals)
+        # --- temporal ensemble push (Eq. 5): the (K, ...) stack goes into
+        # the device bank as-is, no per-model host hop ---
+        state.ensemble.push(t, stacked_globals)
 
         # --- distillation (Eq. 3-4), teachers as one stacked forward ---
         kd_info = {}
@@ -368,14 +419,10 @@ class FederatedRunner:
                     teacher_stack = tree_concat(
                         [teacher_stack, tree_stack(extras)])
             else:
-                teacher_stack = tree_stack(state.ensemble.members())
-            targets = range(cfg.K) if cfg.distill_target == "all" else (0,)
-            for k in targets:
-                new_globals[k], kd_info = dist.distill(
-                    new_globals[k], teacher_stack, self.task.server_batches,
-                    self.task.logits_fn,
-                    steps=cfg.distill_steps, lr=cfg.server_lr,
-                    temperature=cfg.temperature, stacked_teachers=True)
+                teacher_stack = state.ensemble.members_stacked()
+            kd_info = self._distill_models(new_globals, teacher_stack,
+                                           stacked=True,
+                                           stacked_students=stacked_globals)
 
         state.global_models = new_globals
         state.round = t

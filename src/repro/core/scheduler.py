@@ -28,9 +28,18 @@ class Workload:
     K: int                       # groups (1 for FedDF-style)
     clients_per_round: int
     local_train_time: float      # per client
-    kd_time: float               # per round on the server
+    kd_time: float               # per round on the server (KD steps)
     concurrent_clients: int = 1  # how many clients can train at once
     kd_blocks_all: bool = True   # FedDF: True; FedSDD: False
+    # KD-pipeline term: the fused server pipeline splits the KD job into a
+    # once-per-round teacher-precompute pass (scales with ensemble size M)
+    # plus the step schedule (independent of M once probs are cached).
+    # kd_time models the steps; kd_precompute_time the teacher pass.
+    kd_precompute_time: float = 0.0
+
+    @property
+    def kd_total(self) -> float:
+        return self.kd_time + self.kd_precompute_time
 
 
 @dataclass
@@ -75,18 +84,20 @@ def simulate(w: Workload) -> Trace:
                 ends.append(end)
             group_agg_done[k] = max(ends)
         # server KD for this round needs: FedSDD — all group aggregates
-        # (ensemble) but only gates group 0; FedDF — everything
-        kd_start = max(group_agg_done) if w.kd_time else 0.0
-        kd_end = kd_start + w.kd_time
-        if w.kd_time:
+        # (ensemble) but only gates group 0; FedDF — everything.  The KD
+        # job is precompute (teacher pass) + step schedule, back to back.
+        kd = w.kd_total
+        kd_start = max(group_agg_done) if kd else 0.0
+        kd_end = kd_start + kd
+        if kd:
             trace.add(kd_start, kd_end, f"r{t}/KD")
         kd_done = kd_end
         for k in range(w.K):
             if w.kd_blocks_all:
-                group_ready[k] = kd_end if w.kd_time else group_agg_done[k]
+                group_ready[k] = kd_end if kd else group_agg_done[k]
             else:
                 # FedSDD: only the main global model waits for KD
-                group_ready[k] = kd_end if (k == 0 and w.kd_time) else group_agg_done[k]
+                group_ready[k] = kd_end if (k == 0 and kd) else group_agg_done[k]
     return trace
 
 
@@ -94,10 +105,20 @@ def round_time_comparison(num_clients: int, K: int = 4,
                           local_train_time: float = 100.0,
                           kd_time_per_member: float = 10.0,
                           rounds: int = 4,
-                          concurrent_clients: int = 1) -> dict[str, float]:
+                          concurrent_clients: int = 1,
+                          kd_pipeline_speedup: float = 1.0,
+                          kd_precompute_share: float = 0.2) -> dict[str, float]:
     """Average per-round makespan for FedAvg / FedDF / FedSDD with the same
     client pool — the structure of Table 3: FedDF's KD time scales with the
-    number of clients (ensemble = C members), FedSDD's with K·R only."""
+    number of clients (ensemble = C members), FedSDD's with K·R only.
+
+    ``kd_pipeline_speedup`` > 1 adds a ``fedsdd_fused`` row modelling the
+    fused KD pipeline: the KD job splits into the once-per-round teacher
+    precompute (``kd_precompute_share`` of the legacy job — one batched
+    pass per member either way, so it does not speed up) plus the step
+    schedule, which shrinks by the measured steps/sec speedup (see
+    ``benchmarks/bench_distill.kd_throughput``).
+    """
     out = {}
     fedavg = simulate(Workload(rounds, 1, num_clients, local_train_time, 0.0,
                                concurrent_clients))
@@ -110,4 +131,12 @@ def round_time_comparison(num_clients: int, K: int = 4,
                                kd_time_per_member * K,
                                concurrent_clients, kd_blocks_all=False))
     out["fedsdd"] = fedsdd.makespan / rounds
+    if kd_pipeline_speedup != 1.0:
+        kd_legacy = kd_time_per_member * K
+        fused = simulate(Workload(
+            rounds, K, num_clients, local_train_time,
+            kd_legacy * (1 - kd_precompute_share) / kd_pipeline_speedup,
+            concurrent_clients, kd_blocks_all=False,
+            kd_precompute_time=kd_legacy * kd_precompute_share))
+        out["fedsdd_fused"] = fused.makespan / rounds
     return out

@@ -1,49 +1,19 @@
-"""Temporal ensembling (paper §3.1.3, Eq. 5).
+"""Temporal ensembling (paper §3.1.3, Eq. 5) — compatibility shim.
 
-The teacher ensemble is built from the checkpoints of all K global models
-over the last R rounds — K·R members total — "emulating more participating
-clients" without slowing individual-model convergence.  The hot ring lives
-in memory; ``spill_dir`` optionally persists evicted rounds through the
-checkpointer for crash recovery.
+The temporal ensemble used to live here as host-side checkpoint lists
+(re-stacked and re-uploaded every round).  It is now the device-resident
+ring buffer ``repro.distill.teacher_bank.TeacherBank``: one stacked
+pytree on device, in-place slot writes with donated buffers, the same
+``push`` / ``members`` / ``num_members`` / ``rounds_held`` surface, and
+the same ``spill_dir`` crash-recovery format through ``fedckpt``.
+
+``TemporalEnsemble`` remains as an alias so existing imports keep
+working; new code should import ``TeacherBank`` from ``repro.distill``.
 """
 from __future__ import annotations
 
-import os
-from collections import OrderedDict
-from typing import Any, Sequence
+from repro.distill.teacher_bank import TeacherBank
 
-from repro.fedckpt.checkpointer import save_pytree
+TemporalEnsemble = TeacherBank
 
-PyTree = Any
-
-
-class TemporalEnsemble:
-    def __init__(self, K: int, R: int, spill_dir: str | None = None):
-        assert K >= 1 and R >= 1
-        self.K, self.R = K, R
-        self._rounds: OrderedDict[int, list[PyTree]] = OrderedDict()
-        self.spill_dir = spill_dir
-
-    def push(self, round_idx: int, global_models: Sequence[PyTree]) -> None:
-        assert len(global_models) == self.K, (len(global_models), self.K)
-        self._rounds[round_idx] = list(global_models)
-        while len(self._rounds) > self.R:
-            r, models = self._rounds.popitem(last=False)
-            if self.spill_dir:
-                for k, m in enumerate(models):
-                    save_pytree(os.path.join(self.spill_dir, f"r{r:05d}_g{k}.npz"), m)
-
-    def members(self) -> list[PyTree]:
-        """Flat teacher list {w_{t-r,k}}, newest round first — size ≤ K·R
-        (fewer during the first R−1 rounds)."""
-        out = []
-        for r in sorted(self._rounds, reverse=True):
-            out.extend(self._rounds[r])
-        return out
-
-    @property
-    def num_members(self) -> int:
-        return sum(len(v) for v in self._rounds.values())
-
-    def rounds_held(self) -> list[int]:
-        return sorted(self._rounds)
+__all__ = ["TemporalEnsemble", "TeacherBank"]

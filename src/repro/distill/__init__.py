@@ -1,0 +1,19 @@
+"""Server-side distillation subsystem (paper §3.1.2-§3.1.3, Eqs. 3-5).
+
+Two pieces, both built for device residency:
+
+  * ``TeacherBank`` — the K·R temporal-ensemble checkpoints as ONE stacked
+    pytree ring buffer on device (``teacher_bank``), replacing the old
+    host-list ``core.temporal.TemporalEnsemble`` (which now aliases it).
+  * ``KDPipeline`` — the fully-jitted KD phase (``pipeline``): teacher
+    probs for the whole distillation set precomputed once per round, the
+    complete ``distill_steps`` schedule as one ``lax.scan`` program, and a
+    vmapped multi-student path for ``distill_target='all'``.
+
+The legacy host-driven loop (``core.distillation.distill``) remains the
+parity oracle behind ``FedConfig.kd_pipeline="legacy"``.
+"""
+from repro.distill.pipeline import KDPipeline, stack_server_batches
+from repro.distill.teacher_bank import TeacherBank
+
+__all__ = ["KDPipeline", "TeacherBank", "stack_server_batches"]

@@ -1,0 +1,144 @@
+"""Device-resident teacher bank (paper §3.1.3, Eq. 5).
+
+The teacher ensemble is the checkpoints of all K global models over the
+last R rounds.  The old ``core.temporal.TemporalEnsemble`` kept them as
+host-side pytree lists that were re-stacked and re-uploaded every round;
+here the whole bank is ONE stacked pytree held on device (leaves
+``(R, K, ...)``) and ``push`` is an in-place ``dynamic_update_index_in_dim``
+with the old buffer donated — no host round-trips, no re-stacking, and the
+fused KD pipeline reads its ``(M, ...)`` teacher stack straight out of the
+bank (``members_stacked``).
+
+Spill-to-disk is retained for huge models: when ``spill_dir`` is set, a
+round evicted from the ring is persisted through ``fedckpt`` (one ``.npz``
+per member, ``r{round:05d}_g{k}.npz``) before its slot is overwritten —
+the only device→host transfer the bank ever does.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.fedckpt.checkpointer import spill_members
+from repro.utils.pytree import tree_stack, tree_unstack
+
+PyTree = Any
+
+_RING_WRITE = None
+_GATHER = None
+
+
+def _ring_write_fn():
+    """Jitted slot write, built lazily so backend choice is settled.
+
+    The bank buffer is donated on accelerators (true in-place update);
+    XLA:CPU cannot reuse donated buffers, so donation is skipped there to
+    avoid per-call warnings.
+    """
+    global _RING_WRITE
+    if _RING_WRITE is None:
+        def write(bank, member_stack, slot):
+            return jax.tree.map(
+                lambda b, m: jax.lax.dynamic_update_index_in_dim(
+                    b, m.astype(b.dtype), slot, 0),
+                bank, member_stack)
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        _RING_WRITE = jax.jit(write, donate_argnums=donate)
+    return _RING_WRITE
+
+
+def _gather_fn():
+    global _GATHER
+    if _GATHER is None:
+        def gather(bank, order):
+            # (R, K, ...) -> rounds in `order`, flattened to (m·K, ...)
+            def leaf(b):
+                g = jnp.take(b, order, axis=0)
+                return g.reshape((-1,) + b.shape[2:])
+            return jax.tree.map(leaf, bank)
+        _GATHER = jax.jit(gather)
+    return _GATHER
+
+
+class TeacherBank:
+    """Ring buffer of the last R rounds' K aggregated checkpoints.
+
+    API-compatible with the old host-list ``TemporalEnsemble`` (``push`` /
+    ``members`` / ``num_members`` / ``rounds_held``), plus
+    ``members_stacked()`` — the ``(M, ...)`` stacked teacher pytree the
+    vectorized engine and the fused KD pipeline consume directly, M = K ×
+    rounds-held, newest round first (fewer than K·R during the first R−1
+    rounds).
+    """
+
+    def __init__(self, K: int, R: int, spill_dir: str | None = None):
+        assert K >= 1 and R >= 1
+        self.K, self.R = K, R
+        self.spill_dir = spill_dir
+        self._bank: PyTree | None = None           # leaves (R, K, ...)
+        self._slot_rounds: list[int | None] = [None] * R
+        self._cursor = 0
+
+    # ------------------------------------------------------------- write
+    def push(self, round_idx: int, global_models: Sequence[PyTree] | PyTree,
+             ) -> None:
+        """Insert one round's K models, evicting (and spilling) the oldest.
+
+        ``global_models``: list of K pytrees, or one pytree whose leaves
+        already carry the leading (K, ...) model axis (the vectorized
+        engine's representation — no re-stacking).
+        """
+        if isinstance(global_models, (list, tuple)):
+            assert len(global_models) == self.K, (len(global_models), self.K)
+            member_stack = tree_stack(list(global_models))
+        else:
+            member_stack = global_models
+            lead = jax.tree.leaves(member_stack)[0].shape[0]
+            assert lead == self.K, (lead, self.K)
+        if self._bank is None:
+            self._bank = jax.tree.map(
+                lambda m: jnp.zeros((self.R,) + m.shape, m.dtype),
+                member_stack)
+        slot = self._cursor
+        evicted = self._slot_rounds[slot]
+        if evicted is not None and self.spill_dir:
+            spill_members(self.spill_dir, evicted, self.round_stack(slot))
+        self._bank = _ring_write_fn()(self._bank, member_stack,
+                                      jnp.int32(slot))
+        self._slot_rounds[slot] = round_idx
+        self._cursor = (slot + 1) % self.R
+
+    # ------------------------------------------------------------- read
+    def round_stack(self, slot: int) -> PyTree:
+        """(K, ...) stack of one ring slot."""
+        return jax.tree.map(lambda b: b[slot], self._bank)
+
+    def _slots_newest_first(self) -> list[int]:
+        held = [(r, s) for s, r in enumerate(self._slot_rounds)
+                if r is not None]
+        held.sort(reverse=True)
+        return [s for _, s in held]
+
+    def members_stacked(self) -> PyTree | None:
+        """(M, ...) stacked teachers, newest round first; None if empty."""
+        order = self._slots_newest_first()
+        if not order:
+            return None
+        return _gather_fn()(self._bank, jnp.asarray(order, jnp.int32))
+
+    def members(self) -> list[PyTree]:
+        """Flat teacher list {w_{t-r,k}}, newest round first — the legacy
+        host-list view (each member is a fresh gather, not a bank alias,
+        so holding members across a later ``push`` is safe even with
+        donation)."""
+        stacked = self.members_stacked()
+        return [] if stacked is None else tree_unstack(stacked)
+
+    @property
+    def num_members(self) -> int:
+        return self.K * sum(r is not None for r in self._slot_rounds)
+
+    def rounds_held(self) -> list[int]:
+        return sorted(r for r in self._slot_rounds if r is not None)

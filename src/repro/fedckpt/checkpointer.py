@@ -40,6 +40,22 @@ def save_pytree(path: str, tree: PyTree) -> None:
     np.savez(path, **_flatten(tree))
 
 
+def spill_members(directory: str, round_idx: int, stacked: PyTree,
+                  ) -> list[str]:
+    """Persist one evicted teacher-bank round: member k of the (K, ...)-
+    stacked pytree goes to ``r{round:05d}_g{k}.npz`` (one ``save_pytree``
+    per member, the format ``load_pytree`` restores from).  This is the
+    spill path for models too large to keep more than R rounds on device.
+    """
+    K = jax.tree.leaves(stacked)[0].shape[0]
+    paths = []
+    for k in range(K):
+        p = os.path.join(directory, f"r{round_idx:05d}_g{k}.npz")
+        save_pytree(p, jax.tree.map(lambda x, k=k: x[k], stacked))
+        paths.append(p)
+    return paths
+
+
 def load_pytree(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (shapes/dtypes must match)."""
     data = np.load(path if path.endswith(".npz") else path + ".npz")

@@ -82,6 +82,20 @@ def ensemble_softmax(teacher_logits, temperature: float = 1.0):
     return ref.ensemble_softmax_ref(teacher_logits, temperature)
 
 
+def ensemble_softmax_many(teacher_logits, temperature: float = 1.0):
+    """(M, n_batches, B, V) -> (n_batches, B, V): ensemble probs for the
+    WHOLE distillation set in one pass.
+
+    The KD pipeline precomputes every server batch's teacher probs once
+    per round; merging the (n_batches, B) row dims lets the same
+    ``ensemble_softmax`` kernel invocation (one grid, one HBM sweep of the
+    teacher stack) serve any n_batches instead of dispatching per batch.
+    """
+    M, nB, B, V = teacher_logits.shape
+    out = ensemble_softmax(teacher_logits.reshape(M, nB * B, V), temperature)
+    return out.reshape(nB, B, V)
+
+
 def ensemble_kd_loss(student_logits, teacher_logits, temperature: float = 1.0):
     """Fully fused path: teacher stack (K, B, V) + student (B, V) -> loss."""
     return kd_loss(student_logits,

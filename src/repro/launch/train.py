@@ -42,6 +42,15 @@ def main() -> None:
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--server-lr", type=float, default=0.05)
     ap.add_argument("--distill-steps", type=int, default=50)
+    ap.add_argument("--execution", default="sequential",
+                    choices=["sequential", "vectorized"],
+                    help="client-execution engine (vectorized = fused "
+                         "vmap/shard_map round loop)")
+    ap.add_argument("--kd-pipeline", default="legacy",
+                    choices=["legacy", "fused"],
+                    help="server KD phase: legacy host-driven loop (the "
+                         "oracle, default until fused has soaked) or the "
+                         "fully-jitted fused pipeline")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None, help="write history JSON here")
@@ -61,6 +70,7 @@ def main() -> None:
         num_clients=args.clients, participation=args.participation,
         rounds=args.rounds, local_epochs=args.local_epochs,
         distill_steps=args.distill_steps, seed=args.seed,
+        execution=args.execution, kd_pipeline=args.kd_pipeline,
         **({"K": args.K, "R": args.R}
            if PRESETS[args.preset].get("K", 1) > 1 else {}),
         **overrides)

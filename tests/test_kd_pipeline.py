@@ -1,0 +1,173 @@
+"""Fused KD pipeline vs the legacy host-driven oracle.
+
+``FedConfig.kd_pipeline="fused"`` (repro.distill.pipeline) must reproduce
+``"legacy"`` (core.distillation.distill) allclose: same teacher probs,
+same step schedule, same optimizer — only the execution strategy (one
+precompute + one lax.scan program vs a host loop with per-batch caches)
+differs.  Covered: distill_target main/all, ensemble_source='aggregated',
+K∈{1,4}, R∈{1,2}, scan AND stepped modes, plus the module-level pipeline
+pieces (batch stacking, teacher precompute, loss trajectory).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distillation as dist
+from repro.core.fedsdd import make_runner
+from repro.core.tasks import classification_task
+from repro.distill import KDPipeline, stack_server_batches
+from repro.utils.pytree import tree_stack
+
+ATOL, RTOL = 2e-4, 2e-4
+
+
+@pytest.fixture(scope="module")
+def task():
+    return classification_task(model="cnn", num_clients=6, alpha=0.5,
+                               num_train=300, num_server=256, seed=0)
+
+
+def small(**kw):
+    base = dict(num_clients=6, participation=1.0, local_epochs=1,
+                client_lr=0.05, server_lr=0.05, distill_steps=4,
+                client_batch=32)
+    base.update(kw)
+    return base
+
+
+def assert_models_close(ms_a, ms_b):
+    assert len(ms_a) == len(ms_b)
+    for a, b in zip(ms_a, ms_b):
+        jax.tree.map(lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=RTOL, atol=ATOL), a, b)
+
+
+# ------------------------------------------------------------- end-to-end
+@pytest.mark.parametrize("K,R", [(1, 1), (1, 2), (4, 1), (4, 2)])
+@pytest.mark.parametrize("target_preset",
+                         ["fedsdd", "fedsdd_basic_kd"])  # main | all
+def test_fused_matches_legacy(task, target_preset, K, R):
+    kw = small(K=K, R=R)
+    legacy = make_runner(target_preset, task, kd_pipeline="legacy",
+                         **kw).run(rounds=2)
+    fused = make_runner(target_preset, task, kd_pipeline="fused",
+                        **kw).run(rounds=2)
+    assert_models_close(legacy.global_models, fused.global_models)
+    assert legacy.history[-1]["kd_steps"] == fused.history[-1]["kd_steps"]
+
+
+@pytest.mark.parametrize("mode", ["scan", "stepped"])
+def test_fused_matches_legacy_both_step_modes(task, mode, monkeypatch):
+    monkeypatch.setenv("REPRO_ENGINE_STEP_MODE", mode)
+    kw = small(K=4, R=2)
+    legacy = make_runner("fedsdd", task, kd_pipeline="legacy",
+                         **kw).run(rounds=2)
+    fused = make_runner("fedsdd", task, kd_pipeline="fused",
+                        **kw).run(rounds=2)
+    assert_models_close(legacy.global_models, fused.global_models)
+
+
+def test_fused_under_vectorized_engine(task):
+    """kd_pipeline and execution engine compose: vectorized+fused equals
+    the all-oracle sequential+legacy run."""
+    kw = small(K=2, R=2)
+    oracle = make_runner("fedsdd", task, **kw).run(rounds=2)
+    both = make_runner("fedsdd", task, execution="vectorized",
+                       kd_pipeline="fused", **kw).run(rounds=2)
+    assert_models_close(oracle.global_models, both.global_models)
+
+
+def test_fused_multi_student_distills_every_model(task):
+    """distill_target='all': every global model must move (the vmapped
+    multi-student program really runs K students, not just the main)."""
+    kw = small(K=4, distill_steps=6)
+    runner = make_runner("fedsdd_basic_kd", task, kd_pipeline="fused", **kw)
+    state = runner.init_state()
+    pre = [jax.tree.map(lambda x: np.asarray(x).copy(), m)
+           for m in state.global_models]
+    state = runner.run(rounds=1, state=state)
+    for before, after in zip(pre, state.global_models):
+        moved = sum(float(np.abs(np.asarray(x) - y).max())
+                    for x, y in zip(jax.tree.leaves(after),
+                                    jax.tree.leaves(before)))
+        assert moved > 0.0
+
+
+# ------------------------------------------------------------- unit level
+def _linear_logits(p, b):
+    return b["x"] @ p["w"]
+
+
+def _mk(seed, d=6, v=4):
+    r = np.random.default_rng(seed)
+    return {"w": jnp.asarray(r.normal(0, 1, (d, v)), jnp.float32)}
+
+
+def _bx(seed, n=16, d=6):
+    r = np.random.default_rng(seed)
+    return {"x": jnp.asarray(r.normal(0, 1, (n, d)), jnp.float32)}
+
+
+def test_precomputed_probs_match_per_batch_oracle():
+    teachers = [_mk(i) for i in range(3)]
+    batches = [_bx(i) for i in range(4)]
+    pipe = KDPipeline(_linear_logits, steps=1, lr=0.1, temperature=3.0)
+    probs = pipe.precompute_teacher_probs(tree_stack(teachers),
+                                          stack_server_batches(batches))
+    assert probs.shape == (4, 16, 4)
+    for i, b in enumerate(batches):
+        expect = dist.ensemble_probs(teachers, b, _linear_logits, 3.0)
+        np.testing.assert_allclose(np.asarray(probs[i]), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fused_loss_trajectory_matches_legacy():
+    """First/last losses agree with the oracle's — the scan consumes
+    batches in the identical s % n order."""
+    teachers = [_mk(i) for i in range(2)]
+    student = _mk(99)
+    batches = [_bx(i) for i in range(3)]
+    _, info_l = dist.distill(student, teachers, batches, _linear_logits,
+                             steps=25, lr=0.3, temperature=2.0)
+    pipe = KDPipeline(_linear_logits, steps=25, lr=0.3, temperature=2.0)
+    _, info_f = pipe.distill(student, tree_stack(teachers), batches)
+    assert info_f["kd_loss_first"] == pytest.approx(info_l["kd_loss_first"],
+                                                    rel=1e-4)
+    assert info_f["kd_loss_last"] == pytest.approx(info_l["kd_loss_last"],
+                                                   rel=1e-4)
+    assert info_f["kd_loss_last"] < info_f["kd_loss_first"]
+
+
+def test_distill_all_matches_sequential_distills():
+    teachers = [_mk(i) for i in range(4)]
+    students = [_mk(40 + i) for i in range(3)]
+    batches = [_bx(i) for i in range(2)]
+    pipe = KDPipeline(_linear_logits, steps=30, lr=0.2, temperature=4.0)
+    multi, _ = pipe.distill_all(tree_stack(students), tree_stack(teachers),
+                                batches)
+    for i, s in enumerate(students):
+        one, _ = dist.distill(s, teachers, batches, _linear_logits,
+                              steps=30, lr=0.2, temperature=4.0)
+        np.testing.assert_allclose(np.asarray(multi["w"][i]),
+                                   np.asarray(one["w"]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_ragged_server_batches_rejected():
+    batches = [_bx(0, n=16), _bx(1, n=12)]
+    with pytest.raises(ValueError, match="same-shape server batches"):
+        stack_server_batches(batches)
+
+
+def test_legacy_info_fields_preserved():
+    """The oracle's host-sync fix must not change its reported record."""
+    teachers = [_mk(i) for i in range(2)]
+    _, info = dist.distill(_mk(9), teachers, [_bx(0)], _linear_logits,
+                           steps=3, lr=0.1)
+    assert set(info) == {"kd_loss_first", "kd_loss_last", "kd_steps"}
+    assert isinstance(info["kd_loss_first"], float)
+    assert info["kd_steps"] == 3
+    _, empty = dist.distill(_mk(9), teachers, [_bx(0)], _linear_logits,
+                            steps=0, lr=0.1)
+    assert empty["kd_loss_first"] is None and empty["kd_loss_last"] is None

@@ -49,6 +49,20 @@ def test_kd_loss_zero_when_student_equals_teacher():
     assert float(ops.kd_loss(sl, tp, 4.0)) < 1e-5
 
 
+@pytest.mark.parametrize("M,nB,B,V", [(2, 3, 4, 128), (8, 2, 4, 257)])
+def test_ensemble_softmax_many_matches_per_batch(M, nB, B, V):
+    """The KD pipeline's whole-set precompute (merged batch dims, one
+    kernel sweep) must equal per-batch ensemble_softmax calls."""
+    from repro.kernels.kd_loss import ops
+    tl = jax.random.normal(jax.random.PRNGKey(M + V), (M, nB, B, V)) * 3
+    got = ops.ensemble_softmax_many(tl, 4.0)
+    assert got.shape == (nB, B, V)
+    for i in range(nB):
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.asarray(ops.ensemble_softmax(tl[:, i], 4.0)),
+            atol=1e-6)
+
+
 # ---------------------------------------------------------------- weight_avg
 @pytest.mark.parametrize("N,D", [(2, 128), (8, 1000), (16, 65536), (3, 7)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -37,6 +37,27 @@ def test_zero_kd_equals_fedavg():
     assert abs(t.makespan - 3 * 2 * 5.0) < 1e-6
 
 
+def test_kd_pipeline_term_shortens_fedsdd_round():
+    """The fused-pipeline row: same precompute-per-member cost, KD steps
+    shrunk by the measured speedup — strictly between FedAvg and stock
+    FedSDD when clients are the constraint."""
+    r = round_time_comparison(4, K=4, local_train_time=10.0,
+                              kd_time_per_member=8.0, rounds=4,
+                              concurrent_clients=1, kd_pipeline_speedup=4.0)
+    assert "fedsdd_fused" in r
+    assert r["fedavg"] <= r["fedsdd_fused"] <= r["fedsdd"]
+    # default (speedup=1) keeps the legacy 3-row output
+    assert "fedsdd_fused" not in round_time_comparison(4)
+
+
+def test_kd_precompute_extends_kd_job():
+    base = dict(rounds=2, K=1, clients_per_round=2, local_train_time=5.0,
+                kd_time=3.0, concurrent_clients=2)
+    plain = simulate(Workload(**base))
+    with_pre = simulate(Workload(**base, kd_precompute_time=2.0))
+    assert with_pre.makespan == plain.makespan + 2 * 2.0
+
+
 def test_trace_events_cover_all_jobs():
     w = Workload(rounds=2, K=2, clients_per_round=4, local_train_time=1.0,
                  kd_time=1.0, concurrent_clients=4)

@@ -1,8 +1,20 @@
-"""Temporal-ensembling ring semantics (§3.1.3, Eq. 5)."""
+"""Temporal-ensembling ring semantics (§3.1.3, Eq. 5).
+
+``TemporalEnsemble`` is now the device-resident ``TeacherBank`` ring
+buffer; the legacy host-list surface must behave identically, and the
+bank-specific pieces (stacked view, spill round-trip, wraparound
+bookkeeping) are covered below.
+"""
+import os
+
+import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.temporal import TemporalEnsemble
+from repro.distill import TeacherBank
+from repro.fedckpt.checkpointer import load_pytree
 
 
 def model(v):
@@ -48,3 +60,77 @@ def test_spill_to_disk(tmp_path):
     te.push(2, [model(2)])
     spilled = list(tmp_path.iterdir())
     assert len(spilled) == 1 and "r00001_g0" in spilled[0].name
+
+
+# ------------------------------------------------- device-bank specifics
+def test_temporal_ensemble_is_teacher_bank():
+    """The compat alias and the bank are the same class."""
+    assert TemporalEnsemble is TeacherBank
+
+
+def test_spill_dir_round_trip(tmp_path):
+    """Evicted members must restore bit-exact through fedckpt."""
+    te = TeacherBank(K=2, R=1, spill_dir=str(tmp_path))
+    m1, m2 = model(1.5), model(-2.25)
+    te.push(1, [m1, m2])
+    te.push(2, [model(9), model(10)])
+    for k, orig in ((0, m1), (1, m2)):
+        back = load_pytree(os.path.join(str(tmp_path), f"r00001_g{k}.npz"),
+                           model(0))
+        np.testing.assert_array_equal(np.asarray(back["w"]),
+                                      np.asarray(orig["w"]))
+
+
+def test_ring_eviction_order_r2(tmp_path):
+    """R>1: eviction is strictly oldest-round-first as the ring wraps,
+    spilling each evicted round exactly once."""
+    te = TeacherBank(K=1, R=2, spill_dir=str(tmp_path))
+    evictions = []
+    for r in range(1, 7):
+        before = set(te.rounds_held())
+        te.push(r, [model(r)])
+        evictions += sorted(before - set(te.rounds_held()))
+    assert evictions == [1, 2, 3, 4]
+    spilled = sorted(p.name for p in tmp_path.iterdir())
+    assert spilled == [f"r{r:05d}_g0.npz" for r in (1, 2, 3, 4)]
+
+
+def test_rounds_held_after_wraparound():
+    """Slot bookkeeping survives several full trips around the ring."""
+    te = TeacherBank(K=2, R=3)
+    for r in range(1, 12):
+        te.push(r, [model(r), model(-r)])
+        lo = max(1, r - 2)
+        assert te.rounds_held() == list(range(lo, r + 1))
+        assert te.num_members == 2 * (r - lo + 1)
+    vals = [float(m["w"][0]) for m in te.members()]
+    assert vals == [11.0, -11.0, 10.0, -10.0, 9.0, -9.0]
+
+
+def test_members_stacked_matches_members():
+    te = TeacherBank(K=2, R=2)
+    te.push(1, [model(1), model(2)])
+    te.push(2, [model(3), model(4)])
+    stacked = te.members_stacked()
+    assert jax.tree.leaves(stacked)[0].shape[0] == 4
+    for i, m in enumerate(te.members()):
+        np.testing.assert_array_equal(np.asarray(stacked["w"][i]),
+                                      np.asarray(m["w"]))
+
+
+def test_push_accepts_stacked_round():
+    """The vectorized engine hands the bank a (K, ...)-stacked round."""
+    te = TeacherBank(K=3, R=1)
+    stacked = {"w": jnp.stack([jnp.full((2,), float(v)) for v in (7, 8, 9)])}
+    te.push(1, stacked)
+    assert [float(m["w"][0]) for m in te.members()] == [7.0, 8.0, 9.0]
+
+
+def test_members_survive_later_push():
+    """members() hands out gathered copies, not bank aliases — a later
+    (donated, in-place) push must not corrupt them."""
+    te = TeacherBank(K=1, R=1)
+    te.push(1, [model(1)])
+    held = te.members()[0]
+    te.push(2, [model(2)])
+    assert float(held["w"][0]) == 1.0
