@@ -125,6 +125,51 @@ def kd_throughput(csv: CSV, *, K: int = 4, R: int = 2, steps: int = 150,
             "precompute_s": t_pre}
 
 
+def teacher_bank_precision(csv: CSV, *, K: int = 4, R: int = 2,
+                           reps: int = 3, prefix: str = "t6") -> dict:
+    """The TeacherBank(dtype=bfloat16) storage knob: memory halves (R can
+    double at the same HBM), the teacher-precompute pass reads half the
+    bytes, and the f32-compute ensemble probs stay within bf16 rounding
+    of the f32-stored bank."""
+    import numpy as np
+
+    from repro.distill import TeacherBank
+
+    task = classification_task(model="mlp", num_clients=2, alpha=0.5,
+                               num_train=256, num_server=256,
+                               server_batch=64, seed=0)
+    rounds = [[task.init_fn(k) for k in jax.random.split(kk, K)]
+              for kk in jax.random.split(jax.random.PRNGKey(1), R)]
+
+    banks = {}
+    for name, dtype in (("f32", None), ("bf16", jnp.bfloat16)):
+        bank = TeacherBank(K, R, dtype=dtype)
+        for t, models in enumerate(rounds):
+            bank.push(t + 1, models)
+        banks[name] = bank
+    mem_f32, mem_bf16 = banks["f32"].nbytes(), banks["bf16"].nbytes()
+    csv.add(f"{prefix}/teacher_bank_bytes/KR{K * R}", 0,
+            f"f32={mem_f32};bf16={mem_bf16};"
+            f"ratio={mem_bf16 / mem_f32:.2f}")
+
+    pipe = KDPipeline(task.logits_fn, steps=1, lr=0.1, temperature=4.0)
+    batches = pipe.batches_for(task.server_batches)
+    probs, times = {}, {}
+    for name, bank in banks.items():
+        stack = bank.members_stacked()
+        times[name] = _timed(
+            lambda s=stack: pipe.precompute_teacher_probs(s, batches), reps)
+        probs[name] = np.asarray(
+            pipe.precompute_teacher_probs(stack, batches))
+    err = float(np.abs(probs["f32"] - probs["bf16"]).max())
+    csv.add(f"{prefix}/teacher_bank_bf16_precompute/KR{K * R}",
+            times["bf16"] * 1e6,
+            f"f32_us={times['f32'] * 1e6:.0f};max_prob_err={err:.2e};"
+            f"pass={err < 5e-2}")
+    return {"mem_ratio": mem_bf16 / mem_f32, "max_prob_err": err,
+            "t_bf16": times["bf16"], "t_f32": times["f32"]}
+
+
 def run(scale: BenchScale, csv: CSV, alpha: float = 0.1) -> dict:
     from repro.data.synthetic import SyntheticClassification
     testset = SyntheticClassification(num_train=scale.num_train,
@@ -147,4 +192,6 @@ def run(scale: BenchScale, csv: CSV, alpha: float = 0.1) -> dict:
     # K=4, R=2; multi-student KD sublinear in K)
     results["kd_throughput"] = kd_throughput(
         csv, K=4, R=2, steps=max(50, scale.distill_steps))
+    # teacher-bank bf16 storage knob: memory + precompute + parity bound
+    results["bank_precision"] = teacher_bank_precision(csv)
     return results

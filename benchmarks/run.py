@@ -35,12 +35,13 @@ BENCHES = ["t2", "t3", "t4", "t5", "t6", "t7", "kern"]
 
 def run_smoke(csv: CSV) -> None:
     """Tiny-shape invocations of the hot paths: Pallas kernel microbenches,
-    one sequential-vs-vectorized engine round, and one legacy-vs-fused KD
-    phase — fails loudly if a kernel, the execution engine, or the KD
-    pipeline regresses."""
+    one sequential-vs-vectorized engine round, one legacy-vs-fused KD
+    phase, the bf16 teacher-bank knob, and a reduced overlapped-round
+    measurement — fails loudly if a kernel, the execution engine, the KD
+    pipeline, or the overlap executor regresses."""
     from benchmarks import bench_kernels
-    from benchmarks.bench_distill import kd_throughput
-    from benchmarks.bench_roundtime import measure_round_time
+    from benchmarks.bench_distill import kd_throughput, teacher_bank_precision
+    from benchmarks.bench_roundtime import measure_round_time, overlap_comparison
     bench_kernels.run(SMOKE, csv)
     for mode in ("sequential", "vectorized"):
         dt = measure_round_time(SMOKE.num_clients, mode, per_client=64,
@@ -48,6 +49,11 @@ def run_smoke(csv: CSV) -> None:
         csv.add(f"smoke/roundtime_{mode}/C{SMOKE.num_clients}", dt * 1e6,
                 f"rounds_per_s={1.0 / dt:.2f}")
     kd_throughput(csv, K=4, R=2, steps=20, reps=1, prefix="smoke")
+    teacher_bank_precision(csv, reps=1, prefix="smoke")
+    # the overlapped-executor measurement at its t3 operating point (~2
+    # min): smaller configs give the min-over-window estimator too few
+    # quiet windows on shared CI runners and the ratio row turns to noise
+    overlap_comparison(csv, prefix="smoke")
 
 
 def main() -> None:

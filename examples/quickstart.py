@@ -25,20 +25,27 @@ def main() -> None:
     st_avg = fedavg.run(rounds=5, log_every=1)
 
     print("== FedSDD (K=2 global models, R=2 temporal checkpoints) ==")
-    # kd_pipeline="fused": the server KD phase runs as one jitted program —
-    # teacher probs for the whole distillation set precomputed through the
-    # device-resident teacher bank, then the full step schedule as one
-    # lax.scan (kd_pipeline="legacy" is the host-driven parity oracle)
+    # The server KD phase runs as one jitted program by default
+    # (kd_pipeline="fused"): teacher probs for the whole distillation set
+    # precomputed through the device-resident teacher bank, then the full
+    # step schedule as one lax.scan ("legacy" is the host-driven oracle).
+    # overlap="fused" adds the paper's Fig. 2 scheduling: round t's KD is
+    # deferred into round t+1, running concurrently with the k>0 groups'
+    # local training — only group 0 waits for the distilled model, and
+    # runner.run() drains the last pending KD so the result is identical
+    # to overlap="off" (see ROADMAP "Overlapped rounds" for the knobs).
     fedsdd = make_runner("fedsdd", task, num_clients=8, participation=1.0,
                          K=2, R=2, local_epochs=2, client_lr=0.1,
                          client_batch=64, distill_steps=30, server_lr=0.05,
-                         kd_pipeline="fused")
+                         overlap="fused")
     st_sdd = fedsdd.run(rounds=5, log_every=1)
 
     a, b = st_avg.history[-1]["acc_main"], st_sdd.history[-1]["acc_main"]
     print(f"\nfinal accuracy  FedAvg={a:.4f}  FedSDD={b:.4f}")
     print(f"teacher-ensemble members held: {st_sdd.ensemble.num_members} "
           f"(K*R as in Eq. 5, one stacked pytree on device)")
+    print("KD ran overlapped with k>0 local training "
+          f"(pending drained: {st_sdd.pending_kd is None})")
 
 
 if __name__ == "__main__":

@@ -22,16 +22,21 @@ import jax.numpy as jnp
 
 from repro.kernels.kd_loss import ops as kd_ops
 from repro.optim.optimizers import Optimizer, apply_updates, sgd
+from repro.utils.pytree import tree_cast
 
 PyTree = Any
 LogitsFn = Callable[[PyTree, Any], jnp.ndarray]
 
 
 def ensemble_logits(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn):
-    """Eq. 3/5: mean logit over members (uniform 1/(K·R) weights)."""
+    """Eq. 3/5: mean logit over members (uniform 1/(K·R) weights).
+
+    Members are upcast f32 at the forward boundary so bf16-stored
+    teacher-bank entries (TeacherBank(dtype=...)) compute in f32.
+    """
     acc = None
     for t in teachers:
-        lg = logits_fn(t, batch).astype(jnp.float32)
+        lg = logits_fn(tree_cast(t, jnp.float32), batch).astype(jnp.float32)
         acc = lg if acc is None else acc + lg
     return acc / len(teachers)
 
@@ -44,10 +49,10 @@ def stacked_teacher_logits(stacked_teachers: PyTree, batch,
     ``stacked_teachers`` leaves carry a leading member axis (M = K·R for
     FedSDD, M = C for FedDF); the vmap turns the teacher-at-a-time Python
     loop into a single batched forward, so adding members grows one array
-    dim instead of adding sequential dispatches.
+    dim instead of adding sequential dispatches.  f32 compute as above.
     """
     return jax.vmap(lambda p: logits_fn(p, batch))(
-        stacked_teachers).astype(jnp.float32)
+        tree_cast(stacked_teachers, jnp.float32)).astype(jnp.float32)
 
 
 def ensemble_probs_stacked(stacked_teachers: PyTree, batch,

@@ -89,13 +89,70 @@ class ClientPlan:
 class RoundPlan:
     groups: list[np.ndarray]
     plans: list[ClientPlan]
-    num_clients: int        # total sampled this round
+    num_clients: int        # total sampled this round (this plan's subset)
 
 
-# Bucket shard stacks kept resident; under partial participation each
-# round can sample a fresh client subset (a fresh cache key), so the
+@dataclass
+class ClientEntry:
+    """One sampled client's fully-drawn local schedule (host side).
+
+    The entry list is the rng-bearing half of round planning: it is drawn
+    ONCE per round in the exact sequential-oracle order, then bucketed into
+    ``ClientPlan``s — possibly as group subsets, which is how the overlap
+    executor (core/round_plan.py) trains groups k>0 and group 0 at
+    different phase positions without perturbing the rng stream.
+    """
+    pos: int                # position in the group-major round order
+    cid: int
+    group: int
+    n: int                  # dataset size |X_i|
+    bs: int                 # local batch size min(client_batch, n)
+    idx: np.ndarray         # (S_c, bs) int32 minibatch index rows
+
+
+# Bucket shard stacks AND per-client device rows kept resident; under
+# partial participation (or the overlap executor's per-group phase split)
+# each round can bucket a fresh client subset (a fresh cache key), so the
 # cache is LRU-bounded rather than unbounded.
-MAX_CACHED_BUCKETS = int(os.environ.get("REPRO_ENGINE_CACHE_BUCKETS", "16"))
+MAX_CACHED_BUCKETS = int(os.environ.get("REPRO_ENGINE_CACHE_BUCKETS", "64"))
+
+
+def _lru_get(cache: Optional[dict], key):
+    if cache is not None and key in cache:
+        cache[key] = cache.pop(key)          # LRU: move to newest
+        return cache[key]
+    return None
+
+
+def _lru_put(cache: Optional[dict], key, value):
+    if cache is not None:
+        cache[key] = value
+        while len(cache) > MAX_CACHED_BUCKETS:
+            cache.pop(next(iter(cache)))     # evict least-recently used
+    return value
+
+
+def _client_row(task, cid: int, n_pad: int, cache: Optional[dict]) -> PyTree:
+    """One client's full shard as a device-resident (n_pad, ...) pytree.
+
+    Cached per (cid, n_pad) — the round-stable unit: bucket compositions
+    churn (group reshuffles, the overlap executor's group split) but a
+    client's padded row never does, so the host→device upload happens
+    once per client, not once per bucket composition.
+    """
+    key = ("row", int(cid), int(n_pad))
+    hit = _lru_get(cache, key)
+    if hit is not None:
+        return hit
+    ds = task.client_data[int(cid)]
+    n = _num_examples(ds)
+    full = task.make_batch(ds, np.arange(n))
+    row = jax.tree.map(
+        lambda x: jnp.asarray(np.concatenate(
+            [np.asarray(x),
+             np.zeros((n_pad - n,) + x.shape[1:], np.asarray(x).dtype)])
+            if n < n_pad else np.asarray(x)), full)
+    return _lru_put(cache, key, row)
 
 
 def _stack_bucket_data(task, cids: Sequence[int], n_pad: int,
@@ -104,40 +161,30 @@ def _stack_bucket_data(task, cids: Sequence[int], n_pad: int,
 
     Uses ``task.make_batch(ds, arange(n))`` so any per-example transform
     the task applies is baked in; the engine assumes make_batch is a
-    per-example map (true of minibatch SGD tasks by construction).
+    per-example map (true of minibatch SGD tasks by construction).  A
+    bucket miss assembles the stack from cached per-client device rows —
+    a device-side copy, not a host re-upload.
     """
     key = (tuple(int(c) for c in cids), int(n_pad))
-    if cache is not None and key in cache:
-        cache[key] = cache.pop(key)          # LRU: move to newest
-        return cache[key]
-    shards = []
-    for cid in cids:
-        ds = task.client_data[int(cid)]
-        n = _num_examples(ds)
-        full = task.make_batch(ds, np.arange(n))
-        shards.append(jax.tree.map(
-            lambda x: np.concatenate(
-                [np.asarray(x),
-                 np.zeros((n_pad - n,) + x.shape[1:], np.asarray(x).dtype)])
-            if n < n_pad else np.asarray(x), full))
-    stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *shards)
-    if cache is not None:
-        cache[key] = stacked
-        while len(cache) > MAX_CACHED_BUCKETS:
-            cache.pop(next(iter(cache)))     # evict least-recently used
-    return stacked
+    hit = _lru_get(cache, key)
+    if hit is not None:
+        return hit
+    rows = [_client_row(task, int(c), int(n_pad), cache) for c in cids]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+    return _lru_put(cache, key, stacked)
 
 
-def build_round_plan(task, cfg, groups: Sequence[np.ndarray],
-                     rng: np.random.Generator,
-                     data_cache: Optional[dict] = None) -> RoundPlan:
-    """Materialize every sampled client's epoch schedule, stacked.
+def build_round_entries(task, cfg, groups: Sequence[np.ndarray],
+                        rng: np.random.Generator) -> list[ClientEntry]:
+    """Draw every sampled client's epoch schedule.
 
     CRITICAL: permutations are drawn in the exact order the sequential
     runner draws them (for k in groups: for cid in group: for epoch: ...),
-    so sequential and vectorized execution see identical batches.
+    so sequential and vectorized execution see identical batches — and so
+    the overlap executor can reorder *training* (groups k>0 before group
+    0) without reordering the rng stream.
     """
-    entries = []  # (pos, cid, group_k, n, bs, idx (S_c, bs))
+    entries: list[ClientEntry] = []
     cids, gids = group_major_order(groups)
     for pos, (cid, k) in enumerate(zip(cids, gids)):
         ds = task.client_data[int(cid)]
@@ -148,44 +195,83 @@ def build_round_plan(task, cfg, groups: Sequence[np.ndarray],
             perm = rng.permutation(n)
             for i in range(0, n - bs + 1, bs):
                 steps.append(perm[i:i + bs])
-        entries.append((pos, int(cid), int(k), n, bs,
-                        np.asarray(steps, dtype=np.int32)))
+        entries.append(ClientEntry(pos=pos, cid=int(cid), group=int(k), n=n,
+                                   bs=bs,
+                                   idx=np.asarray(steps, dtype=np.int32)))
+    return entries
 
+
+def entry_pad_hints(entries: Sequence[ClientEntry]) -> dict[int, tuple]:
+    """Per-batch-size (S, n_pad) maxima over a full round's entries.
+
+    The overlap executor buckets group SUBSETS whose own maxima vary with
+    the round's random group assignment; padding every subset bucket to
+    the whole round's maxima keeps device-program shapes round-stable, so
+    the jitted bucket programs compile once instead of retracing per
+    group shuffle (padded steps/rows are exact masked no-ops either way).
+    """
+    hints: dict[int, tuple] = {}
+    for e in entries:
+        s, n = hints.get(e.bs, (0, 0))
+        hints[e.bs] = (max(s, len(e.idx)), max(n, e.n))
+    return hints
+
+
+def plans_from_entries(task, entries: Sequence[ClientEntry],
+                       data_cache: Optional[dict] = None,
+                       pad_to: Optional[dict] = None) -> list[ClientPlan]:
+    """Bucket pre-drawn entries by batch size and stack them for vmap."""
     plans: list[ClientPlan] = []
-    for bs in sorted({e[4] for e in entries}):
+    for bs in sorted({e.bs for e in entries}):
         # sorted-cid bucket order -> round-stable data-cache key
-        sub = sorted((e for e in entries if e[4] == bs), key=lambda e: e[1])
-        S = max(len(e[5]) for e in sub)
-        n_pad = max(e[3] for e in sub)
+        sub = sorted((e for e in entries if e.bs == bs), key=lambda e: e.cid)
+        S = max(len(e.idx) for e in sub)
+        n_pad = max(e.n for e in sub)
+        if pad_to and bs in pad_to:
+            S, n_pad = max(S, pad_to[bs][0]), max(n_pad, pad_to[bs][1])
         idxs, masks = [], []
-        for _, _, _, _, _, idx in sub:
-            s_c = len(idx)
+        for e in sub:
+            idx, s_c = e.idx, len(e.idx)
             if s_c < S:  # pad with replays of step 0; masked out below
                 idx = np.concatenate([idx, np.tile(idx[:1], (S - s_c, 1))])
             idxs.append(idx)
             masks.append(np.arange(S) < s_c)
         plans.append(ClientPlan(
-            cids=np.asarray([e[1] for e in sub]),
-            group_of=np.asarray([e[2] for e in sub]),
-            sizes=np.asarray([e[3] for e in sub]),
-            order=np.asarray([e[0] for e in sub]),
+            cids=np.asarray([e.cid for e in sub]),
+            group_of=np.asarray([e.group for e in sub]),
+            sizes=np.asarray([e.n for e in sub]),
+            order=np.asarray([e.pos for e in sub]),
             batch_size=bs,
-            data=_stack_bucket_data(task, [e[1] for e in sub], n_pad,
+            data=_stack_bucket_data(task, [e.cid for e in sub], n_pad,
                                     data_cache),
             indices=jnp.asarray(np.stack(idxs)),
             step_mask=jnp.asarray(np.stack(masks)),
         ))
-    return RoundPlan(groups=list(groups), plans=plans,
+    return plans
+
+
+def plan_from_entries(task, entries: Sequence[ClientEntry],
+                      groups: Sequence[np.ndarray],
+                      data_cache: Optional[dict] = None,
+                      pad_to: Optional[dict] = None) -> RoundPlan:
+    """RoundPlan over an entry subset (the overlap executor's phase split)."""
+    return RoundPlan(groups=list(groups),
+                     plans=plans_from_entries(task, entries, data_cache,
+                                              pad_to),
                      num_clients=len(entries))
+
+
+def build_round_plan(task, cfg, groups: Sequence[np.ndarray],
+                     rng: np.random.Generator,
+                     data_cache: Optional[dict] = None) -> RoundPlan:
+    """Materialize every sampled client's epoch schedule, stacked."""
+    entries = build_round_entries(task, cfg, groups, rng)
+    return plan_from_entries(task, entries, groups, data_cache)
 
 
 # =====================================================================
 # engine
 # =====================================================================
-def _force_shard_map() -> bool:
-    return os.environ.get("REPRO_FORCE_SHARD_MAP") == "1"
-
-
 def resolve_step_mode(mode: str = "auto", cpu_default: str = "stepped") -> str:
     """Shared scan-vs-stepped policy for every fused loop in the repo.
 
@@ -278,12 +364,8 @@ class VectorizedClientEngine:
         return run
 
     def _use_shard_map(self) -> bool:
-        if self.client_sharding == "vmap":
-            return False
-        if self.client_sharding == "shard_map" or _force_shard_map():
-            return self.mesh is not None
-        return self.mesh is not None and \
-            int(np.prod(list(self.mesh.shape.values()))) > 1
+        from repro.launch.mesh import use_shard_map
+        return use_shard_map(self.mesh, self.client_sharding)
 
     def _vectorized_fn(self):
         if self._vec_fn is None:
@@ -310,13 +392,20 @@ class VectorizedClientEngine:
             self._step_fn = jax.jit(vf)
         return self._step_fn
 
-    # ---- public: train every client of a plan bucket ------------------
-    def train_bucket(self, plan: ClientPlan, stacked_params: PyTree,
-                     stacked_opt_state: PyTree):
-        """(Cb,...)-stacked params/opt state -> trained (Cb,...) stacks."""
+    # ---- bucket execution, decomposed so the overlap executor can weave
+    # ---- the same programs into a combined KD+training device program ---
+    def prepare_bucket(self, plan: ClientPlan, stacked_params: PyTree,
+                       stacked_opt_state: PyTree):
+        """Pad a bucket's stacked args for the (possibly sharded) program.
+
+        Returns ``(args, C)`` where ``args`` is the positional tuple the
+        per-bucket program consumes and ``C`` the true (unpadded) client
+        count ``finish_bucket`` trims back to.
+        """
         n_shards = 1
         if self._use_shard_map():
-            n_shards = int(np.prod(list(self.mesh.shape.values())))
+            from repro.launch.mesh import mesh_size
+            n_shards = mesh_size(self.mesh)
         C = plan.cids.shape[0]
         pad = (-C) % n_shards
         data, indices, mask = plan.data, plan.indices, plan.step_mask
@@ -330,30 +419,53 @@ class VectorizedClientEngine:
             indices = padrow(indices)
             mask = jnp.concatenate(
                 [mask, jnp.zeros((pad,) + mask.shape[1:], bool)])
+        return (stacked_params, stacked_opt_state, data, indices, mask), C
+
+    def run_prepared(self, args):
+        """Dispatch one padded bucket (scan or stepped); padded outputs."""
         if self._resolved_step_mode() == "scan":
-            fn = self._vectorized_fn()
-            p, s, losses = fn(stacked_params, stacked_opt_state,
-                              data, indices, mask)
-        else:
-            fn = self._stepped_fn()
-            p, s = stacked_params, stacked_opt_state
-            losses = []
-            for si in range(mask.shape[1]):
-                p, s, loss = fn(p, s, data, indices, mask, jnp.int32(si))
-                losses.append(loss)
-            losses = jnp.stack(losses, axis=1)  # (C, S) like the scan's
-        if pad:
+            return self._vectorized_fn()(*args)
+        fn = self._stepped_fn()
+        p, s, (data, indices, mask) = args[0], args[1], args[2:]
+        losses = []
+        for si in range(mask.shape[1]):
+            p, s, loss = fn(p, s, data, indices, mask, jnp.int32(si))
+            losses.append(loss)
+        return p, s, jnp.stack(losses, axis=1)  # (C, S) like the scan's
+
+    @staticmethod
+    def finish_bucket(out, C: int):
+        p, s, losses = out
+        if jax.tree.leaves(p)[0].shape[0] != C:  # trim shard padding
             p = jax.tree.map(lambda x: x[:C], p)
             s = jax.tree.map(lambda x: x[:C], s)
             losses = losses[:C]
         return p, s, losses
 
+    def scan_fn(self):
+        """The jitted per-bucket scan program — the subgraph the overlap
+        executor composes with the KD scan into ONE device program."""
+        return self._vectorized_fn()
+
+    # ---- public: train every client of a plan bucket ------------------
+    def train_bucket(self, plan: ClientPlan, stacked_params: PyTree,
+                     stacked_opt_state: PyTree):
+        """(Cb,...)-stacked params/opt state -> trained (Cb,...) stacks."""
+        args, C = self.prepare_bucket(plan, stacked_params, stacked_opt_state)
+        return self.finish_bucket(self.run_prepared(args), C)
+
     def train_round(self, rplan: RoundPlan, init_params_for: Callable,
-                    init_opt_state_for: Callable):
+                    init_opt_state_for: Callable, run_buckets=None):
         """Train every bucket; return round-ordered client stacks.
 
         ``init_params_for(plan) -> (Cb,...) stacked start params``;
         ``init_opt_state_for(plan, stacked_params) -> stacked opt state``.
+
+        ``run_buckets``, when given, replaces the per-bucket dispatch: it
+        receives the list of padded arg tuples (see ``prepare_bucket``)
+        and must return the corresponding padded outputs — the overlap
+        executor passes a closure that runs every bucket's scan AND the
+        pending KD scan as one jitted program.
 
         Returns ``(stacked_params, group_ids, sizes, buckets)`` where
         ``stacked_params`` leaves are (C, ...) in the round's group-major
@@ -362,11 +474,19 @@ class VectorizedClientEngine:
         batch-size bucket (SCAFFOLD's control update needs the bucket
         view, since opt-state trees are stacked per bucket).
         """
-        buckets = []
+        prepared = []
         for plan in rplan.plans:
             w0 = init_params_for(plan)
             s0 = init_opt_state_for(plan, w0)
-            p, s, _ = self.train_bucket(plan, w0, s0)
+            args, C = self.prepare_bucket(plan, w0, s0)
+            prepared.append((plan, w0, args, C))
+        if run_buckets is None:
+            outs = [self.run_prepared(args) for _, _, args, _ in prepared]
+        else:
+            outs = run_buckets([args for _, _, args, _ in prepared])
+        buckets = []
+        for (plan, w0, _, C), out in zip(prepared, outs):
+            p, s, _ = self.finish_bucket(out, C)
             buckets.append((plan, p, s, w0))
         # reassemble in round (group-major) order: bucket rows are in
         # sorted-cid order (the data-cache key), NOT round order — the

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core import distillation as dist
 from repro.core import engine as vec_engine
+from repro.core import round_plan
 from repro.core.aggregation import fedavg_aggregate, secure_aggregate
 from repro.core.grouping import assign_groups, sample_clients
 from repro.distill import KDPipeline, TeacherBank
@@ -70,7 +71,14 @@ class FedConfig:
     # execution engine
     execution: str = "sequential"   # sequential (oracle) | vectorized
     client_sharding: str = "auto"   # auto | vmap | shard_map
-    kd_pipeline: str = "legacy"     # legacy (oracle) | fused (one program)
+    kd_pipeline: str = "fused"      # fused (one program) | legacy (oracle)
+    # overlapped round execution (paper Fig. 2): run round t's server KD
+    # concurrently with round t+1's k>0 local training — an exact
+    # reordering; ``off`` is the back-to-back oracle.  See core/round_plan.
+    overlap: str = "off"            # off (oracle) | async | fused
+    # teacher-bank storage precision: "bfloat16" stores the K·R ring bf16
+    # on device (f32 ensemble compute), doubling R at the same memory
+    teacher_dtype: Optional[str] = None   # None (keep) | float32 | bfloat16
     # misc
     secure_aggregation: bool = False
     seed: int = 0
@@ -83,6 +91,12 @@ class FedConfig:
         assert self.execution in ("sequential", "vectorized")
         assert self.client_sharding in ("auto", "vmap", "shard_map")
         assert self.kd_pipeline in ("legacy", "fused")
+        assert self.overlap in ("off", "async", "fused")
+        assert self.teacher_dtype in (None, "float32", "bfloat16")
+        if self.overlap != "off":
+            assert self.kd_pipeline == "fused", \
+                "overlapped rounds dispatch KD as one device program — " \
+                "the host-driven kd_pipeline='legacy' loop cannot overlap"
         if self.distill_target != "none" and self.ensemble_source == "clients":
             assert not self.secure_aggregation, \
                 "client-model ensembles (FedDF/FedBE) are incompatible with " \
@@ -133,6 +147,13 @@ class FedState:
     scaffold_c_global: Optional[PyTree] = None
     scaffold_c_clients: Optional[list[PyTree]] = None
     history: list[dict] = field(default_factory=list)
+    # overlap modes: the deferred round-t KD job (runs during round t+1's
+    # k>0 local training; drained by FederatedRunner.finalize), and the
+    # newest RESOLVED (round_idx, distilled main model) — what a mid-run
+    # checkpoint should store, since global_models[0] is the raw aggregate
+    # until its KD resolves
+    pending_kd: Optional[round_plan.PendingKD] = None
+    last_distilled: Optional[tuple] = None
 
 
 # =====================================================================
@@ -146,6 +167,7 @@ class FederatedRunner:
         self._train_step = None
         self._engine = None
         self._kd_pipe = None
+        self._exec = None
 
     # ---- init ----------------------------------------------------------
     def init_state(self) -> FedState:
@@ -155,7 +177,7 @@ class FederatedRunner:
         state = FedState(
             round=0,
             global_models=models,
-            ensemble=TeacherBank(cfg.K, cfg.R),
+            ensemble=TeacherBank(cfg.K, cfg.R, dtype=cfg.teacher_dtype),
         )
         if cfg.local_algo == "scaffold":
             state.scaffold_c_global = tree_zeros_like(models[0])
@@ -187,17 +209,18 @@ class FederatedRunner:
             self._train_step = (optimizer, step)
         return self._train_step
 
-    def local_train(self, params: PyTree, client_id: int, state: FedState,
-                    rng: np.random.Generator) -> tuple[PyTree, int]:
-        """One client's full local training (cfg.local_epochs over its shard)."""
+    def _local_train_scheduled(self, params: PyTree, client_id: int,
+                               state: FedState, idx_rows) -> PyTree:
+        """One client's local training over a PRE-DRAWN minibatch schedule.
+
+        The schedule (one index row per optimization step) comes from
+        ``engine.build_round_entries``, which draws rng in the exact
+        sequential-oracle order — pre-drawing is what lets the overlap
+        executor train group 0 *after* groups k>0 without perturbing the
+        rng stream.
+        """
         cfg = self.cfg
         ds = self.task.client_data[client_id]
-        if isinstance(ds, tuple):
-            n = len(ds[0])
-        elif isinstance(ds, dict):
-            n = len(next(iter(ds.values())))
-        else:
-            n = len(ds)
         optimizer, step = self._train_batch_step()
         opt_state = optimizer.init(params)
         if cfg.local_algo == "fedprox":
@@ -207,25 +230,43 @@ class FederatedRunner:
                 c_local=state.scaffold_c_clients[client_id],
                 c_global=state.scaffold_c_global)
         w_start = params
-        for _ in range(cfg.local_epochs):
-            order = rng.permutation(n)
-            bs = min(cfg.client_batch, n)
-            for i in range(0, n - bs + 1, bs):
-                batch = self.task.make_batch(ds, order[i:i + bs])
-                params, opt_state, _ = step(params, opt_state, batch)
+        for row in idx_rows:
+            batch = self.task.make_batch(ds, row)
+            params, opt_state, _ = step(params, opt_state, batch)
         if cfg.local_algo == "scaffold":
             state.scaffold_c_clients[client_id] = scaffold_new_control(
                 opt_state, w_start, params, cfg.client_lr)
-        return params, n
+        return params
+
+    def local_train(self, params: PyTree, client_id: int, state: FedState,
+                    rng: np.random.Generator) -> tuple[PyTree, int]:
+        """One client's full local training (cfg.local_epochs over its shard)."""
+        cfg = self.cfg
+        ds = self.task.client_data[client_id]
+        n = vec_engine._num_examples(ds)
+        bs = min(cfg.client_batch, n)
+        rows = []
+        for _ in range(cfg.local_epochs):
+            order = rng.permutation(n)
+            rows += [order[i:i + bs] for i in range(0, n - bs + 1, bs)]
+        return self._local_train_scheduled(params, client_id, state, rows), n
 
     # ---- distillation phase (Eq. 3-4), shared by both round paths --------
     def _kd_pipeline(self) -> KDPipeline:
         if self._kd_pipe is None:
+            from repro.launch.mesh import make_client_mesh
             cfg = self.cfg
             self._kd_pipe = KDPipeline(
                 self.task.logits_fn, steps=cfg.distill_steps,
-                lr=cfg.server_lr, temperature=cfg.temperature)
+                lr=cfg.server_lr, temperature=cfg.temperature,
+                mesh=make_client_mesh(),
+                teacher_sharding=cfg.client_sharding)
         return self._kd_pipe
+
+    def _executor(self) -> round_plan.RoundExecutor:
+        if self._exec is None:
+            self._exec = round_plan.RoundExecutor(self)
+        return self._exec
 
     def _distill_models(self, new_globals: list[PyTree], teachers,
                         *, stacked: bool,
@@ -266,77 +307,30 @@ class FederatedRunner:
 
     # ---- one round (Algorithm 1) -----------------------------------------
     def run_round(self, state: FedState) -> FedState:
-        if self.cfg.execution == "vectorized":
-            return self._run_round_vectorized(state)
-        return self._run_round_sequential(state)
-
-    def _run_round_sequential(self, state: FedState) -> FedState:
+        """One round as an explicit phase plan (core/round_plan.py): the
+        executor owns phase ordering + the deferred-KD state machine, the
+        per-engine ops adapter below owns the engine-native phase bodies.
+        """
         cfg = self.cfg
         t = state.round + 1
         rng = np.random.default_rng(cfg.seed * 100_000 + t)
-
         active = sample_clients(cfg.num_clients, cfg.participation, rng)
         groups = assign_groups(active, cfg.K, rng)
+        ops_cls = (_VectorizedRoundOps if cfg.execution == "vectorized"
+                   else _SequentialRoundOps)
+        ops = ops_cls(self, state, groups, rng, t)
+        return self._executor().execute(state, t, len(active), ops)
 
-        # --- local training + per-group aggregation (Eq. 1-2) ---
-        new_globals: list[PyTree] = []
-        all_client_models: list[PyTree] = []
-        all_client_sizes: list[int] = []
-        scaffold_deltas = []
-        for k, group in enumerate(groups):
-            client_models, sizes = [], []
-            for cid in group:
-                w, n = self.local_train(state.global_models[k], int(cid), state, rng)
-                client_models.append(w)
-                sizes.append(n)
-            if cfg.secure_aggregation:
-                agg, _uploads = secure_aggregate(client_models, sizes, seed=t)
-            else:
-                agg = fedavg_aggregate(client_models, sizes)
-            new_globals.append(agg)
-            all_client_models.extend(client_models)
-            all_client_sizes.extend(sizes)
-
-        if cfg.local_algo == "scaffold":
-            # server control: c += |S|/N * mean_i (c_i' − c_i)  (we use the
-            # simpler running-average form: c = mean of client controls)
-            cs = state.scaffold_c_clients
-            state.scaffold_c_global = jax.tree.map(
-                lambda *xs: sum(xs) / len(xs), *cs)
-
-        # --- temporal ensemble push (Eq. 5) ---
-        state.ensemble.push(t, new_globals)
-
-        # --- distillation (Eq. 3-4) ---
-        kd_info = {}
-        if cfg.distill_target != "none" and t > cfg.distill_warmup_rounds:
-            if cfg.ensemble_source == "clients":
-                teachers = list(all_client_models)
-                if cfg.ensemble_extra_sampled:
-                    teachers += self._sample_posterior(
-                        all_client_models, all_client_sizes,
-                        cfg.ensemble_extra_sampled, t)
-                    teachers.append(new_globals[0])
-                kd_info = self._distill_models(new_globals, teachers,
-                                               stacked=False)
-            elif cfg.kd_pipeline == "fused":
-                # fused path reads the (M, ...) stack straight off the bank
-                kd_info = self._distill_models(
-                    new_globals, state.ensemble.members_stacked(),
-                    stacked=True)
-            else:
-                kd_info = self._distill_models(
-                    new_globals, state.ensemble.members(), stacked=False)
-
-        state.global_models = new_globals
-        state.round = t
-        rec = {"round": t, "active": len(active), **kd_info}
-        if self.task.eval_fn is not None:
-            rec["acc_main"] = self.task.eval_fn(new_globals[0])
-        state.history.append(rec)
+    def finalize(self, state: FedState) -> FedState:
+        """Drain the deferred KD job (overlap modes).  After this the
+        state is exactly what ``overlap='off'`` would have produced —
+        ``run`` calls it automatically; manual ``run_round`` loops must
+        call it once at the end."""
+        self._executor().resolve_pending(state)
+        self._executor().close()
         return state
 
-    # ---- one round, vectorized engine ------------------------------------
+    # ---- vectorized engine ----------------------------------------------
     def _make_engine(self) -> vec_engine.VectorizedClientEngine:
         if self._engine is None:
             from repro.launch.mesh import make_client_mesh
@@ -345,92 +339,6 @@ class FederatedRunner:
                 mesh=make_client_mesh(),
                 client_sharding=self.cfg.client_sharding)
         return self._engine
-
-    def _run_round_vectorized(self, state: FedState) -> FedState:
-        """Same round semantics as the sequential oracle, with local
-        training / aggregation / teacher forwards over stacked client
-        axes (see core.engine).  Secure aggregation needs no simulation
-        here: pairwise masks cancel identically inside the fused Eq. 2
-        reduction, so the plain weighted mean IS the unmasked result.
-        """
-        cfg = self.cfg
-        t = state.round + 1
-        rng = np.random.default_rng(cfg.seed * 100_000 + t)
-
-        active = sample_clients(cfg.num_clients, cfg.participation, rng)
-        groups = assign_groups(active, cfg.K, rng)
-        eng = self._make_engine()
-        rplan = vec_engine.build_round_plan(self.task, cfg, groups, rng,
-                                            data_cache=eng.data_cache)
-        optimizer = eng.optimizer
-
-        stacked_k = tree_stack(state.global_models)  # (K, ...) once per round
-
-        def init_params_for(plan):
-            gid = jnp.asarray(plan.group_of)
-            return jax.tree.map(lambda x: x[gid], stacked_k)
-
-        def init_opt_state_for(plan, w0):
-            s0 = jax.vmap(optimizer.init)(w0)
-            if cfg.local_algo == "scaffold":
-                c_loc = tree_stack([state.scaffold_c_clients[int(c)]
-                                    for c in plan.cids])
-                nb = len(plan.cids)
-                c_glob = jax.tree.map(
-                    lambda x: jnp.broadcast_to(x, (nb,) + x.shape),
-                    state.scaffold_c_global)
-                s0 = s0._replace(c_local=c_loc, c_global=c_glob)
-            return s0
-
-        stacked_clients, group_ids, sizes, buckets = eng.train_round(
-            rplan, init_params_for, init_opt_state_for)
-
-        if cfg.local_algo == "scaffold":
-            for plan, p, s, w0 in buckets:
-                new_c = jax.vmap(
-                    lambda st, a, b: scaffold_new_control(
-                        st, a, b, cfg.client_lr))(s, w0, p)
-                for i, cid in enumerate(plan.cids):
-                    state.scaffold_c_clients[int(cid)] = jax.tree.map(
-                        lambda x, i=i: x[i], new_c)
-            cs = state.scaffold_c_clients
-            state.scaffold_c_global = jax.tree.map(
-                lambda *xs: sum(xs) / len(xs), *cs)
-
-        # --- per-group aggregation (Eq. 2): one fused segment reduction ---
-        stacked_globals = vec_engine.aggregate_groups(
-            stacked_clients, sizes, group_ids, cfg.K)
-        new_globals = vec_engine.unstack_models(stacked_globals)
-
-        # --- temporal ensemble push (Eq. 5): the (K, ...) stack goes into
-        # the device bank as-is, no per-model host hop ---
-        state.ensemble.push(t, stacked_globals)
-
-        # --- distillation (Eq. 3-4), teachers as one stacked forward ---
-        kd_info = {}
-        if cfg.distill_target != "none" and t > cfg.distill_warmup_rounds:
-            if cfg.ensemble_source == "clients":
-                teacher_stack = stacked_clients
-                if cfg.ensemble_extra_sampled:
-                    extras = self._sample_posterior(
-                        vec_engine.unstack_models(stacked_clients),
-                        list(sizes), cfg.ensemble_extra_sampled, t)
-                    extras.append(new_globals[0])
-                    teacher_stack = tree_concat(
-                        [teacher_stack, tree_stack(extras)])
-            else:
-                teacher_stack = state.ensemble.members_stacked()
-            kd_info = self._distill_models(new_globals, teacher_stack,
-                                           stacked=True,
-                                           stacked_students=stacked_globals)
-
-        state.global_models = new_globals
-        state.round = t
-        rec = {"round": t, "active": len(active), **kd_info}
-        if self.task.eval_fn is not None:
-            rec["acc_main"] = self.task.eval_fn(new_globals[0])
-        state.history.append(rec)
-        return state
 
     def _sample_posterior(self, models, sizes, n_samples, seed):
         """FedBE-style Gaussian posterior samples around the weighted mean."""
@@ -455,10 +363,16 @@ class FederatedRunner:
         for _ in range(rounds or self.cfg.rounds):
             state = self.run_round(state)
             if log_every and state.round % log_every == 0:
+                # overlap modes: the newest record's KD/eval fields land at
+                # resolve time — log the newest COMPLETE record (one behind)
                 rec = state.history[-1]
-                print(f"[round {state.round:3d}] " +
+                if state.pending_kd is not None:
+                    if len(state.history) < 2:
+                        continue
+                    rec = state.history[-2]
+                print(f"[round {rec['round']:3d}] " +
                       " ".join(f"{k}={v}" for k, v in rec.items() if k != "round"))
-        return state
+        return self.finalize(state)
 
     # ---- evaluation helpers ----------------------------------------------
     def ensemble_eval_fn(self, state: FedState):
@@ -466,6 +380,234 @@ class FederatedRunner:
         teachers = state.ensemble.members() or state.global_models
         return lambda batch: dist.ensemble_predict(
             teachers, batch, self.task.logits_fn)
+
+
+# =====================================================================
+# per-engine phase bodies (consumed by round_plan.RoundExecutor)
+# =====================================================================
+class _SequentialRoundOps:
+    """The oracle per-client Python loop, split into executor phases.
+
+    ``subset`` selection ("all" | "rest" = groups k>0 | "main" = group 0)
+    walks the pre-drawn entry list in group-major order, so the phase
+    split changes WHEN clients train, never WHAT they compute.
+    """
+
+    def __init__(self, runner, state, groups, rng, t):
+        self.runner, self.state = runner, state
+        self.groups, self.t = groups, t
+        self.entries = vec_engine.build_round_entries(
+            runner.task, runner.cfg, groups, rng)
+        self.models: list = [None] * len(self.entries)   # by round position
+
+    def fused_capable(self) -> bool:
+        return False    # a Python loop has no scan subgraph to fuse
+
+    def _subset(self, which: str):
+        if which == "all":
+            return self.entries
+        if which == "rest":
+            return [e for e in self.entries if e.group != 0]
+        return [e for e in self.entries if e.group == 0]
+
+    def train(self, which: str, run_buckets=None) -> None:
+        state = self.state
+        for e in self._subset(which):
+            self.models[e.pos] = self.runner._local_train_scheduled(
+                state.global_models[e.group], e.cid, state, e.idx)
+
+    def finish_local(self) -> None:
+        state, cfg = self.state, self.runner.cfg
+        if cfg.local_algo == "scaffold":
+            # server control: c += |S|/N * mean_i (c_i' − c_i)  (we use the
+            # simpler running-average form: c = mean of client controls)
+            cs = state.scaffold_c_clients
+            state.scaffold_c_global = jax.tree.map(
+                lambda *xs: sum(xs) / len(xs), *cs)
+
+    def aggregate(self) -> list[PyTree]:
+        """Per-group Eq. 1-2 over the trained client models."""
+        cfg = self.runner.cfg
+        new_globals: list[PyTree] = []
+        for k in range(len(self.groups)):
+            ents = [e for e in self.entries if e.group == k]
+            client_models = [self.models[e.pos] for e in ents]
+            sizes = [e.n for e in ents]
+            if cfg.secure_aggregation:
+                agg, _uploads = secure_aggregate(client_models, sizes,
+                                                 seed=self.t)
+            else:
+                agg = fedavg_aggregate(client_models, sizes)
+            new_globals.append(agg)
+        self.new_globals = new_globals
+        return new_globals
+
+    def push(self, t: int, state) -> None:
+        state.ensemble.push(t, self.new_globals)
+
+    def _client_teachers_list(self, new_globals) -> list[PyTree]:
+        cfg, runner = self.runner.cfg, self.runner
+        teachers = list(self.models)
+        if cfg.ensemble_extra_sampled:
+            teachers += runner._sample_posterior(
+                self.models, [e.n for e in self.entries],
+                cfg.ensemble_extra_sampled, self.t)
+            teachers.append(new_globals[0])
+        return teachers
+
+    def inline_kd(self, new_globals) -> dict:
+        """The engine-native back-to-back KD block (the off-mode oracle)."""
+        cfg, runner, state = self.runner.cfg, self.runner, self.state
+        if cfg.ensemble_source == "clients":
+            return runner._distill_models(
+                new_globals, self._client_teachers_list(new_globals),
+                stacked=False)
+        if cfg.kd_pipeline == "fused":
+            # fused path reads the (M, ...) stack straight off the bank
+            return runner._distill_models(
+                new_globals, state.ensemble.members_stacked(), stacked=True)
+        return runner._distill_models(
+            new_globals, state.ensemble.members(), stacked=False)
+
+    def kd_teachers(self, new_globals) -> PyTree:
+        """(M, ...) stacked teacher snapshot for the deferred KD job."""
+        if self.runner.cfg.ensemble_source == "clients":
+            return tree_stack(self._client_teachers_list(new_globals))
+        return self.state.ensemble.members_stacked()
+
+
+class _VectorizedRoundOps:
+    """Stacked-engine phase bodies.
+
+    Secure aggregation needs no simulation here: pairwise masks cancel
+    identically inside the fused Eq. 2 reduction, so the plain weighted
+    mean IS the unmasked result.
+
+    Phase-split training buckets each subset separately, but clients are
+    reassembled into the full round's group-major order before the Eq. 2
+    segment reduction, so the aggregation consumes bit-identical operand
+    order whether the round ran split or whole.
+    """
+
+    def __init__(self, runner, state, groups, rng, t):
+        self.runner, self.state = runner, state
+        self.groups, self.t = groups, t
+        self.eng = runner._make_engine()
+        self.entries = vec_engine.build_round_entries(
+            runner.task, runner.cfg, groups, rng)
+        # round-stable pad targets: subset buckets (the overlap phase
+        # split) compile once instead of retracing per group shuffle
+        self.pad_hints = vec_engine.entry_pad_hints(self.entries)
+        self.results: list = []     # (stacked, gids, sizes, orders) / subset
+        self.buckets: list = []     # scaffold bookkeeping across subsets
+
+    def fused_capable(self) -> bool:
+        return self.eng._resolved_step_mode() == "scan"
+
+    def _subset(self, which: str):
+        if which == "all":
+            return self.entries
+        if which == "rest":
+            return [e for e in self.entries if e.group != 0]
+        return [e for e in self.entries if e.group == 0]
+
+    def train(self, which: str, run_buckets=None) -> None:
+        ents = self._subset(which)
+        if not ents:
+            return
+        runner, state, cfg = self.runner, self.state, self.runner.cfg
+        rplan = vec_engine.plan_from_entries(runner.task, ents, self.groups,
+                                             self.eng.data_cache,
+                                             pad_to=self.pad_hints)
+        optimizer = self.eng.optimizer
+        stacked_k = tree_stack(state.global_models)   # (K, ...) per phase
+
+        def init_params_for(plan):
+            gid = jnp.asarray(plan.group_of)
+            return jax.tree.map(lambda x: x[gid], stacked_k)
+
+        def init_opt_state_for(plan, w0):
+            s0 = jax.vmap(optimizer.init)(w0)
+            if cfg.local_algo == "scaffold":
+                c_loc = tree_stack([state.scaffold_c_clients[int(c)]
+                                    for c in plan.cids])
+                nb = len(plan.cids)
+                c_glob = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (nb,) + x.shape),
+                    state.scaffold_c_global)
+                s0 = s0._replace(c_local=c_loc, c_global=c_glob)
+            return s0
+
+        stacked, gids, sizes, buckets = self.eng.train_round(
+            rplan, init_params_for, init_opt_state_for,
+            run_buckets=run_buckets)
+        orders = np.sort(np.concatenate([p.order for p in rplan.plans]))
+        self.results.append((stacked, gids, sizes, orders))
+        self.buckets.extend(buckets)
+
+    def finish_local(self) -> None:
+        state, cfg = self.state, self.runner.cfg
+        if cfg.local_algo == "scaffold":
+            for plan, p, s, w0 in self.buckets:
+                new_c = jax.vmap(
+                    lambda st, a, b: scaffold_new_control(
+                        st, a, b, cfg.client_lr))(s, w0, p)
+                for i, cid in enumerate(plan.cids):
+                    state.scaffold_c_clients[int(cid)] = jax.tree.map(
+                        lambda x, i=i: x[i], new_c)
+            cs = state.scaffold_c_clients
+            state.scaffold_c_global = jax.tree.map(
+                lambda *xs: sum(xs) / len(xs), *cs)
+
+    def aggregate(self) -> list[PyTree]:
+        """Eq. 2 for every group at once — one fused segment reduction
+        over the round-ordered client stack."""
+        if len(self.results) == 1:
+            stacked, gids, sizes, _ = self.results[0]
+        else:
+            orders = np.concatenate([r[3] for r in self.results])
+            inv = np.argsort(orders)
+            perm = jnp.asarray(inv)
+            stacked = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs)[perm],
+                *[r[0] for r in self.results])
+            gids = np.concatenate([r[1] for r in self.results])[inv]
+            sizes = np.concatenate([r[2] for r in self.results])[inv]
+        self.stacked_clients, self.sizes = stacked, sizes
+        self.stacked_globals = vec_engine.aggregate_groups(
+            stacked, sizes, gids, self.runner.cfg.K)
+        self.new_globals = vec_engine.unstack_models(self.stacked_globals)
+        return self.new_globals
+
+    def push(self, t: int, state) -> None:
+        # the (K, ...) stack goes into the device bank as-is (Eq. 5)
+        state.ensemble.push(t, self.stacked_globals)
+
+    def _client_teacher_stack(self, new_globals) -> PyTree:
+        cfg, runner = self.runner.cfg, self.runner
+        teacher_stack = self.stacked_clients
+        if cfg.ensemble_extra_sampled:
+            extras = runner._sample_posterior(
+                vec_engine.unstack_models(self.stacked_clients),
+                list(self.sizes), cfg.ensemble_extra_sampled, self.t)
+            extras.append(new_globals[0])
+            teacher_stack = tree_concat([teacher_stack, tree_stack(extras)])
+        return teacher_stack
+
+    def inline_kd(self, new_globals) -> dict:
+        cfg, runner, state = self.runner.cfg, self.runner, self.state
+        if cfg.ensemble_source == "clients":
+            teacher_stack = self._client_teacher_stack(new_globals)
+        else:
+            teacher_stack = state.ensemble.members_stacked()
+        return runner._distill_models(new_globals, teacher_stack,
+                                      stacked=True,
+                                      stacked_students=self.stacked_globals)
+
+    def kd_teachers(self, new_globals) -> PyTree:
+        if self.runner.cfg.ensemble_source == "clients":
+            return self._client_teacher_stack(new_globals)
+        return self.state.ensemble.members_stacked()
 
 
 def make_runner(preset: str, task: FedTask, **overrides) -> FederatedRunner:

@@ -21,6 +21,23 @@ forces one jitted dispatch per step (the XLA:CPU escape hatch).  Unlike
 the client engine — whose vmapped loop bodies run ~10x slower under
 XLA:CPU scan — the KD bodies are dispatch-bound, so scan is the default
 on every backend (measured ~10x faster than stepped on CPU).
+
+**Sharded teacher precompute.**  FedDF-style ensembles
+(``ensemble_source='clients'``) carry an ``(C, ...)`` teacher stack that
+grows with participation; with ``mesh=make_client_mesh()`` the teacher
+pass shard_maps the member axis over the ``('clients',)`` mesh exactly
+like the client engine shards local training: every device forwards its
+teacher shard, one ``psum`` reduces the logit sum, and the fused
+``ensemble_softmax`` kernel normalizes — so the precompute stops scaling
+serially with C.  ``teacher_sharding`` takes the engine's
+``auto|vmap|shard_map`` policy (``REPRO_FORCE_SHARD_MAP=1`` forces it on
+a 1-device mesh for parity tests).
+
+**Overlap support.**  ``distill_async`` dispatches the whole KD phase and
+returns device arrays WITHOUT the end-of-phase host sync; the overlap
+executor (``core/round_plan.py``) uses it to run the KD program
+concurrently with groups k>0's local training and converts the losses
+with ``losses_info`` only at resolve time.
 """
 from __future__ import annotations
 
@@ -29,10 +46,13 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.kd_loss import ops as kd_ops
 from repro.optim.optimizers import apply_updates, sgd
-from repro.utils.pytree import tree_stack
+from repro.sharding.specs import CLIENT_AXIS
+from repro.utils.pytree import tree_cast, tree_stack
 
 PyTree = Any
 LogitsFn = Callable[[PyTree, Any], jnp.ndarray]
@@ -66,13 +86,17 @@ class KDPipeline:
 
     def __init__(self, logits_fn: LogitsFn, *, steps: int, lr: float,
                  temperature: float = 4.0, momentum: float = 0.9,
-                 step_mode: str = "auto"):
+                 step_mode: str = "auto", mesh=None,
+                 teacher_sharding: str = "auto"):
         assert step_mode in ("auto", "scan", "stepped")
+        assert teacher_sharding in ("auto", "vmap", "shard_map")
         self.logits_fn = logits_fn
         self.steps = int(steps)
         self.temperature = float(temperature)
         self.optimizer = sgd(lr, momentum=momentum)
         self.step_mode = step_mode
+        self.mesh = mesh
+        self.teacher_sharding = teacher_sharding
         self._precompute_fn = None
         self._scan_fns: dict[bool, Callable] = {}
         self._step_fns: dict[bool, Callable] = {}
@@ -89,20 +113,73 @@ class KDPipeline:
         return self._batches
 
     # --------------------------------------------------- teacher precompute
-    def precompute_teacher_probs(self, teacher_stack: PyTree,
-                                 batches: PyTree) -> jnp.ndarray:
-        """(M, ...) teachers × (n_batches, B, ...) batches -> (n_batches, B, V)."""
-        if self._precompute_fn is None:
-            logits_fn, tau = self.logits_fn, self.temperature
+    def _shard_teachers(self) -> bool:
+        """Shard decision for the teacher pass — the same shared policy
+        the client engine resolves (``launch.mesh.use_shard_map``)."""
+        from repro.launch.mesh import use_shard_map
+        return use_shard_map(self.mesh, self.teacher_sharding)
 
+    def _build_precompute(self):
+        logits_fn, tau = self.logits_fn, self.temperature
+        if not self._shard_teachers():
             @jax.jit
             def pre(ts, bs):
+                # f32 compute regardless of bank storage dtype: bf16-held
+                # members upcast at the forward boundary (XLA fuses the
+                # cast; only the ring stays half-width)
+                ts = tree_cast(ts, jnp.float32)
                 lg = jax.vmap(lambda p: jax.vmap(
                     lambda b: logits_fn(p, b))(bs))(ts)        # (M, nB, B, V)
                 return kd_ops.ensemble_softmax_many(
                     lg.astype(jnp.float32), tau)
 
-            self._precompute_fn = pre
+            return pre
+
+        from repro.launch.mesh import mesh_size
+        mesh = self.mesh
+        n_dev = mesh_size(mesh)
+
+        def local_logit_sum(ts, mask, bs):
+            # per-shard teacher forwards in ONE vmapped pass, f32 compute
+            # and f32 sum (bf16-held members upcast at the boundary)
+            ts = tree_cast(ts, jnp.float32)
+            lg = jax.vmap(lambda p: jax.vmap(
+                lambda b: logits_fn(p, b))(bs))(ts)            # (Ml, nB, B, V)
+            lg = lg.astype(jnp.float32) * mask.reshape(
+                (-1,) + (1,) * (lg.ndim - 1))
+            return jax.lax.psum(lg.sum(0), CLIENT_AXIS)        # (nB, B, V)
+
+        sharded = shard_map(local_logit_sum, mesh=mesh,
+                            in_specs=(P(CLIENT_AXIS), P(CLIENT_AXIS), P()),
+                            out_specs=P(), check_rep=False)
+
+        @jax.jit
+        def pre(ts, bs):
+            M = jax.tree.leaves(ts)[0].shape[0]
+            pad = (-M) % n_dev
+            mask = (jnp.arange(M + pad) < M).astype(jnp.float32)
+            if pad:  # replicate row 0, zero-masked: exact no-op members
+                ts = jax.tree.map(
+                    lambda x: jnp.concatenate(
+                        [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]),
+                    ts)
+            mean = sharded(ts, mask, bs) / M                   # (nB, B, V)
+            # softmax(mean/τ) through the same fused kernel (M=1 stack)
+            return kd_ops.ensemble_softmax_many(mean[None], tau)
+
+        return pre
+
+    def precompute_teacher_probs(self, teacher_stack: PyTree,
+                                 batches: PyTree) -> jnp.ndarray:
+        """(M, ...) teachers × (n_batches, B, ...) batches -> (n_batches, B, V).
+
+        With an active ``('clients',)`` mesh the member axis is sharded
+        (one logit-sum ``psum`` instead of a device-serial M-loop) — the
+        FedDF ``(C, ...)`` client-teacher stack stops costing O(C) on one
+        device.
+        """
+        if self._precompute_fn is None:
+            self._precompute_fn = self._build_precompute()
         return self._precompute_fn(teacher_stack, batches)
 
     # ------------------------------------------------------- KD step body
@@ -188,16 +265,34 @@ class KDPipeline:
         return student, jnp.stack(losses, axis=axis)
 
     # ------------------------------------------------------------- public
-    def _dispatch(self, student, teacher_stack, server_batches, multi: bool):
-        # deferred: repro.core's package init reaches back into this module
+    def scan_capable(self) -> bool:
+        """True when the KD phase lowers to the single-scan program — the
+        form the overlap executor can fuse with the engine's bucket scans."""
         from repro.core.engine import resolve_step_mode
+        return resolve_step_mode(self.step_mode, cpu_default="scan") == "scan"
+
+    def distill_async(self, student: PyTree, teacher_stack: PyTree,
+                      server_batches: Sequence[Any],
+                      multi: bool = False) -> tuple[PyTree, jnp.ndarray]:
+        """Dispatch the whole KD phase; NO host sync — returns device
+        ``(student, losses)``.  Convert losses with ``losses_info`` when
+        the result is actually needed (the overlap executor's resolve
+        phase).  The device program starts immediately, so local training
+        dispatched afterwards runs concurrently with it.
+        """
         batches = self.batches_for(server_batches)
         probs = self.precompute_teacher_probs(teacher_stack, batches)
-        if resolve_step_mode(self.step_mode, cpu_default="scan") == "scan":
-            student, losses = self._scan_fn(multi)(student, batches, probs)
-        else:
-            student, losses = self._run_stepped(student, batches, probs,
-                                                multi)
+        if self.scan_capable():
+            return self._scan_fn(multi)(student, batches, probs)
+        return self._run_stepped(student, batches, probs, multi)
+
+    def losses_info(self, losses) -> dict:
+        """The per-round kd record (ONE host sync) for async losses."""
+        return self._info(losses)
+
+    def _dispatch(self, student, teacher_stack, server_batches, multi: bool):
+        student, losses = self.distill_async(student, teacher_stack,
+                                             server_batches, multi)
         return student, self._info(losses)
 
     def distill(self, student: PyTree, teacher_stack: PyTree,

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.fedckpt.checkpointer import spill_members
-from repro.utils.pytree import tree_stack, tree_unstack
+from repro.utils.pytree import tree_bytes, tree_stack, tree_unstack
 
 PyTree = Any
 
@@ -71,15 +71,32 @@ class TeacherBank:
     vectorized engine and the fused KD pipeline consume directly, M = K ×
     rounds-held, newest round first (fewer than K·R during the first R−1
     rounds).
+
+    ``dtype`` is the on-device storage precision knob: with
+    ``dtype=jnp.bfloat16`` floating-point leaves are held (and pushed)
+    bf16, halving bank HBM so R can double at the same memory; the KD
+    pipeline and the legacy oracle both cast teacher *logits* to f32
+    before the ensemble reduction, so ``ensemble_softmax`` compute stays
+    f32 and only the stored weights are rounded.  Integer/bool leaves
+    keep their dtype.  Spill files are f32 containers either way
+    (``fedckpt`` upcasts bf16 losslessly).
     """
 
-    def __init__(self, K: int, R: int, spill_dir: str | None = None):
+    def __init__(self, K: int, R: int, spill_dir: str | None = None,
+                 dtype=None):
         assert K >= 1 and R >= 1
         self.K, self.R = K, R
         self.spill_dir = spill_dir
+        self.dtype = jnp.dtype(dtype) if dtype is not None else None
         self._bank: PyTree | None = None           # leaves (R, K, ...)
         self._slot_rounds: list[int | None] = [None] * R
         self._cursor = 0
+
+    def _store_dtype(self, leaf):
+        if self.dtype is not None and jnp.issubdtype(leaf.dtype,
+                                                     jnp.floating):
+            return self.dtype
+        return leaf.dtype
 
     # ------------------------------------------------------------- write
     def push(self, round_idx: int, global_models: Sequence[PyTree] | PyTree,
@@ -99,7 +116,8 @@ class TeacherBank:
             assert lead == self.K, (lead, self.K)
         if self._bank is None:
             self._bank = jax.tree.map(
-                lambda m: jnp.zeros((self.R,) + m.shape, m.dtype),
+                lambda m: jnp.zeros((self.R,) + m.shape,
+                                    self._store_dtype(m)),
                 member_stack)
         slot = self._cursor
         evicted = self._slot_rounds[slot]
@@ -139,6 +157,13 @@ class TeacherBank:
     @property
     def num_members(self) -> int:
         return self.K * sum(r is not None for r in self._slot_rounds)
+
+    def nbytes(self) -> int:
+        """Device bytes held by the ring — the quantity the bf16 storage
+        knob halves (see ``benchmarks/bench_distill.teacher_bank_precision``)."""
+        if self._bank is None:
+            return 0
+        return tree_bytes(self._bank)
 
     def rounds_held(self) -> list[int]:
         return sorted(r for r in self._slot_rounds if r is not None)

@@ -27,11 +27,35 @@ def make_local_mesh(data: int = 1, model: int = 1):
 
 
 def make_client_mesh(num_devices: int | None = None):
-    """1-D ``('clients',)`` mesh for the vectorized client engine.
+    """1-D ``('clients',)`` mesh for the vectorized client engine AND the
+    KD pipeline's sharded teacher precompute.
 
     The engine stacks sampled clients along a leading axis and shard_maps
-    local training over this mesh; with one device (CPU tests) the engine
-    degenerates to plain vmap unless REPRO_FORCE_SHARD_MAP=1.
+    local training over this mesh; the KD pipeline shard_maps the FedDF
+    ``(C, ...)`` teacher stack's member axis over the same mesh.  With one
+    device (CPU tests) both degenerate to plain vmap unless
+    REPRO_FORCE_SHARD_MAP=1.
     """
     n = num_devices or len(jax.devices())
     return jax.make_mesh((n,), ("clients",))
+
+
+def mesh_size(mesh) -> int:
+    """Total device count of a mesh (the shard count the engine and the
+    KD pipeline pad their leading axes to)."""
+    import numpy as np
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def use_shard_map(mesh, policy: str) -> bool:
+    """THE auto|vmap|shard_map decision, shared by the client engine and
+    the KD pipeline's teacher precompute so the two sharded paths can
+    never drift: ``vmap`` never shards, ``shard_map`` (or the
+    ``REPRO_FORCE_SHARD_MAP=1`` escape hatch) always does when a mesh
+    exists, ``auto`` shards exactly when the mesh spans >1 device."""
+    import os
+    if policy == "vmap" or mesh is None:
+        return False
+    if policy == "shard_map" or os.environ.get("REPRO_FORCE_SHARD_MAP") == "1":
+        return True
+    return mesh_size(mesh) > 1

@@ -46,11 +46,21 @@ def main() -> None:
                     choices=["sequential", "vectorized"],
                     help="client-execution engine (vectorized = fused "
                          "vmap/shard_map round loop)")
-    ap.add_argument("--kd-pipeline", default="legacy",
+    ap.add_argument("--kd-pipeline", default="fused",
                     choices=["legacy", "fused"],
-                    help="server KD phase: legacy host-driven loop (the "
-                         "oracle, default until fused has soaked) or the "
-                         "fully-jitted fused pipeline")
+                    help="server KD phase: the fully-jitted fused pipeline "
+                         "(default) or the legacy host-driven parity oracle")
+    ap.add_argument("--overlap", default="off",
+                    choices=["off", "async", "fused"],
+                    help="overlapped round execution (paper Fig. 2): run "
+                         "round t's server KD concurrently with round "
+                         "t+1's k>0 local training — async = two device "
+                         "dispatches, fused = one combined device program; "
+                         "off = back-to-back oracle")
+    ap.add_argument("--teacher-dtype", default=None,
+                    choices=["float32", "bfloat16"],
+                    help="teacher-bank storage precision (bfloat16 halves "
+                         "bank memory; ensemble compute stays f32)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None, help="write history JSON here")
@@ -71,6 +81,7 @@ def main() -> None:
         rounds=args.rounds, local_epochs=args.local_epochs,
         distill_steps=args.distill_steps, seed=args.seed,
         execution=args.execution, kd_pipeline=args.kd_pipeline,
+        overlap=args.overlap, teacher_dtype=args.teacher_dtype,
         **({"K": args.K, "R": args.R}
            if PRESETS[args.preset].get("K", 1) > 1 else {}),
         **overrides)
@@ -88,8 +99,22 @@ def main() -> None:
             msg += f" kd={rec['kd_loss_last']:.4f}"
         print(msg, flush=True)
         if ckpt:
-            ckpt.save(state.round, state.global_models[0],
-                      meta={"round": state.round})
+            if state.pending_kd is None:
+                ckpt.save(state.round, state.global_models[0],
+                          meta={"round": state.round})
+            elif state.last_distilled is not None:
+                # overlap modes: round t's KD is still in flight, so
+                # global_models[0] is the RAW aggregate — checkpoint the
+                # newest resolved round instead (one behind, identical to
+                # the off-mode checkpoint of that round)
+                r_done, model = state.last_distilled
+                ckpt.save(r_done, model, meta={"round": r_done})
+    # overlap modes defer the last round's KD — drain it so the final
+    # model/checkpoint equals the overlap="off" result
+    state = runner.finalize(state)
+    if ckpt and args.overlap != "off":
+        ckpt.save(state.round, state.global_models[0],
+                  meta={"round": state.round, "drained": True})
     print(f"done in {time.time() - t0:.1f}s")
     if args.out:
         os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)

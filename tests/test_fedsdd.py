@@ -59,7 +59,10 @@ def test_distillation_updates_only_main_model(task):
 
 def test_kd_cost_independent_of_clients(task):
     """Remark 2 / Table 1: FedSDD's teacher count is K·R regardless of C;
-    FedDF's equals C."""
+    FedDF's equals C.  Counted through the legacy oracle's per-batch
+    teacher pass (kd_pipeline='legacy' — the fused pipeline never calls
+    ensemble_probs; its teacher-stack axis is checked in
+    test_engine_parity.test_teacher_stack_size_independent_of_clients)."""
     calls = []
     orig = dist.ensemble_probs
 
@@ -73,18 +76,18 @@ def test_kd_cost_independent_of_clients(task):
             t = classification_task(model="cnn", num_clients=n_clients,
                                     alpha=0.5, num_train=200, num_server=256)
             calls.clear()
-            make_runner("fedsdd", t, K=2, R=1,
+            make_runner("fedsdd", t, K=2, R=1, kd_pipeline="legacy",
                         **small(num_clients=n_clients, distill_steps=2)
                         ).run(rounds=1)
-            assert all(c == 2 for c in calls), (n_clients, calls)
+            assert calls and all(c == 2 for c in calls), (n_clients, calls)
         for n_clients, expect in ((4, 4), (8, 8)):
             t = classification_task(model="cnn", num_clients=n_clients,
                                     alpha=0.5, num_train=200, num_server=256)
             calls.clear()
-            make_runner("feddf", t,
+            make_runner("feddf", t, kd_pipeline="legacy",
                         **small(num_clients=n_clients, distill_steps=2)
                         ).run(rounds=1)
-            assert all(c == expect for c in calls), (n_clients, calls)
+            assert calls and all(c == expect for c in calls), (n_clients, calls)
     finally:
         dist.ensemble_probs = orig
 

@@ -1,6 +1,10 @@
 """Round-time scheduler: reproduces the STRUCTURE of paper Table 3 and the
 Fig. 2 parallelism example."""
-from repro.core.scheduler import Workload, round_time_comparison, simulate
+import pytest
+
+from repro.core.scheduler import (
+    Workload, overlap_summary, round_time_comparison, simulate,
+)
 
 
 def test_feddf_kd_grows_with_clients_fedsdd_flat():
@@ -56,6 +60,20 @@ def test_kd_precompute_extends_kd_job():
     plain = simulate(Workload(**base))
     with_pre = simulate(Workload(**base, kd_precompute_time=2.0))
     assert with_pre.makespan == plain.makespan + 2 * 2.0
+
+
+def test_overlap_summary_bounds():
+    """The measured-overlap accounting the benches report: a perfectly
+    hidden KD sits at the ideal, a serial round at hidden_fraction 0."""
+    ideal = overlap_summary(10.0, 8.0, 10.0)
+    assert ideal["ratio_vs_ideal"] == pytest.approx(1.0)
+    assert ideal["hidden_fraction"] == pytest.approx(1.0)
+    serial = overlap_summary(10.0, 8.0, 18.0)
+    assert serial["ratio_vs_ideal"] == pytest.approx(1.8)
+    assert serial["hidden_fraction"] == pytest.approx(0.0)
+    half = overlap_summary(10.0, 8.0, 14.0)
+    assert half["hidden_fraction"] == pytest.approx(0.5)
+    assert half["serial"] == 18.0 and half["ideal"] == 10.0
 
 
 def test_trace_events_cover_all_jobs():
