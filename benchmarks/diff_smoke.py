@@ -1,0 +1,147 @@
+"""Warn-only bench-smoke regression report.
+
+Diffs a fresh ``bench-smoke.jsonl`` (one JSON object per bench row, as
+emitted by ``benchmarks/common.py::CSV``) against the committed
+``benchmarks/baseline-smoke.json`` and writes a markdown report — to the
+GitHub job summary when ``--summary`` is given (CI passes
+``$GITHUB_STEP_SUMMARY``), else stdout.
+
+ALWAYS exits 0: CI runner timing is noisy, so this is a trajectory
+tripwire humans read, not a gate.  Rows are matched by name; timing rows
+(us_per_call > 0) are flagged when slower than ``--threshold`` × baseline
+(default 1.5); ``pass=False`` appearing in any fresh derived field is
+flagged regardless of timing.  New/missing rows are listed so silent
+bench-coverage drift shows up too.
+
+Refresh the baseline (after an intentional perf change) with::
+
+    PYTHONPATH=src python benchmarks/run.py --smoke --jsonl bench-smoke.jsonl
+    python benchmarks/diff_smoke.py bench-smoke.jsonl --write-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline-smoke.json")
+
+
+def load_jsonl(path: str) -> dict[str, dict]:
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                r = json.loads(line)
+                rows[r["name"]] = {"us_per_call": r.get("us_per_call", 0.0),
+                                   "derived": r.get("derived", "")}
+    return rows
+
+
+def load_baseline(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        return json.load(f)["rows"]
+
+
+def write_baseline(rows: dict[str, dict], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump({"rows": rows,
+                   "note": "bench-smoke baseline for diff_smoke.py; "
+                           "refresh with --write-baseline after "
+                           "intentional perf changes"}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+
+
+def diff(fresh: dict[str, dict], base: dict[str, dict],
+         threshold: float) -> tuple[list[str], list[str]]:
+    """Returns (markdown lines, warning names)."""
+    lines = ["| bench row | baseline us | fresh us | ratio | note |",
+             "|---|---|---|---|---|"]
+    warns = []
+    for name in sorted(set(base) | set(fresh)):
+        if name not in fresh:
+            lines.append(f"| `{name}` | {base[name]['us_per_call']:.1f} | — "
+                         f"| — | :warning: row disappeared |")
+            warns.append(name)
+            continue
+        f_us = fresh[name]["us_per_call"]
+        if name not in base:
+            note = "new row"
+            if "pass=False" in fresh[name]["derived"]:
+                note += "; :warning: pass=False"
+                warns.append(name)
+            lines.append(f"| `{name}` | — | {f_us:.1f} | — | {note} |")
+            continue
+        b_us = base[name]["us_per_call"]
+        notes = []
+        ratio = "—"
+        if b_us > 0 and f_us > 0:
+            r = f_us / b_us
+            ratio = f"{r:.2f}x"
+            if r > threshold:
+                notes.append(f":warning: >{threshold:.1f}x slower")
+                warns.append(name)
+        if "pass=False" in fresh[name]["derived"]:
+            notes.append(":warning: pass=False")
+            warns.append(name)
+        lines.append(f"| `{name}` | {b_us:.1f} | {f_us:.1f} | {ratio} | "
+                     f"{'; '.join(notes)} |")
+    return lines, sorted(set(warns))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", help="fresh bench-smoke.jsonl")
+    ap.add_argument("baseline", nargs="?", default=DEFAULT_BASELINE)
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="slowdown ratio that earns a warning (default 1.5)")
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown report here "
+                         "(CI: $GITHUB_STEP_SUMMARY); default stdout")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="overwrite the baseline with the fresh rows "
+                         "instead of diffing")
+    args = ap.parse_args()
+
+    try:
+        fresh = load_jsonl(args.jsonl)
+    except (OSError, json.JSONDecodeError, KeyError, TypeError,
+            AttributeError) as e:
+        # warn-only contract: a missing/truncated/off-schema jsonl (e.g.
+        # the bench step died mid-run) reports instead of raising
+        print(f"cannot read {args.jsonl}: {e!r}; no report generated",
+              file=sys.stderr)
+        return
+    if args.write_baseline:
+        write_baseline(fresh, args.baseline)
+        print(f"baseline refreshed: {args.baseline} ({len(fresh)} rows)")
+        return
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; run --write-baseline first",
+              file=sys.stderr)
+        return                       # warn-only: never fail the job
+    try:
+        base = load_baseline(args.baseline)
+    except (OSError, json.JSONDecodeError, KeyError, TypeError,
+            AttributeError) as e:
+        print(f"cannot read baseline {args.baseline}: {e!r}; "
+              f"no report generated", file=sys.stderr)
+        return
+    lines, warns = diff(fresh, base, args.threshold)
+    head = ("## Bench-smoke vs committed baseline (warn-only)\n\n"
+            + (f"**{len(warns)} row(s) flagged** — CI timing is noisy; "
+               f"treat as a trajectory hint, not a gate.\n\n" if warns
+               else "No regressions flagged.\n\n"))
+    report = head + "\n".join(lines) + "\n"
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(report)
+    print(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -40,7 +40,9 @@ def run_smoke(csv: CSV) -> None:
     measurement — fails loudly if a kernel, the execution engine, the KD
     pipeline, or the overlap executor regresses."""
     from benchmarks import bench_kernels
-    from benchmarks.bench_distill import kd_throughput, teacher_bank_precision
+    from benchmarks.bench_distill import (
+        kd_memory, kd_throughput, teacher_bank_precision,
+    )
     from benchmarks.bench_roundtime import measure_round_time, overlap_comparison
     bench_kernels.run(SMOKE, csv)
     for mode in ("sequential", "vectorized"):
@@ -50,6 +52,8 @@ def run_smoke(csv: CSV) -> None:
                 f"rounds_per_s={1.0 / dt:.2f}")
     kd_throughput(csv, K=4, R=2, steps=20, reps=1, prefix="smoke")
     teacher_bank_precision(csv, reps=1, prefix="smoke")
+    # flash-KD: compressed-cache bytes + vocab-tiled kernel vs dense
+    kd_memory(csv, Vs=(512,), steps=8, reps=1, prefix="smoke")
     # the overlapped-executor measurement at its t3 operating point (~2
     # min): smaller configs give the min-over-window estimator too few
     # quiet windows on shared CI runners and the ratio row turns to noise

@@ -26,18 +26,24 @@ def main() -> None:
 
     print("== FedSDD (K=2 global models, R=2 temporal checkpoints) ==")
     # The server KD phase runs as one jitted program by default
-    # (kd_pipeline="fused"): teacher probs for the whole distillation set
-    # precomputed through the device-resident teacher bank, then the full
-    # step schedule as one lax.scan ("legacy" is the host-driven oracle).
+    # (kd_pipeline="fused"): the round's teacher cache precomputed through
+    # the device-resident teacher bank, then the full step schedule as one
+    # lax.scan ("legacy" is the host-driven oracle).
+    # kd_kernel="flash" swaps the f32 teacher-PROB cache for the
+    # compressed bf16 mean-LOGIT cache (half the bytes + a tiny f32
+    # normalizer residual) and fuses τ-softmax + log-softmax + KL into
+    # streaming vocab tiles — the production path for LM-sized
+    # vocabularies; "dense" stays the parity oracle.
     # overlap="fused" adds the paper's Fig. 2 scheduling: round t's KD is
     # deferred into round t+1, running concurrently with the k>0 groups'
     # local training — only group 0 waits for the distilled model, and
     # runner.run() drains the last pending KD so the result is identical
-    # to overlap="off" (see ROADMAP "Overlapped rounds" for the knobs).
+    # to overlap="off" (see ROADMAP "Overlapped rounds" / "Flash-KD" for
+    # the knobs).
     fedsdd = make_runner("fedsdd", task, num_clients=8, participation=1.0,
                          K=2, R=2, local_epochs=2, client_lr=0.1,
                          client_batch=64, distill_steps=30, server_lr=0.05,
-                         overlap="fused")
+                         overlap="fused", kd_kernel="flash")
     st_sdd = fedsdd.run(rounds=5, log_every=1)
 
     a, b = st_avg.history[-1]["acc_main"], st_sdd.history[-1]["acc_main"]

@@ -63,6 +63,14 @@ def ensemble_probs_stacked(stacked_teachers: PyTree, batch,
     return kd_ops.ensemble_softmax(lg, temperature)
 
 
+def ensemble_mean_logits_stacked(stacked_teachers: PyTree, batch,
+                                 logits_fn: LogitsFn) -> jnp.ndarray:
+    """(B, V) mean teacher logit from the stacked (M, ...) teacher pytree —
+    the flash-KD cache representation (Eq. 3/5 before the τ-softmax)."""
+    return jnp.mean(stacked_teacher_logits(stacked_teachers, batch,
+                                           logits_fn), axis=0)
+
+
 def ensemble_probs(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn,
                    temperature: float = 1.0):
     return jax.nn.softmax(ensemble_logits(teachers, batch, logits_fn) / temperature,
@@ -73,16 +81,25 @@ def ensemble_predict(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn):
     return jnp.argmax(ensemble_logits(teachers, batch, logits_fn), axis=-1)
 
 
-def make_kd_step(logits_fn: LogitsFn, optimizer: Optimizer, temperature: float):
-    """Build a jitted KD step: student ← student − lr ∇ KL(teacher ‖ student)."""
+def make_kd_step(logits_fn: LogitsFn, optimizer: Optimizer, temperature: float,
+                 kd_kernel: str = "dense"):
+    """Build a jitted KD step: student ← student − lr ∇ KL(teacher ‖ student).
 
-    def loss_fn(student, batch, teacher_probs):
+    ``kd_kernel="dense"`` consumes f32 teacher *probs*; ``"flash"``
+    consumes the mean teacher *logit* row through the vocab-tiled
+    streaming kernel (``kernels/kd_loss/flash``).
+    """
+    assert kd_kernel in ("dense", "flash")
+
+    def loss_fn(student, batch, teacher_row):
         s_logits = logits_fn(student, batch)
-        return kd_ops.kd_loss(s_logits, teacher_probs, temperature=temperature)
+        if kd_kernel == "flash":
+            return kd_ops.flash_kd_loss(s_logits, teacher_row, temperature)
+        return kd_ops.kd_loss(s_logits, teacher_row, temperature=temperature)
 
     @jax.jit
-    def step(student, opt_state, batch, teacher_probs):
-        loss, grads = jax.value_and_grad(loss_fn)(student, batch, teacher_probs)
+    def step(student, opt_state, batch, teacher_row):
+        loss, grads = jax.value_and_grad(loss_fn)(student, batch, teacher_row)
         updates, opt_state = optimizer.update(grads, opt_state, student)
         return apply_updates(student, updates), opt_state, loss
 
@@ -98,7 +115,8 @@ def distill(student: PyTree,
             lr: float = 0.1,
             temperature: float = 4.0,
             momentum: float = 0.9,
-            stacked_teachers: bool = False) -> tuple[PyTree, dict]:
+            stacked_teachers: bool = False,
+            kd_kernel: str = "dense") -> tuple[PyTree, dict]:
     """Run ``steps`` KD minibatch steps (paper: 5000 steps, SGD, τ=4).
 
     ``server_batches``: sequence of batches cycled over; teacher probs are
@@ -109,29 +127,43 @@ def distill(student: PyTree,
     carry a leading member axis (the vectorized engine's representation);
     the teacher forward is a single (M, B, V) batched pass instead of a
     member-at-a-time loop.
+
+    ``kd_kernel="flash"`` caches the mean teacher *logit* row per batch
+    (the compressed representation) and runs the vocab-tiled streaming
+    KL kernel instead of the dense probs path — the host-driven twin of
+    ``KDPipeline(kd_kernel="flash")``, kept as its parity oracle.
     """
     optimizer = sgd(lr, momentum=momentum)
     opt_state = optimizer.init(student)
-    kd_step = make_kd_step(logits_fn, optimizer, temperature)
+    kd_step = make_kd_step(logits_fn, optimizer, temperature,
+                           kd_kernel=kd_kernel)
 
-    if stacked_teachers:
-        teacher_probs_fn = jax.jit(
+    if kd_kernel == "flash":
+        if stacked_teachers:
+            teacher_row_fn = jax.jit(
+                lambda batch: ensemble_mean_logits_stacked(
+                    teachers, batch, logits_fn))
+        else:
+            teacher_row_fn = jax.jit(
+                lambda batch: ensemble_logits(teachers, batch, logits_fn))
+    elif stacked_teachers:
+        teacher_row_fn = jax.jit(
             lambda batch: ensemble_probs_stacked(
                 teachers, batch, logits_fn, temperature))
     else:
-        teacher_probs_fn = jax.jit(
+        teacher_row_fn = jax.jit(
             lambda batch: ensemble_probs(teachers, batch, logits_fn,
                                          temperature))
 
     losses = []
     n = len(server_batches)
-    # teacher probs are recomputed per unique batch then cached — the
-    # teachers do one forward per batch total, not per step
+    # the teacher row (probs, or mean logits for flash) is computed per
+    # unique batch then cached — one teacher forward per batch, not per step
     cache: dict[int, jnp.ndarray] = {}
     for s in range(steps):
         bi = s % n
         if bi not in cache:
-            cache[bi] = teacher_probs_fn(server_batches[bi])
+            cache[bi] = teacher_row_fn(server_batches[bi])
         student, opt_state, loss = kd_step(student, opt_state,
                                            server_batches[bi], cache[bi])
         losses.append(loss)  # device scalar — converted ONCE below, so the

@@ -72,6 +72,12 @@ class FedConfig:
     execution: str = "sequential"   # sequential (oracle) | vectorized
     client_sharding: str = "auto"   # auto | vmap | shard_map
     kd_pipeline: str = "fused"      # fused (one program) | legacy (oracle)
+    # KD kernel family: "dense" consumes the f32 ensemble-PROB cache (the
+    # parity oracle); "flash" stores the mean teacher LOGIT cache
+    # (teacher_cache_dtype, bf16 default = half the bytes) and fuses
+    # τ-softmax + log-softmax + KL into streaming vocab tiles
+    kd_kernel: str = "dense"        # dense (oracle) | flash
+    teacher_cache_dtype: Optional[str] = None  # None (auto) | float32 | bfloat16
     # overlapped round execution (paper Fig. 2): run round t's server KD
     # concurrently with round t+1's k>0 local training — an exact
     # reordering; ``off`` is the back-to-back oracle.  See core/round_plan.
@@ -91,6 +97,16 @@ class FedConfig:
         assert self.execution in ("sequential", "vectorized")
         assert self.client_sharding in ("auto", "vmap", "shard_map")
         assert self.kd_pipeline in ("legacy", "fused")
+        assert self.kd_kernel in ("dense", "flash")
+        assert self.teacher_cache_dtype in (None, "float32", "bfloat16")
+        if self.teacher_cache_dtype is not None:
+            assert self.kd_kernel == "flash", \
+                "teacher_cache_dtype selects the flash mean-logit cache " \
+                "precision — the dense oracle's prob cache is f32-only"
+            assert self.kd_pipeline == "fused", \
+                "the compressed teacher cache lives in the fused " \
+                "KDPipeline; the legacy host loop keeps f32 rows, so a " \
+                "cache dtype there would be silently inert"
         assert self.overlap in ("off", "async", "fused")
         assert self.teacher_dtype in (None, "float32", "bfloat16")
         if self.overlap != "off":
@@ -260,7 +276,9 @@ class FederatedRunner:
                 self.task.logits_fn, steps=cfg.distill_steps,
                 lr=cfg.server_lr, temperature=cfg.temperature,
                 mesh=make_client_mesh(),
-                teacher_sharding=cfg.client_sharding)
+                teacher_sharding=cfg.client_sharding,
+                kd_kernel=cfg.kd_kernel,
+                cache_dtype=cfg.teacher_cache_dtype)
         return self._kd_pipe
 
     def _executor(self) -> round_plan.RoundExecutor:
@@ -302,7 +320,8 @@ class FederatedRunner:
                 new_globals[k], teachers, self.task.server_batches,
                 self.task.logits_fn,
                 steps=cfg.distill_steps, lr=cfg.server_lr,
-                temperature=cfg.temperature, stacked_teachers=stacked)
+                temperature=cfg.temperature, stacked_teachers=stacked,
+                kd_kernel=cfg.kd_kernel)
         return kd_info
 
     # ---- one round (Algorithm 1) -----------------------------------------
@@ -329,6 +348,33 @@ class FederatedRunner:
         self._executor().resolve_pending(state)
         self._executor().close()
         return state
+
+    # ---- pending-KD spill/restore (checkpoints taken mid-round) ----------
+    def spill_pending(self, state: FedState, directory: str) -> str | None:
+        """Persist an in-flight deferred KD job next to a mid-round
+        checkpoint (overlap modes) so it survives the process instead of
+        being silently lost; returns the npz path, or None when no KD is
+        pending."""
+        if state.pending_kd is None:
+            return None
+        return round_plan.spill_pending_kd(directory, state.pending_kd)
+
+    def restore_pending(self, state: FedState,
+                        path: str) -> round_plan.PendingKD:
+        """Reload a spilled deferred KD job into ``state``; the next
+        ``resolve`` (or ``finalize``) re-runs it from its inputs — KD is
+        deterministic, so the result equals the never-interrupted drain.
+        The restored record is rebound to the live history record of the
+        same round when present, so late KD/eval fields still land."""
+        pending = round_plan.restore_pending_kd(path, state.global_models[0])
+        if state.history and state.history[-1].get("round") == \
+                pending.round_idx:
+            state.history[-1].update(pending.record)
+            pending.record = state.history[-1]
+        else:
+            state.history.append(pending.record)
+        state.pending_kd = pending
+        return pending
 
     # ---- vectorized engine ----------------------------------------------
     def _make_engine(self) -> vec_engine.VectorizedClientEngine:

@@ -56,11 +56,14 @@ parity-trivial.
 from __future__ import annotations
 
 import concurrent.futures as cf
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 
 PyTree = Any
 
@@ -87,6 +90,55 @@ class PendingKD:
         return self.dispatched
 
 
+# ---------------------------------------------------------------------
+# pending-KD spill/restore: checkpoints taken mid-round with a deferred
+# KD in flight persist the JOB (its inputs), not its output — KD is
+# deterministic given (student, teachers), so re-running it at restore
+# reproduces the drained result exactly.  The in-flight device
+# computation (if any) is simply abandoned.
+# ---------------------------------------------------------------------
+def spill_pending_kd(directory: str, pending: PendingKD) -> str:
+    """Serialize a deferred KD job through ``fedckpt``: one ``.npz`` with
+    the student + the (M, ...) teacher snapshot, plus a ``.json`` sidecar
+    (round_idx, the partially-filled history record, M).  Returns the npz
+    path ``pending_kd_r{round:05d}.npz``."""
+    from repro.fedckpt.checkpointer import save_pytree
+    path = os.path.join(directory,
+                        f"pending_kd_r{pending.round_idx:05d}.npz")
+    save_pytree(path, {"student": pending.student,
+                       "teachers": pending.teachers})
+    meta = {
+        "round_idx": pending.round_idx,
+        "record": {k: v for k, v in pending.record.items()},
+        "num_teachers": int(
+            jax.tree.leaves(pending.teachers)[0].shape[0]),
+    }
+    with open(path.replace(".npz", ".json"), "w") as f:
+        json.dump(meta, f, default=float)
+    return path
+
+
+def restore_pending_kd(path: str, student_like: PyTree) -> PendingKD:
+    """Rebuild a spilled ``PendingKD`` (``dispatched=None`` — the resolve
+    re-dispatches it).  ``student_like`` supplies the model structure;
+    the teacher snapshot restores as f32 (``fedckpt`` spills f32
+    containers; a bf16-held bank round-trips losslessly and the KD
+    pipeline casts teachers f32 at the forward boundary anyway)."""
+    from repro.fedckpt.checkpointer import load_pytree
+    with open(path.replace(".npz", ".json")) as f:
+        meta = json.load(f)
+    m = int(meta["num_teachers"])
+    like = {
+        "student": student_like,
+        "teachers": jax.tree.map(
+            lambda x: jnp.zeros((m,) + x.shape, jnp.float32), student_like),
+    }
+    tree = load_pytree(path, like)
+    return PendingKD(round_idx=int(meta["round_idx"]),
+                     student=tree["student"], teachers=tree["teachers"],
+                     record=dict(meta["record"]))
+
+
 class FusedKDLocalProgram:
     """KD scan + k>0 bucket-training scans as ONE jitted device program.
 
@@ -108,8 +160,8 @@ class FusedKDLocalProgram:
             pipe, engine = self.pipe, self.engine
 
             def prog(student, teachers, batches, bargs):
-                probs = pipe.precompute_teacher_probs(teachers, batches)
-                st, losses = pipe._scan_fn(False)(student, batches, probs)
+                cache = pipe.precompute_cache(teachers, batches)
+                st, losses = pipe._scan_fn(False)(student, batches, cache)
                 outs = [engine.scan_fn()(*a) for a in bargs]
                 return st, losses, outs
 

@@ -5,10 +5,12 @@ Two pieces, both built for device residency:
   * ``TeacherBank`` — the K·R temporal-ensemble checkpoints as ONE stacked
     pytree ring buffer on device (``teacher_bank``), replacing the old
     host-list ``core.temporal.TemporalEnsemble`` (which now aliases it).
-  * ``KDPipeline`` — the fully-jitted KD phase (``pipeline``): teacher
-    probs for the whole distillation set precomputed once per round, the
-    complete ``distill_steps`` schedule as one ``lax.scan`` program, and a
-    vmapped multi-student path for ``distill_target='all'``.
+  * ``KDPipeline`` — the fully-jitted KD phase (``pipeline``): the
+    round's teacher cache precomputed once (f32 probs for
+    ``kd_kernel="dense"``, the compressed bf16 mean-logit + lse-residual
+    pair for ``"flash"``), the complete ``distill_steps`` schedule as one
+    ``lax.scan`` program, and a vmapped multi-student path for
+    ``distill_target='all'``.
 
 The legacy host-driven loop (``core.distillation.distill``) remains the
 parity oracle behind ``FedConfig.kd_pipeline="legacy"``.

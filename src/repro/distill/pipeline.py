@@ -38,6 +38,18 @@ returns device arrays WITHOUT the end-of-phase host sync; the overlap
 executor (``core/round_plan.py``) uses it to run the KD program
 concurrently with groups k>0's local training and converts the losses
 with ``losses_info`` only at resolve time.
+
+**Flash-KD + compressed teacher cache.**  ``kd_kernel="dense"`` (the
+parity oracle) precomputes the f32 ensemble-*probability* tensor and each
+step consumes full ``(B, V)`` prob rows; ``kd_kernel="flash"`` stores the
+mean teacher *logit* tensor instead — in ``cache_dtype`` (bf16 by
+default: half the cache bytes, and exactly the logit-sum form the
+sharded FedDF precompute psums) — and each step runs the vocab-tiled
+``flash_kd_loss`` kernel, which fuses the teacher τ-softmax, student
+log-softmax and KL into streaming ``tile_v``-wide passes with O(B·tile)
+live memory (f32 tile compute either way; see ``kernels/kd_loss/flash``).
+Caches are padded to the kernels' lane/tile multiple ONCE at build (only
+on the Pallas path) so the per-step bodies never re-pad the teacher row.
 """
 from __future__ import annotations
 
@@ -87,9 +99,11 @@ class KDPipeline:
     def __init__(self, logits_fn: LogitsFn, *, steps: int, lr: float,
                  temperature: float = 4.0, momentum: float = 0.9,
                  step_mode: str = "auto", mesh=None,
-                 teacher_sharding: str = "auto"):
+                 teacher_sharding: str = "auto", kd_kernel: str = "dense",
+                 cache_dtype=None, tile_v: int | None = None):
         assert step_mode in ("auto", "scan", "stepped")
         assert teacher_sharding in ("auto", "vmap", "shard_map")
+        assert kd_kernel in ("dense", "flash")
         self.logits_fn = logits_fn
         self.steps = int(steps)
         self.temperature = float(temperature)
@@ -97,7 +111,18 @@ class KDPipeline:
         self.step_mode = step_mode
         self.mesh = mesh
         self.teacher_sharding = teacher_sharding
-        self._precompute_fn = None
+        self.kd_kernel = kd_kernel
+        # compressed-cache storage dtype: flash defaults to bf16 mean
+        # logits (half the f32-prob cache bytes); dense stores f32 probs
+        if kd_kernel == "flash":
+            self.cache_dtype = jnp.dtype(cache_dtype or jnp.bfloat16)
+        else:
+            assert cache_dtype is None or jnp.dtype(cache_dtype) == \
+                jnp.float32, "the dense prob cache is f32-only"
+            self.cache_dtype = jnp.float32
+        self.tile_v = tile_v
+        self._probs_fn = None
+        self._cache_fn = None
         self._scan_fns: dict[bool, Callable] = {}
         self._step_fns: dict[bool, Callable] = {}
         self._batches: PyTree | None = None
@@ -119,8 +144,20 @@ class KDPipeline:
         from repro.launch.mesh import use_shard_map
         return use_shard_map(self.mesh, self.teacher_sharding)
 
-    def _build_precompute(self):
+    def _build_precompute(self, kind: str):
+        """Jitted per-round teacher pass.  ``kind="probs"`` is the dense
+        oracle view (unpadded f32 ensemble probs); ``kind="cache"`` is the
+        tensor the step bodies consume — identical for dense (plus the
+        build-time lane pad on the Pallas path), the compressed
+        ``cache_dtype`` mean-logit tensor for flash."""
+        assert kind in ("probs", "cache")
         logits_fn, tau = self.logits_fn, self.temperature
+        as_logits = kind == "cache" and self.kd_kernel == "flash"
+        # teacher-side padding happens HERE, once per round, so the jitted
+        # KD step bodies never re-pad the cache row (satellite: the
+        # per-step _pad_v copy is off the hot path)
+        keep_pad = kind == "cache" and kd_ops.pallas_active()
+        cache_dtype, tile_v = self.cache_dtype, self.tile_v
         if not self._shard_teachers():
             @jax.jit
             def pre(ts, bs):
@@ -130,8 +167,16 @@ class KDPipeline:
                 ts = tree_cast(ts, jnp.float32)
                 lg = jax.vmap(lambda p: jax.vmap(
                     lambda b: logits_fn(p, b))(bs))(ts)        # (M, nB, B, V)
-                return kd_ops.ensemble_softmax_many(
-                    lg.astype(jnp.float32), tau)
+                lg = lg.astype(jnp.float32)
+                if as_logits:
+                    data = kd_ops.pad_teacher_logits(
+                        jnp.mean(lg, axis=0), tile_v).astype(cache_dtype)
+                    # the f32 normalizer residual rides with the cache:
+                    # τ-fixed and student-independent, computed ONCE here
+                    # so the per-step kernel skips the teacher reduction
+                    return data, kd_ops.teacher_cache_lse(data, tau)
+                return kd_ops.ensemble_softmax_many(lg, tau,
+                                                    keep_pad=keep_pad)
 
             return pre
 
@@ -164,48 +209,104 @@ class KDPipeline:
                         [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]),
                     ts)
             mean = sharded(ts, mask, bs) / M                   # (nB, B, V)
+            if as_logits:
+                # the psum'd logit-sum/M IS the flash cache representation
+                data = kd_ops.pad_teacher_logits(
+                    mean, tile_v).astype(cache_dtype)
+                return data, kd_ops.teacher_cache_lse(data, tau)
             # softmax(mean/τ) through the same fused kernel (M=1 stack)
-            return kd_ops.ensemble_softmax_many(mean[None], tau)
+            return kd_ops.ensemble_softmax_many(mean[None], tau,
+                                                keep_pad=keep_pad)
 
         return pre
 
     def precompute_teacher_probs(self, teacher_stack: PyTree,
                                  batches: PyTree) -> jnp.ndarray:
-        """(M, ...) teachers × (n_batches, B, ...) batches -> (n_batches, B, V).
+        """(M, ...) teachers × (n_batches, B, ...) batches -> (n_batches, B, V)
+        f32 ensemble probabilities — the dense oracle view, kept as the
+        parity/bench API regardless of ``kd_kernel``.
 
         With an active ``('clients',)`` mesh the member axis is sharded
         (one logit-sum ``psum`` instead of a device-serial M-loop) — the
         FedDF ``(C, ...)`` client-teacher stack stops costing O(C) on one
         device.
         """
-        if self._precompute_fn is None:
-            self._precompute_fn = self._build_precompute()
-        return self._precompute_fn(teacher_stack, batches)
+        if self._probs_fn is None:
+            self._probs_fn = self._build_precompute("probs")
+        return self._probs_fn(teacher_stack, batches)
+
+    def precompute_cache(self, teacher_stack: PyTree,
+                         batches: PyTree) -> PyTree:
+        """The per-round teacher tensor the KD step bodies consume:
+        the ``(n_batches, B, Vc)`` f32 prob tensor for
+        ``kd_kernel="dense"``; for ``"flash"`` the compressed pair
+        ``(mean_logits, lse)`` — the ``cache_dtype`` mean-logit tensor
+        (bf16 default, ≤ half the dense cache bytes) plus its tiny
+        ``(n_batches, B)`` f32 normalizer residual — pre-padded to the
+        kernels' lane/tile multiple on the Pallas path."""
+        return self._ensure_cache_fn()(teacher_stack, batches)
+
+    def _ensure_cache_fn(self):
+        if self._cache_fn is None:
+            if self.kd_kernel == "dense" and not kd_ops.pallas_active():
+                # unpadded dense probs — byte-identical to the "probs"
+                # program; alias it instead of compiling a duplicate
+                if self._probs_fn is None:
+                    self._probs_fn = self._build_precompute("probs")
+                self._cache_fn = self._probs_fn
+            else:
+                self._cache_fn = self._build_precompute("cache")
+        return self._cache_fn
+
+    def cache_nbytes(self, teacher_stack: PyTree, batches: PyTree) -> int:
+        """Device bytes of the round's teacher cache (the quantity the
+        compressed flash cache at least halves — see
+        ``benchmarks/bench_distill.kd_memory``).  Shape-only: traced via
+        ``eval_shape``, so probing a V≈256k cache costs no FLOPs and no
+        allocation."""
+        shapes = jax.eval_shape(self._ensure_cache_fn(), teacher_stack,
+                                batches)
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in jax.tree.leaves(shapes))
 
     # ------------------------------------------------------- KD step body
     def _kd_body(self):
         logits_fn, optimizer, tau = self.logits_fn, self.optimizer, \
             self.temperature
 
-        def loss_fn(student, batch, teacher_probs):
-            return kd_ops.kd_loss(logits_fn(student, batch), teacher_probs,
-                                  temperature=tau)
+        if self.kd_kernel == "flash":
+            tile_v = self.tile_v
 
-        def body(student, opt_state, batch, teacher_probs):
+            def loss_fn(student, batch, cache_row):
+                # cache_row = (mean teacher logits [maybe bf16], f32 lse):
+                # τ-softmax + KL fuse inside the vocab-tiled kernel, f32
+                # tiles, and the precomputed normalizer skips the
+                # per-step teacher reduction chain
+                zt, lse = cache_row
+                return kd_ops.flash_kd_loss(logits_fn(student, batch),
+                                            zt, tau, tile_v,
+                                            teacher_lse=lse)
+        else:
+            def loss_fn(student, batch, cache_row):
+                return kd_ops.kd_loss(logits_fn(student, batch), cache_row,
+                                      temperature=tau)
+
+        def body(student, opt_state, batch, cache_row):
             loss, grads = jax.value_and_grad(loss_fn)(
-                student, batch, teacher_probs)
+                student, batch, cache_row)
             updates, opt_state = optimizer.update(grads, opt_state, student)
             return apply_updates(student, updates), opt_state, loss
 
         return body
 
     @staticmethod
-    def _index_batch(batches: PyTree, probs: jnp.ndarray, bi):
-        batch = jax.tree.map(
-            lambda x: jax.lax.dynamic_index_in_dim(x, bi, 0, keepdims=False),
-            batches)
-        return batch, jax.lax.dynamic_index_in_dim(probs, bi, 0,
-                                                   keepdims=False)
+    def _index_batch(batches: PyTree, cache: PyTree, bi):
+        def idx(x):
+            return jax.lax.dynamic_index_in_dim(x, bi, 0, keepdims=False)
+
+        # cache is a bare prob tensor (dense) or the (logits, lse) pair
+        # (flash) — every leaf carries the leading n_batches axis
+        return jax.tree.map(idx, batches), jax.tree.map(idx, cache)
 
     # -------------------------------------------------------- scan program
     def _scan_fn(self, multi: bool):
@@ -281,10 +382,10 @@ class KDPipeline:
         dispatched afterwards runs concurrently with it.
         """
         batches = self.batches_for(server_batches)
-        probs = self.precompute_teacher_probs(teacher_stack, batches)
+        cache = self.precompute_cache(teacher_stack, batches)
         if self.scan_capable():
-            return self._scan_fn(multi)(student, batches, probs)
-        return self._run_stepped(student, batches, probs, multi)
+            return self._scan_fn(multi)(student, batches, cache)
+        return self._run_stepped(student, batches, cache, multi)
 
     def losses_info(self, losses) -> dict:
         """The per-round kd record (ONE host sync) for async losses."""

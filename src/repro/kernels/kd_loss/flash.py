@@ -1,0 +1,349 @@
+"""Flash-KD: vocab-tiled fused distillation kernels (online logsumexp).
+
+The dense KD path (``kernel.py``) holds full ``(B, V)`` rows live three
+times per step — the f32 teacher-*prob* cache row, the student logits and
+the student softmax/log-softmax intermediates — which for the model-zoo
+vocabularies (V ≈ 256 K) makes the KD phase memory-bound: every forward
+and backward re-reads full-``V`` rows from HBM.  Flash-KD restructures
+Eq. 4 the way flash attention restructures softmax(QKᵀ)V:
+
+  * the teacher is consumed as its **mean logit** tensor z̄ (exactly the
+    logit-sum form the sharded FedDF precompute psums, storable in bf16 —
+    half the cache bytes of f32 probs), and
+  * the τ-softmax of the teacher, the student log-softmax and the KL
+    reduction are fused into ONE streaming pass over ``V``-tiles with
+    O(B·tile) live memory, carrying per-row online-renormalized
+    accumulators (m, Σe) for both distributions plus the cross term.
+
+With s = z_s/τ and t = z̄/τ (scaled logits), per row:
+
+    KL(p‖q) = Σ_v p_v (t_v − s_v) − lse(t) + lse(s)
+            = A / l_t − (m_t + log l_t) + (m_s + log l_s)
+
+where (m_x, l_x) are the running max / rescaled sum-of-exp of x and
+A = Σ_v e^{t_v − m_t}(t_v − s_v) is rescaled by e^{m_t−m_t'} whenever the
+teacher max advances — the flash-attention identity applied to the KL
+cross term.  The forward saves only the per-row normalizers (lse_s,
+lse_t): the backward
+
+    ∂loss/∂z_s = g·(τ/B)·(e^{s − lse_s} − e^{t − lse_t})
+
+is then a single second streaming pass with NO reductions and no
+recompute of either softmax.
+
+Two implementations share that algorithm:
+
+  * ``flash_kd_fwd_tiled`` / ``flash_kd_bwd_ref`` — pure-jnp streaming
+    loop (``lax.fori_loop`` over full tiles + a static ragged tail, so no
+    padding copies anywhere).  The default off-TPU path and the target of
+    the hypothesis property suite (``tests/test_flash_kd.py``).
+  * ``flash_kd_fwd`` / ``flash_kd_bwd`` — Pallas TPU kernels, grid
+    ``(B/Bb, V/Vt)`` with the V axis innermost; the five per-row
+    accumulators ride in revisited f32 output blocks (TPU grids run
+    sequentially, so a block mapped to the same slot acts as carry —
+    the same trick ``kernel.ensemble_softmax`` uses).
+
+VMEM budget at Bb=4, Vt=4096: two (4, 4096) f32 tiles ≈ 128 KB — live
+memory is set by the TILE, not by V; the 256 K-vocab rows never exist on
+chip at once.  Padding (ops.py pads V to a tile multiple on the Pallas
+path only): fill −1e30 for BOTH operands — exp underflows to exactly 0
+under the running max (real lanes dominate, and the last tile always
+holds ≥1 real lane) and the cross term sees (t−s) = 0, so padded lanes
+are exact no-ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BB = 4
+DEFAULT_TILE_V = 4096
+# the jnp (host) path has no VMEM budget — a wider default tile keeps the
+# XLA:CPU sweep at full vector width; explicit tile_v always wins (tests
+# pin small tiles to exercise the accumulator)
+DEFAULT_TILE_V_HOST = 32768
+# pad fill for BOTH student logits and the mean-logit cache on the Pallas
+# path: representable in bf16, exp()→0 exactly, and (t − s) = 0 on pads
+FLASH_PAD = -1e30
+
+
+# =====================================================================
+# pure-jnp tiled streaming implementation (CPU default + property oracle)
+# =====================================================================
+def _acc_tile(carry, s_c, t_c, inv_temp: float):
+    """One online-accumulator update over a (B, tile) pair of tiles."""
+    m_s, l_s, m_t, l_t, acc = carry
+    s = s_c.astype(jnp.float32) * inv_temp
+    t = t_c.astype(jnp.float32) * inv_temp
+    m_s2 = jnp.maximum(m_s, jnp.max(s, axis=-1))
+    l_s = l_s * jnp.exp(m_s - m_s2) + jnp.sum(
+        jnp.exp(s - m_s2[:, None]), axis=-1)
+    m_t2 = jnp.maximum(m_t, jnp.max(t, axis=-1))
+    e_t = jnp.exp(t - m_t2[:, None])
+    scale = jnp.exp(m_t - m_t2)
+    l_t = l_t * scale + jnp.sum(e_t, axis=-1)
+    acc = acc * scale + jnp.sum(e_t * (t - s), axis=-1)
+    return m_s2, l_s, m_t2, l_t, acc
+
+
+def _acc_tile_lse(carry, s_c, t_c, lse_t, inv_temp: float):
+    """Accumulator update when the teacher normalizer is ALREADY KNOWN
+    (precomputed once at cache build): p = e^{t − lse_t} needs no running
+    max/rescale chain, so only the student stays online."""
+    m_s, l_s, cross = carry
+    s = s_c.astype(jnp.float32) * inv_temp
+    t = t_c.astype(jnp.float32) * inv_temp
+    m_s2 = jnp.maximum(m_s, jnp.max(s, axis=-1))
+    l_s = l_s * jnp.exp(m_s - m_s2) + jnp.sum(
+        jnp.exp(s - m_s2[:, None]), axis=-1)
+    p = jnp.exp(t - lse_t[:, None])
+    cross = cross + jnp.sum(p * (t - s), axis=-1)
+    return m_s2, l_s, cross
+
+
+def _tiled_sweep(student_logits, teacher_mean_logits, carry, update,
+                 tile: int):
+    """Drive ``update(carry, s_tile, t_tile)`` over the vocab tiles: few
+    tiles unroll with static slices so XLA fuses the whole sweep (a
+    1-iteration ``fori_loop`` walls off fusion and measurably slows the
+    small-V CPU path); many tiles run rolled to keep the program small.
+    The ragged tail (V % tile) is one statically-shaped epilogue update —
+    no padding copies anywhere."""
+    V = student_logits.shape[1]
+    n_full = V // tile
+    if n_full <= 16:
+        for i in range(n_full):
+            carry = update(carry,
+                           student_logits[:, i * tile:(i + 1) * tile],
+                           teacher_mean_logits[:, i * tile:(i + 1) * tile])
+    else:
+        def body(i, c):
+            s_c = jax.lax.dynamic_slice_in_dim(student_logits, i * tile,
+                                               tile, axis=1)
+            t_c = jax.lax.dynamic_slice_in_dim(teacher_mean_logits, i * tile,
+                                               tile, axis=1)
+            return update(c, s_c, t_c)
+
+        carry = jax.lax.fori_loop(0, n_full, body, carry)
+    if V % tile:
+        carry = update(carry, student_logits[:, n_full * tile:],
+                       teacher_mean_logits[:, n_full * tile:])
+    return carry
+
+
+def flash_kd_fwd_tiled(student_logits, teacher_mean_logits,
+                       temperature: float = 1.0,
+                       tile_v: int = DEFAULT_TILE_V, teacher_lse=None):
+    """Streaming fused KD forward; returns ``(loss, lse_s, lse_t)``.
+
+    ``lse_s``/``lse_t`` are the per-row normalizers of the SCALED logits
+    (z/τ) — the residuals that make the backward a single pad-free
+    streaming pass.  When ``teacher_lse`` is supplied (the KD pipeline
+    precomputes it ONCE at cache build — it is τ-fixed and
+    student-independent), the per-step teacher max/sum reduction chain
+    disappears entirely and only the student lse stays online.
+    """
+    B, V = student_logits.shape
+    inv_temp = 1.0 / float(temperature)
+    tile = max(1, min(int(tile_v), V))
+
+    neg_inf = jnp.full((B,), -jnp.inf, jnp.float32)
+    zero = jnp.zeros((B,), jnp.float32)
+    if teacher_lse is not None:
+        lse_t = teacher_lse.astype(jnp.float32)
+        m_s, l_s, cross = _tiled_sweep(
+            student_logits, teacher_mean_logits, (neg_inf, zero, zero),
+            lambda c, s_c, t_c: _acc_tile_lse(c, s_c, t_c, lse_t, inv_temp),
+            tile)
+        lse_s = m_s + jnp.log(l_s)
+        kl = cross - lse_t + lse_s
+    else:
+        m_s, l_s, m_t, l_t, acc = _tiled_sweep(
+            student_logits, teacher_mean_logits,
+            (neg_inf, zero, neg_inf, zero, zero),
+            lambda c, s_c, t_c: _acc_tile(c, s_c, t_c, inv_temp), tile)
+        lse_s = m_s + jnp.log(l_s)
+        lse_t = m_t + jnp.log(l_t)
+        kl = acc / l_t - lse_t + lse_s
+    loss = jnp.mean(kl) * float(temperature) ** 2
+    return loss, lse_s, lse_t
+
+
+def flash_kd_bwd_ref(student_logits, teacher_mean_logits, lse_s, lse_t, g,
+                     temperature: float = 1.0):
+    """Residual-fed backward: one elementwise pass, zero reductions.
+
+    ``exp(s − lse_s)`` IS the student softmax and ``exp(t − lse_t)`` the
+    teacher probs — no max/sum recompute (the dense path's backward
+    re-reduces both over the full V).
+    """
+    B = student_logits.shape[0]
+    inv_temp = 1.0 / float(temperature)
+    q = jnp.exp(student_logits.astype(jnp.float32) * inv_temp
+                - lse_s[:, None])
+    p = jnp.exp(teacher_mean_logits.astype(jnp.float32) * inv_temp
+                - lse_t[:, None])
+    coef = g * (float(temperature) / B)
+    return ((q - p) * coef).astype(student_logits.dtype)
+
+
+# =====================================================================
+# Pallas kernels: grid (B/Bb, V/Vt), V innermost (sequential carry)
+# =====================================================================
+def _flash_fwd_kernel(s_ref, t_ref, m_s_ref, l_s_ref, m_t_ref, l_t_ref,
+                      acc_ref, *, inv_temp: float):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        m_s_ref[...] = jnp.full(m_s_ref.shape, -jnp.inf, jnp.float32)
+        l_s_ref[...] = jnp.zeros(l_s_ref.shape, jnp.float32)
+        m_t_ref[...] = jnp.full(m_t_ref.shape, -jnp.inf, jnp.float32)
+        l_t_ref[...] = jnp.zeros(l_t_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    s = s_ref[...].astype(jnp.float32) * inv_temp          # (bb, vt)
+    t = t_ref[...].astype(jnp.float32) * inv_temp
+
+    # accumulator blocks are (bb, LANES) with the value broadcast across
+    # lanes — revisited across the v axis they carry the online state
+    m_s_old = m_s_ref[...]
+    m_s_new = jnp.maximum(m_s_old, jnp.max(s, axis=-1, keepdims=True))
+    l_s_ref[...] = (l_s_ref[...] * jnp.exp(m_s_old - m_s_new)
+                    + jnp.sum(jnp.exp(s - m_s_new[:, :1]), axis=-1,
+                              keepdims=True))
+    m_s_ref[...] = m_s_new
+
+    m_t_old = m_t_ref[...]
+    m_t_new = jnp.maximum(m_t_old, jnp.max(t, axis=-1, keepdims=True))
+    e_t = jnp.exp(t - m_t_new[:, :1])
+    scale = jnp.exp(m_t_old - m_t_new)
+    l_t_ref[...] = (l_t_ref[...] * scale
+                    + jnp.sum(e_t, axis=-1, keepdims=True))
+    acc_ref[...] = (acc_ref[...] * scale
+                    + jnp.sum(e_t * (t - s), axis=-1, keepdims=True))
+    m_t_ref[...] = m_t_new
+
+
+def _flash_fwd_lse_kernel(s_ref, t_ref, lse_t_ref, m_s_ref, l_s_ref,
+                          cross_ref, *, inv_temp: float):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        m_s_ref[...] = jnp.full(m_s_ref.shape, -jnp.inf, jnp.float32)
+        l_s_ref[...] = jnp.zeros(l_s_ref.shape, jnp.float32)
+        cross_ref[...] = jnp.zeros(cross_ref.shape, jnp.float32)
+
+    s = s_ref[...].astype(jnp.float32) * inv_temp
+    t = t_ref[...].astype(jnp.float32) * inv_temp
+
+    m_s_old = m_s_ref[...]
+    m_s_new = jnp.maximum(m_s_old, jnp.max(s, axis=-1, keepdims=True))
+    l_s_ref[...] = (l_s_ref[...] * jnp.exp(m_s_old - m_s_new)
+                    + jnp.sum(jnp.exp(s - m_s_new[:, :1]), axis=-1,
+                              keepdims=True))
+    m_s_ref[...] = m_s_new
+
+    # teacher normalizer precomputed at cache build: p needs no max chain
+    p = jnp.exp(t - lse_t_ref[...][:, None])
+    cross_ref[...] += jnp.sum(p * (t - s), axis=-1, keepdims=True)
+
+
+_STAT_LANES = 128   # f32 lane tile — stats blocks are (bb, 128) broadcasts
+
+
+def _block_b(B: int, block_b: int) -> int:
+    """Largest row block ≤ ``block_b`` dividing B (ragged batches work)."""
+    bb = max(1, min(block_b, B))
+    while B % bb:
+        bb -= 1
+    return bb
+
+
+def flash_kd_fwd(student_logits, teacher_mean_logits,
+                 temperature: float = 1.0, block_b: int = DEFAULT_BB,
+                 block_v: int = DEFAULT_TILE_V, interpret: bool = True,
+                 teacher_lse=None):
+    """Fused streaming KD forward; V must be a multiple of ``block_v``
+    (ops.py pads once with FLASH_PAD at cache build, not per step).
+    Returns ``(loss, lse_s, lse_t)`` — the residuals feed the backward.
+    With ``teacher_lse`` (cache-build precompute) the kernel drops the
+    teacher's online max/rescale chain: 3 accumulators instead of 5.
+    """
+    B, V = student_logits.shape
+    bb = _block_b(B, block_b)
+    vt = min(block_v, V)
+    assert V % vt == 0, (V, vt)
+    stat = functools.partial(pl.BlockSpec, (bb, _STAT_LANES),
+                             lambda b, v: (b, 0))
+    if teacher_lse is not None:
+        lse_t = teacher_lse.astype(jnp.float32)
+        outs = pl.pallas_call(
+            functools.partial(_flash_fwd_lse_kernel,
+                              inv_temp=1.0 / temperature),
+            grid=(B // bb, V // vt),
+            in_specs=[pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
+                      pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
+                      pl.BlockSpec((bb,), lambda b, v: (b,))],
+            out_specs=[stat() for _ in range(3)],
+            out_shape=[jax.ShapeDtypeStruct((B, _STAT_LANES), jnp.float32)
+                       for _ in range(3)],
+            interpret=interpret,
+        )(student_logits, teacher_mean_logits, lse_t)
+        m_s, l_s, cross = (o[:, 0] for o in outs)
+        lse_s = m_s + jnp.log(l_s)
+        kl = cross - lse_t + lse_s
+        return jnp.mean(kl) * temperature ** 2, lse_s, lse_t
+    outs = pl.pallas_call(
+        functools.partial(_flash_fwd_kernel, inv_temp=1.0 / temperature),
+        grid=(B // bb, V // vt),
+        in_specs=[pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
+                  pl.BlockSpec((bb, vt), lambda b, v: (b, v))],
+        out_specs=[stat() for _ in range(5)],
+        out_shape=[jax.ShapeDtypeStruct((B, _STAT_LANES), jnp.float32)
+                   for _ in range(5)],
+        interpret=interpret,
+    )(student_logits, teacher_mean_logits)
+    m_s, l_s, m_t, l_t, acc = (o[:, 0] for o in outs)
+    lse_s = m_s + jnp.log(l_s)
+    lse_t = m_t + jnp.log(l_t)
+    kl = acc / l_t - lse_t + lse_s
+    return jnp.mean(kl) * temperature ** 2, lse_s, lse_t
+
+
+def _flash_bwd_kernel(s_ref, t_ref, lse_s_ref, lse_t_ref, g_ref, o_ref, *,
+                      inv_temp: float, tau_over_b: float):
+    s = s_ref[...].astype(jnp.float32) * inv_temp
+    t = t_ref[...].astype(jnp.float32) * inv_temp
+    q = jnp.exp(s - lse_s_ref[...][:, None])
+    p = jnp.exp(t - lse_t_ref[...][:, None])
+    o_ref[...] = ((q - p) * (g_ref[0] * tau_over_b)).astype(o_ref.dtype)
+
+
+def flash_kd_bwd(student_logits, teacher_mean_logits, lse_s, lse_t, g,
+                 temperature: float = 1.0, block_b: int = DEFAULT_BB,
+                 block_v: int = DEFAULT_TILE_V, interpret: bool = True):
+    """Second streaming pass: ∂loss/∂student_logits from saved residuals."""
+    B, V = student_logits.shape
+    bb = _block_b(B, block_b)
+    vt = min(block_v, V)
+    assert V % vt == 0, (V, vt)
+    return pl.pallas_call(
+        functools.partial(_flash_bwd_kernel, inv_temp=1.0 / temperature,
+                          tau_over_b=temperature / B),
+        grid=(B // bb, V // vt),
+        in_specs=[pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
+                  pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
+                  pl.BlockSpec((bb,), lambda b, v: (b,)),
+                  pl.BlockSpec((bb,), lambda b, v: (b,)),
+                  pl.BlockSpec((1,), lambda b, v: (0,))],
+        out_specs=pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
+        out_shape=jax.ShapeDtypeStruct((B, V), student_logits.dtype),
+        interpret=interpret,
+    )(student_logits, teacher_mean_logits, lse_s, lse_t,
+      jnp.reshape(g, (1,)).astype(jnp.float32))

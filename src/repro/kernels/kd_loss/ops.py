@@ -5,8 +5,25 @@ mode only when ``REPRO_FORCE_PALLAS=1`` (tests do this) — the default
 CPU path is the jnp oracle, which lowers to identical math for the
 dry-run's cost analysis.
 
-Vocab padding: inputs are padded to a multiple of 128 lanes with -1e30
-student logits / 0 teacher probs (exact for softmax + KL).
+Two KD kernel families live here:
+
+  * **dense** (``kd_loss`` + ``ensemble_softmax``) — consumes a full
+    ``(B, V)`` f32 teacher-*probability* row per step; the parity oracle.
+  * **flash** (``flash_kd_loss``) — consumes the mean teacher *logit* row
+    (bf16-storable: the compressed teacher cache) and fuses the teacher
+    τ-softmax, student log-softmax and KL into streaming ``V``-tile
+    passes with online logsumexp (``flash.py``); the forward saves only
+    per-row normalizers so the backward is a second streaming pass with
+    no recompute.
+
+Vocab padding: the dense path pads to a multiple of 128 lanes with -1e30
+student logits / 0 teacher probs (exact for softmax + KL); the flash
+Pallas path pads both operands to a tile multiple with ``FLASH_PAD``
+(exact no-op lanes — see flash.py).  Teacher-side padding is applied ONCE
+at cache build by the KD pipeline's precompute (dense:
+``ensemble_softmax(..., keep_pad=True)``; flash: ``pad_teacher_logits``),
+never inside the per-step bodies; the off-TPU flash path pads nothing at
+all (ragged tails stream as a static epilogue tile).
 """
 from __future__ import annotations
 
@@ -16,13 +33,21 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.kd_loss import kernel, ref
+from repro.kernels.kd_loss import flash, kernel, ref
+from repro.kernels.kd_loss.flash import DEFAULT_TILE_V, FLASH_PAD
 
 
 def _use_pallas() -> bool:
     if os.environ.get("REPRO_FORCE_PALLAS") == "1":
         return True
     return jax.default_backend() == "tpu"
+
+
+def pallas_active() -> bool:
+    """Public probe: will the KD ops dispatch to the Pallas kernels?
+    Cache builders use it to decide whether to pre-pad the teacher tensor
+    (the Pallas layout) or keep it unpadded (the jnp paths)."""
+    return _use_pallas()
 
 
 def _interpret() -> bool:
@@ -37,11 +62,27 @@ def _pad_v(x, fill, multiple: int = 128):
     return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
 
 
+# ------------------------------------------------- cache-build-time padding
+def pad_teacher_logits(mean_logits, tile_v: int | None = None):
+    """Pad a mean-teacher-*logit* cache to the flash kernel's tile multiple
+    ONCE (``FLASH_PAD`` lanes are exact no-ops under the online lse).
+    No-op off the Pallas path — the jnp flash path streams ragged tails
+    without any padding."""
+    if not _use_pallas():
+        return mean_logits
+    return _pad_v(mean_logits, FLASH_PAD, int(tile_v or DEFAULT_TILE_V))
+
+
 # ---------------------------------------------------------------- kd_loss
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
 def kd_loss(student_logits, teacher_probs, temperature: float = 1.0):
     """mean_b KL(teacher ‖ softmax(student/τ)) · τ².  Differentiable wrt
-    student logits; teachers are constants (paper Eq. 4)."""
+    student logits; teachers are constants (paper Eq. 4).
+
+    ``teacher_probs`` may arrive pre-padded to the 128-lane multiple (the
+    cache-resident layout) — zero-prob lanes are exact, and the student
+    row is padded to match (a no-op for lane-aligned vocabularies).
+    """
     if _use_pallas():
         s = _pad_v(student_logits, -1e30)
         t = _pad_v(teacher_probs, 0.0)
@@ -69,22 +110,115 @@ def _kd_bwd(temperature, saved, g):
 kd_loss.defvjp(_kd_fwd, _kd_bwd)
 
 
+# ------------------------------------------------------------ flash_kd_loss
+def _flash_pad_pair(s, zt, tile: int):
+    """Pallas-path operand padding to one tile multiple: the cache (zt) is
+    normally pre-padded at build (``pad_teacher_logits``) so only the
+    student needs the per-step pad, and only when V isn't tile-aligned."""
+    sp = _pad_v(s, FLASH_PAD, tile)
+    ztp = zt if zt.shape[-1] == sp.shape[-1] else _pad_v(zt, FLASH_PAD, tile)
+    return sp, ztp
+
+
+def _flash_fwd_impl(s, zt, teacher_lse, temperature, tile_v):
+    if _use_pallas():
+        tile = int(tile_v or DEFAULT_TILE_V)
+        sp, ztp = _flash_pad_pair(s, zt, tile)
+        return flash.flash_kd_fwd(sp, ztp, temperature, block_v=tile,
+                                  interpret=_interpret(),
+                                  teacher_lse=teacher_lse)
+    return flash.flash_kd_fwd_tiled(
+        s, zt, temperature, int(tile_v or flash.DEFAULT_TILE_V_HOST),
+        teacher_lse=teacher_lse)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_kd_loss(student_logits, teacher_mean_logits, teacher_lse,
+                   temperature, tile_v):
+    loss, _, _ = _flash_fwd_impl(student_logits, teacher_mean_logits,
+                                 teacher_lse, temperature, tile_v)
+    return loss
+
+
+def _flash_fwd(student_logits, teacher_mean_logits, teacher_lse,
+               temperature, tile_v):
+    loss, lse_s, lse_t = _flash_fwd_impl(student_logits, teacher_mean_logits,
+                                         teacher_lse, temperature, tile_v)
+    return loss, (student_logits, teacher_mean_logits, lse_s, lse_t)
+
+
+def _flash_bwd(temperature, tile_v, saved, g):
+    s, zt, lse_s, lse_t = saved
+    tile = int(tile_v or DEFAULT_TILE_V)
+    if _use_pallas():
+        sp, ztp = _flash_pad_pair(s, zt, tile)
+        gs = flash.flash_kd_bwd(sp, ztp, lse_s, lse_t, g, temperature,
+                                block_v=tile, interpret=_interpret())
+        gs = gs[..., :s.shape[-1]]
+    else:
+        gs = flash.flash_kd_bwd_ref(s, zt, lse_s, lse_t, g, temperature)
+    return gs, None, None
+
+
+_flash_kd_loss.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_kd_loss(student_logits, teacher_mean_logits,
+                  temperature: float = 1.0, tile_v: int | None = None,
+                  teacher_lse=None):
+    """Fused vocab-tiled KD loss from the COMPRESSED teacher cache.
+
+    ``teacher_mean_logits`` is the ensemble-mean logit row z̄ (any float
+    dtype — the bf16 cache upcasts to f32 inside the tile compute); the
+    teacher τ-softmax, student log-softmax and KL reduce in one streaming
+    pass over ``tile_v``-wide vocab tiles with O(B·tile) live memory.
+    Equals ``kd_loss(s, softmax(z̄/τ), τ)`` up to f32 reduction order.
+    Differentiable wrt student logits only (teachers frozen, Eq. 4).
+
+    ``teacher_lse`` — the per-row normalizer logsumexp(z̄/τ), optional:
+    it is τ-fixed and student-independent, so the KD pipeline computes it
+    ONCE at cache build (``teacher_cache_lse``) and every step then skips
+    the teacher's online max/sum chain; omitted, the kernel runs the full
+    two-distribution online accumulator.
+    """
+    return _flash_kd_loss(student_logits, teacher_mean_logits, teacher_lse,
+                          temperature, tile_v)
+
+
+def teacher_cache_lse(mean_logits, temperature: float = 1.0):
+    """Per-row logsumexp(z̄/τ) of a (…, V) mean-logit cache — the f32
+    normalizer residual stored beside the compressed cache at build time
+    (``FLASH_PAD`` lanes contribute exactly zero).  Computed from the
+    STORED (possibly bf16-rounded) values so it is exact for what the
+    per-step kernel consumes."""
+    return jax.nn.logsumexp(mean_logits.astype(jnp.float32) / temperature,
+                            axis=-1)
+
+
 # ------------------------------------------------------- ensemble_softmax
-def ensemble_softmax(teacher_logits, temperature: float = 1.0):
+def ensemble_softmax(teacher_logits, temperature: float = 1.0,
+                     keep_pad: bool = False):
     """(K, B, V) -> (B, V) τ-softmax of the mean teacher logit (Eq. 3/5).
-    Non-differentiable by design (teachers are frozen)."""
+    Non-differentiable by design (teachers are frozen).
+
+    ``keep_pad=True`` (Pallas path only) returns the lane-padded ``(B,
+    Vp)`` tensor instead of slicing back — the cache-resident layout that
+    lets per-step ``kd_loss`` calls skip the teacher re-pad (padded lanes
+    hold exactly-zero probability).
+    """
     teacher_logits = jax.lax.stop_gradient(teacher_logits)
     if _use_pallas():
         t = _pad_v(teacher_logits, -1e30)
         # padding note: -1e30/K per member keeps padded lanes at prob 0
         out = kernel.ensemble_softmax(t, temperature, interpret=_interpret())
-        return out[..., :teacher_logits.shape[-1]]
+        return out if keep_pad else out[..., :teacher_logits.shape[-1]]
     return ref.ensemble_softmax_ref(teacher_logits, temperature)
 
 
-def ensemble_softmax_many(teacher_logits, temperature: float = 1.0):
-    """(M, n_batches, B, V) -> (n_batches, B, V): ensemble probs for the
-    WHOLE distillation set in one pass.
+def ensemble_softmax_many(teacher_logits, temperature: float = 1.0,
+                          keep_pad: bool = False):
+    """(M, n_batches, B, V) -> (n_batches, B, V'): ensemble probs for the
+    WHOLE distillation set in one pass (V' = padded V under ``keep_pad``).
 
     The KD pipeline precomputes every server batch's teacher probs once
     per round; merging the (n_batches, B) row dims lets the same
@@ -92,8 +226,9 @@ def ensemble_softmax_many(teacher_logits, temperature: float = 1.0):
     teacher stack) serve any n_batches instead of dispatching per batch.
     """
     M, nB, B, V = teacher_logits.shape
-    out = ensemble_softmax(teacher_logits.reshape(M, nB * B, V), temperature)
-    return out.reshape(nB, B, V)
+    out = ensemble_softmax(teacher_logits.reshape(M, nB * B, V), temperature,
+                           keep_pad=keep_pad)
+    return out.reshape(nB, B, out.shape[-1])
 
 
 def ensemble_kd_loss(student_logits, teacher_logits, temperature: float = 1.0):

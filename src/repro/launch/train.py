@@ -50,6 +50,16 @@ def main() -> None:
                     choices=["legacy", "fused"],
                     help="server KD phase: the fully-jitted fused pipeline "
                          "(default) or the legacy host-driven parity oracle")
+    ap.add_argument("--kd-kernel", default="dense",
+                    choices=["dense", "flash"],
+                    help="KD kernel family: dense f32-prob cache (oracle) "
+                         "or flash — vocab-tiled streaming KL over the "
+                         "compressed mean-logit teacher cache")
+    ap.add_argument("--teacher-cache-dtype", default=None,
+                    choices=["float32", "bfloat16"],
+                    help="flash teacher-cache storage precision (default "
+                         "bfloat16 — half the dense cache bytes; compute "
+                         "stays f32 inside the vocab tiles)")
     ap.add_argument("--overlap", default="off",
                     choices=["off", "async", "fused"],
                     help="overlapped round execution (paper Fig. 2): run "
@@ -81,12 +91,15 @@ def main() -> None:
         rounds=args.rounds, local_epochs=args.local_epochs,
         distill_steps=args.distill_steps, seed=args.seed,
         execution=args.execution, kd_pipeline=args.kd_pipeline,
+        kd_kernel=args.kd_kernel,
+        teacher_cache_dtype=args.teacher_cache_dtype,
         overlap=args.overlap, teacher_dtype=args.teacher_dtype,
         **({"K": args.K, "R": args.R}
            if PRESETS[args.preset].get("K", 1) > 1 else {}),
         **overrides)
 
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    last_spill = None
     t0 = time.time()
     state = runner.init_state()
     for _ in range(args.rounds):
@@ -102,19 +115,33 @@ def main() -> None:
             if state.pending_kd is None:
                 ckpt.save(state.round, state.global_models[0],
                           meta={"round": state.round})
-            elif state.last_distilled is not None:
-                # overlap modes: round t's KD is still in flight, so
-                # global_models[0] is the RAW aggregate — checkpoint the
-                # newest resolved round instead (one behind, identical to
-                # the off-mode checkpoint of that round)
-                r_done, model = state.last_distilled
-                ckpt.save(r_done, model, meta={"round": r_done})
+            else:
+                # overlap modes: round t's KD is still in flight — spill
+                # the deferred JOB itself (runner.restore_pending +
+                # finalize reproduce the drained model exactly); only the
+                # newest spill can ever be resumed, so drop the previous
+                # one instead of accreting M+1 models per round
+                path = runner.spill_pending(state, args.ckpt_dir)
+                if last_spill and last_spill != path:
+                    for p in (last_spill, last_spill.replace(".npz", ".json")):
+                        if os.path.exists(p):
+                            os.remove(p)
+                last_spill = path
+                if state.last_distilled is not None:
+                    # ... and checkpoint the newest resolved round too
+                    # (one behind, identical to the off-mode checkpoint)
+                    r_done, model = state.last_distilled
+                    ckpt.save(r_done, model, meta={"round": r_done})
     # overlap modes defer the last round's KD — drain it so the final
     # model/checkpoint equals the overlap="off" result
     state = runner.finalize(state)
     if ckpt and args.overlap != "off":
         ckpt.save(state.round, state.global_models[0],
                   meta={"round": state.round, "drained": True})
+        if last_spill:   # drained — a leftover spill would imply a job
+            for p in (last_spill, last_spill.replace(".npz", ".json")):
+                if os.path.exists(p):
+                    os.remove(p)
     print(f"done in {time.time() - t0:.1f}s")
     if args.out:
         os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)

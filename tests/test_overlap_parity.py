@@ -127,6 +127,46 @@ def test_pending_kd_defers_and_drains(task):
     assert_models_close(off.global_models, st.global_models)
 
 
+def test_pending_kd_spill_restore_roundtrip(task, tmp_path):
+    """Mid-round checkpoint with a deferred KD in flight: spilling the
+    PendingKD through fedckpt and restoring it in a FRESH runner must
+    drain to exactly the never-interrupted result (the job's inputs are
+    persisted; KD re-runs deterministically), with the late KD record
+    fields still landing on the restored history record."""
+    r_ref = make_runner("fedsdd", task, overlap="async", **small(K=2))
+    st_ref = r_ref.init_state()
+    for _ in range(2):
+        st_ref = r_ref.run_round(st_ref)
+    st_ref = r_ref.finalize(st_ref)
+
+    r1 = make_runner("fedsdd", task, overlap="async", **small(K=2))
+    st = r1.init_state()
+    for _ in range(2):
+        st = r1.run_round(st)
+    assert st.pending_kd is not None
+    path = r1.spill_pending(st, str(tmp_path))
+    assert path.endswith("pending_kd_r00002.npz")
+    r1._executor().close()
+    st.pending_kd = None                  # simulate the process dying
+    r2 = make_runner("fedsdd", task, overlap="async", **small(K=2))
+    pending = r2.restore_pending(st, path)
+    assert pending.round_idx == 2 and pending.dispatched is None
+    assert pending.record is st.history[-1]   # rebound to the live record
+    st = r2.finalize(st)
+    assert st.pending_kd is None
+    assert_models_close(st_ref.global_models, st.global_models)
+    assert st.history[-1]["kd_steps"] == st_ref.history[-1]["kd_steps"]
+
+
+def test_pending_kd_spill_none_when_drained(task, tmp_path):
+    """spill_pending is a no-op (returns None) once the state is drained —
+    nothing to persist, nothing silently written."""
+    r = make_runner("fedsdd", task, overlap="async", **small(K=2))
+    st = r.run(rounds=2)          # run() drains
+    assert r.spill_pending(st, str(tmp_path)) is None
+    assert list(tmp_path.iterdir()) == []
+
+
 def test_overlap_history_matches_off(task):
     """Every round's record (kd losses + eval) must equal the oracle's
     after the drain — late patching changes WHEN, never WHAT."""
