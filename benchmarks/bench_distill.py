@@ -51,14 +51,15 @@ VARIANTS = [
 
 
 # ================================================== KD-pipeline throughput
-def _timed(fn, reps: int) -> float:
+def _timed(fn, reps: int, with_out: bool = False):
     out = fn()                       # warmup / compile
     jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn()
         jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    dt = (time.perf_counter() - t0) / reps
+    return (dt, out) if with_out else dt
 
 
 def kd_throughput(csv: CSV, *, K: int = 4, R: int = 2, steps: int = 150,
@@ -133,9 +134,12 @@ def kd_memory(csv: CSV, *, Vs=(1024, 32768), B: int = 16, d: int = 32,
               reps: int = 3, prefix: str = "t6") -> dict:
     """Flash-KD vs the dense oracle across vocab sizes: teacher-cache
     bytes (f32 probs vs compressed bf16 mean logits — claim: ≥2x smaller
-    at equal fidelity bound), fused-vs-dense KD steps/sec, and the
+    at equal fidelity bound), fused-vs-dense KD steps/sec, the
     vocab-tiled kernel's live-memory invariant (tile bytes constant in V
-    — the dense path's per-step row bytes grow linearly instead).
+    — the dense path's per-step row bytes grow linearly instead), and the
+    HEAD-FUSED row: the student LM-head matmul streamed through the
+    tiles, gated on the step jaxpr holding no live (B, V) student
+    intermediate at all (O(B·tile) live student-logit memory).
 
     A linear head (x @ w, d→V) stands in for the student/teachers so V
     sweeps to LM-ish sizes without paying a full model; the KD phase
@@ -143,6 +147,7 @@ def kd_memory(csv: CSV, *, Vs=(1024, 32768), B: int = 16, d: int = 32,
     """
     from repro.kernels.kd_loss import ops as kd_ops
     from repro.kernels.kd_loss.flash import DEFAULT_TILE_V, DEFAULT_TILE_V_HOST
+    from repro.utils.hlo import live_intermediate_shapes
 
     def lin(p, b):
         return b["x"] @ p["w"]
@@ -184,8 +189,46 @@ def kd_memory(csv: CSV, *, Vs=(1024, 32768), B: int = 16, d: int = 32,
 
         t_dense = _timed(lambda: dense.distill(student, teachers,
                                                batches)[0], reps)
-        t_flash = _timed(lambda: flashp.distill(student, teachers,
-                                                batches)[0], reps)
+        t_flash, out_fl = _timed(lambda: flashp.distill(student, teachers,
+                                                        batches)[0], reps,
+                                 with_out=True)
+
+        # head-fused flash: the linear model IS a features/head split
+        # (features = x, head = w), so the student (B, V) logit row can
+        # disappear from the step entirely.  Claim row: the step's
+        # value_and_grad jaxpr holds NO live (B, V) intermediate (DCE-aware
+        # walk — utils.hlo.live_intermediate_shapes), live student-logit
+        # bytes are B·tile vs the dense path's B·V row, and the distilled
+        # weights match the plain flash pipeline (same cache, different
+        # student-side streaming) tightly.
+        tile_hf = max(64, V // 8)
+        hf = KDPipeline(lin, kd_kernel="flash",
+                        features_fn=lambda p, b: b["x"],
+                        head_fn=lambda p: (p["w"], None),
+                        head_fusion=True, tile_v=tile_hf, **kw)
+        t_hf, out_hf = _timed(lambda: hf.distill(student, teachers,
+                                                 batches)[0], reps,
+                              with_out=True)
+        hf_err = float(jnp.max(jnp.abs(out_fl["w"] - out_hf["w"])))
+        zt_row, lse_row = (jnp.asarray(np.asarray(x)[0]) for x in
+                           hf.precompute_cache(teachers, sb))
+        x0 = batches[0]["x"]
+
+        def hf_step(w):
+            return kd_ops.flash_kd_head_loss(x0, w, None, zt_row, tau,
+                                             tile_hf, teacher_lse=lse_row)
+
+        shapes = live_intermediate_shapes(
+            jax.make_jaxpr(jax.value_and_grad(hf_step))(student["w"]).jaxpr)
+        no_row = (B, V) not in shapes
+        csv.add(f"{prefix}/kd_head_fused/V{V}", t_hf * 1e6,
+                f"steps_per_s={steps / t_hf:.1f};"
+                f"flash_steps_per_s={steps / t_flash:.1f};"
+                f"live_student_kb={B * tile_hf * 4 / 1024:.0f};"
+                f"dense_student_row_kb={B * V * 4 / 1024:.0f};"
+                f"student_row_materialized={not no_row};"
+                f"vs_flash_err={hf_err:.2e};"
+                f"pass={no_row and hf_err < 1e-4}")
         # live memory of the loss/backward: the flash kernel holds two
         # (B, tile) f32 tiles + O(B) accumulators regardless of V; the
         # dense path holds full (B, V) rows — reported per row-block.

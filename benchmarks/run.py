@@ -52,7 +52,8 @@ def run_smoke(csv: CSV) -> None:
                 f"rounds_per_s={1.0 / dt:.2f}")
     kd_throughput(csv, K=4, R=2, steps=20, reps=1, prefix="smoke")
     teacher_bank_precision(csv, reps=1, prefix="smoke")
-    # flash-KD: compressed-cache bytes + vocab-tiled kernel vs dense
+    # flash-KD: compressed-cache bytes + vocab-tiled kernel vs dense +
+    # the head-fused row (gated: no live (B, V) student intermediate)
     kd_memory(csv, Vs=(512,), steps=8, reps=1, prefix="smoke")
     # the overlapped-executor measurement at its t3 operating point (~2
     # min): smaller configs give the min-over-window estimator too few

@@ -53,6 +53,32 @@ def main() -> None:
     print("KD ran overlapped with k>0 local training "
           f"(pending drained: {st_sdd.pending_kd is None})")
 
+    print("\n== FedSDD on an LM task (head-fused flash KD) ==")
+    # On LM tasks the student side of KD is the memory wall: logits_fn
+    # materializes a (B·S, V) row every step (V≈256k for gemma-2b).
+    # kd_head_fusion=True streams the LM-head matmul through the flash
+    # vocab tiles instead — the task's features_fn/head_fn split (wired
+    # automatically by lm_task from Model.features/Model.head) is
+    # consumed by ops.flash_kd_head_loss, so the student row only ever
+    # exists one (B, tile) block at a time, in forward AND backward.
+    # Weights match the dense-logits path at rtol ≤ 2e-4; the ∂h
+    # accumulator's error grows with the tile COUNT only (see ROADMAP
+    # "Flash-KD" for the precision bound).  Tasks without the split
+    # (e.g. the CNN above) silently fall back to the logits path.
+    from repro.configs import get_config
+    from repro.core.tasks import lm_task
+
+    lm = lm_task(get_config("stablelm-3b").reduced(), num_clients=4,
+                 docs_per_client=2, seq=8, server_batches_n=2,
+                 server_batch=2)
+    fed_lm = make_runner("fedsdd", lm, num_clients=4, participation=1.0,
+                         K=2, R=1, local_epochs=1, client_lr=0.02,
+                         client_batch=2, distill_steps=10, server_lr=0.02,
+                         kd_kernel="flash", kd_head_fusion=True)
+    st_lm = fed_lm.run(rounds=2, log_every=1)
+    print(f"LM KD loss (head-fused): first={st_lm.history[-1]['kd_loss_first']:.4f} "
+          f"last={st_lm.history[-1]['kd_loss_last']:.4f}")
+
 
 if __name__ == "__main__":
     main()

@@ -28,15 +28,29 @@ PyTree = Any
 LogitsFn = Callable[[PyTree, Any], jnp.ndarray]
 
 
-def ensemble_logits(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn):
+def precast_teachers(teachers: Sequence[PyTree]) -> list[PyTree]:
+    """Upcast a teacher list f32 ONCE — callers that evaluate the same
+    members against many batches (the legacy ``distill`` loop, eval
+    sweeps) hoist the cast here instead of paying a pytree copy per
+    teacher per batch inside ``ensemble_logits``."""
+    return [tree_cast(t, jnp.float32) for t in teachers]
+
+
+def ensemble_logits(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn,
+                    *, precast: bool = False):
     """Eq. 3/5: mean logit over members (uniform 1/(K·R) weights).
 
     Members are upcast f32 at the forward boundary so bf16-stored
     teacher-bank entries (TeacherBank(dtype=...)) compute in f32.
+    ``precast=True`` skips the per-call cast — pass it when the members
+    already went through ``precast_teachers`` (per-batch loops must hoist
+    the cast, not re-pay the tree copy every call).
     """
+    if not precast:
+        teachers = precast_teachers(teachers)
     acc = None
     for t in teachers:
-        lg = logits_fn(tree_cast(t, jnp.float32), batch).astype(jnp.float32)
+        lg = logits_fn(t, batch).astype(jnp.float32)
         acc = lg if acc is None else acc + lg
     return acc / len(teachers)
 
@@ -72,9 +86,10 @@ def ensemble_mean_logits_stacked(stacked_teachers: PyTree, batch,
 
 
 def ensemble_probs(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn,
-                   temperature: float = 1.0):
-    return jax.nn.softmax(ensemble_logits(teachers, batch, logits_fn) / temperature,
-                          axis=-1)
+                   temperature: float = 1.0, *, precast: bool = False):
+    return jax.nn.softmax(
+        ensemble_logits(teachers, batch, logits_fn, precast=precast)
+        / temperature, axis=-1)
 
 
 def ensemble_predict(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn):
@@ -82,16 +97,26 @@ def ensemble_predict(teachers: Sequence[PyTree], batch, logits_fn: LogitsFn):
 
 
 def make_kd_step(logits_fn: LogitsFn, optimizer: Optimizer, temperature: float,
-                 kd_kernel: str = "dense"):
+                 kd_kernel: str = "dense", features_fn=None, head_fn=None,
+                 head_fusion: bool = False):
     """Build a jitted KD step: student ← student − lr ∇ KL(teacher ‖ student).
 
     ``kd_kernel="dense"`` consumes f32 teacher *probs*; ``"flash"``
     consumes the mean teacher *logit* row through the vocab-tiled
-    streaming kernel (``kernels/kd_loss/flash``).
+    streaming kernel (``kernels/kd_loss/flash``).  With ``head_fusion``
+    (flash only) and a task-supplied ``features_fn``/``head_fn`` split,
+    the student LM-head matmul streams through the vocab tiles too —
+    the ``(B, V)`` student row never materializes.
     """
     assert kd_kernel in ("dense", "flash")
+    head_fused = (head_fusion and kd_kernel == "flash"
+                  and features_fn is not None and head_fn is not None)
 
     def loss_fn(student, batch, teacher_row):
+        if head_fused:
+            w, b = head_fn(student)
+            return kd_ops.flash_kd_head_loss(features_fn(student, batch),
+                                             w, b, teacher_row, temperature)
         s_logits = logits_fn(student, batch)
         if kd_kernel == "flash":
             return kd_ops.flash_kd_loss(s_logits, teacher_row, temperature)
@@ -116,7 +141,9 @@ def distill(student: PyTree,
             temperature: float = 4.0,
             momentum: float = 0.9,
             stacked_teachers: bool = False,
-            kd_kernel: str = "dense") -> tuple[PyTree, dict]:
+            kd_kernel: str = "dense",
+            features_fn=None, head_fn=None,
+            head_fusion: bool = False) -> tuple[PyTree, dict]:
     """Run ``steps`` KD minibatch steps (paper: 5000 steps, SGD, τ=4).
 
     ``server_batches``: sequence of batches cycled over; teacher probs are
@@ -132,12 +159,21 @@ def distill(student: PyTree,
     (the compressed representation) and runs the vocab-tiled streaming
     KL kernel instead of the dense probs path — the host-driven twin of
     ``KDPipeline(kd_kernel="flash")``, kept as its parity oracle.
+    ``head_fusion`` (+ the task's ``features_fn``/``head_fn``) is the
+    host-driven twin of the pipeline's head-fused flash path.
     """
     optimizer = sgd(lr, momentum=momentum)
     opt_state = optimizer.init(student)
     kd_step = make_kd_step(logits_fn, optimizer, temperature,
-                           kd_kernel=kd_kernel)
+                           kd_kernel=kd_kernel, features_fn=features_fn,
+                           head_fn=head_fn, head_fusion=head_fusion)
 
+    # hoist the f32 member upcast out of the per-batch teacher forwards:
+    # the same frozen members serve every server batch, so the cast (a
+    # pytree copy per teacher when the bank stores bf16) happens ONCE
+    # here instead of inside each teacher_row_fn call
+    teachers = (tree_cast(teachers, jnp.float32) if stacked_teachers
+                else precast_teachers(teachers))
     if kd_kernel == "flash":
         if stacked_teachers:
             teacher_row_fn = jax.jit(
@@ -145,7 +181,8 @@ def distill(student: PyTree,
                     teachers, batch, logits_fn))
         else:
             teacher_row_fn = jax.jit(
-                lambda batch: ensemble_logits(teachers, batch, logits_fn))
+                lambda batch: ensemble_logits(teachers, batch, logits_fn,
+                                              precast=True))
     elif stacked_teachers:
         teacher_row_fn = jax.jit(
             lambda batch: ensemble_probs_stacked(
@@ -153,7 +190,7 @@ def distill(student: PyTree,
     else:
         teacher_row_fn = jax.jit(
             lambda batch: ensemble_probs(teachers, batch, logits_fn,
-                                         temperature))
+                                         temperature, precast=True))
 
     losses = []
     n = len(server_batches)

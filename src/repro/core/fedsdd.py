@@ -78,6 +78,10 @@ class FedConfig:
     # τ-softmax + log-softmax + KL into streaming vocab tiles
     kd_kernel: str = "dense"        # dense (oracle) | flash
     teacher_cache_dtype: Optional[str] = None  # None (auto) | float32 | bfloat16
+    # head-fused flash KD: stream the student LM-head matmul through the
+    # vocab tiles too (tasks exposing features_fn/head_fn — the LM task;
+    # tasks without the split fall back to the logits path)
+    kd_head_fusion: bool = False
     # overlapped round execution (paper Fig. 2): run round t's server KD
     # concurrently with round t+1's k>0 local training — an exact
     # reordering; ``off`` is the back-to-back oracle.  See core/round_plan.
@@ -98,6 +102,11 @@ class FedConfig:
         assert self.client_sharding in ("auto", "vmap", "shard_map")
         assert self.kd_pipeline in ("legacy", "fused")
         assert self.kd_kernel in ("dense", "flash")
+        if self.kd_head_fusion:
+            assert self.kd_kernel == "flash", \
+                "kd_head_fusion streams the LM-head matmul through the " \
+                "flash vocab tiles — the dense prob path materializes " \
+                "full student rows by construction"
         assert self.teacher_cache_dtype in (None, "float32", "bfloat16")
         if self.teacher_cache_dtype is not None:
             assert self.kd_kernel == "flash", \
@@ -153,6 +162,12 @@ class FedTask:
     server_batches: Sequence[Any]        # unlabeled batches for KD
     make_batch: Callable[[Any, np.ndarray], Any]  # (client_ds, idx) -> batch
     eval_fn: Optional[Callable[[PyTree], float]] = None
+    # optional features/head split of logits_fn (LM tasks): enables the
+    # head-fused flash-KD path (FedConfig.kd_head_fusion) where the
+    # student (B, V) logit row never materializes.  Contract:
+    # logits_fn(p, b) == features_fn(p, b) @ W (+ b) for head_fn(p)=(W, b)
+    features_fn: Optional[Callable[[PyTree, Any], jnp.ndarray]] = None
+    head_fn: Optional[Callable[[PyTree], tuple]] = None
 
 
 @dataclass
@@ -278,7 +293,10 @@ class FederatedRunner:
                 mesh=make_client_mesh(),
                 teacher_sharding=cfg.client_sharding,
                 kd_kernel=cfg.kd_kernel,
-                cache_dtype=cfg.teacher_cache_dtype)
+                cache_dtype=cfg.teacher_cache_dtype,
+                features_fn=self.task.features_fn,
+                head_fn=self.task.head_fn,
+                head_fusion=cfg.kd_head_fusion)
         return self._kd_pipe
 
     def _executor(self) -> round_plan.RoundExecutor:
@@ -321,7 +339,10 @@ class FederatedRunner:
                 self.task.logits_fn,
                 steps=cfg.distill_steps, lr=cfg.server_lr,
                 temperature=cfg.temperature, stacked_teachers=stacked,
-                kd_kernel=cfg.kd_kernel)
+                kd_kernel=cfg.kd_kernel,
+                features_fn=self.task.features_fn,
+                head_fn=self.task.head_fn,
+                head_fusion=cfg.kd_head_fusion)
         return kd_info
 
     # ---- one round (Algorithm 1) -----------------------------------------

@@ -144,6 +144,16 @@ def lm_task(cfg: ModelConfig,
         lg, _ = model.logits(p, b)
         return lg.reshape(-1, cfg.vocab_size)
 
+    # features/head split of logits_fn — enables the head-fused flash-KD
+    # path (FedConfig.kd_head_fusion): the KD step consumes (B·S, D)
+    # features + the (D, V) head accessor and streams the head matmul
+    # through the vocab tiles, so logits_fn's (B·S, V) row never exists
+    def features_fn(p, b):
+        return model.features(p, b).reshape(-1, cfg.d_model)
+
+    def head_fn(p):
+        return model.head(p), None          # zoo heads carry no bias
+
     client_data = []
     for c in range(num_clients):
         b = make_model_batch(cfg, docs_per_client, seq, seed=seed * 991 + c)
@@ -159,4 +169,5 @@ def lm_task(cfg: ModelConfig,
     return FedTask(init_fn=init_fn, loss_fn=loss_fn, logits_fn=logits_fn,
                    client_data=client_data,
                    server_batches=server_batches, make_batch=make_batch,
-                   eval_fn=None)
+                   eval_fn=None,
+                   features_fn=features_fn, head_fn=head_fn)

@@ -48,8 +48,20 @@ sharded FedDF precompute psums) — and each step runs the vocab-tiled
 ``flash_kd_loss`` kernel, which fuses the teacher τ-softmax, student
 log-softmax and KL into streaming ``tile_v``-wide passes with O(B·tile)
 live memory (f32 tile compute either way; see ``kernels/kd_loss/flash``).
-Caches are padded to the kernels' lane/tile multiple ONCE at build (only
-on the Pallas path) so the per-step bodies never re-pad the teacher row.
+The dense prob cache is lane-padded ONCE at build on the Pallas path;
+the flash cache is never padded anywhere — ragged vocabularies mask in
+kernel, so the per-step bodies perform zero host-side copies.
+
+**Head fusion.**  On the flash path a task may additionally supply
+``features_fn(params, batch) -> (B, D)`` (the pre-head activations) and
+``head_fn(params) -> (W, b|None)`` (the LM-head accessor); with
+``head_fusion=True`` the step bodies then run ``flash_kd_head_loss``,
+which computes ``h @ W[:, tile]`` INSIDE each streaming tile — the
+``(B, V)`` student logit row never materializes either, closing the last
+full-vocab tensor out of the per-step KD hot path (gradients reach the
+backbone through ``∂h`` and the head through the per-tile ``∂W``/``∂b``
+slices).  Tasks without a features/head split (CNN/ResNet heads fused
+into ``logits_fn``) fall back to the plain ``flash_kd_loss`` path.
 """
 from __future__ import annotations
 
@@ -100,11 +112,26 @@ class KDPipeline:
                  temperature: float = 4.0, momentum: float = 0.9,
                  step_mode: str = "auto", mesh=None,
                  teacher_sharding: str = "auto", kd_kernel: str = "dense",
-                 cache_dtype=None, tile_v: int | None = None):
+                 cache_dtype=None, tile_v: int | None = None,
+                 features_fn: Callable | None = None,
+                 head_fn: Callable | None = None,
+                 head_fusion: bool = False):
         assert step_mode in ("auto", "scan", "stepped")
         assert teacher_sharding in ("auto", "vmap", "shard_map")
         assert kd_kernel in ("dense", "flash")
+        if head_fusion:
+            assert kd_kernel == "flash", \
+                "head fusion streams the LM-head matmul through the " \
+                "flash vocab tiles — the dense prob path has no tiles " \
+                "to fuse it into"
         self.logits_fn = logits_fn
+        self.features_fn = features_fn
+        self.head_fn = head_fn
+        # head fusion engages only when the task actually exposes the
+        # features/head split; CNN/ResNet-style tasks (head fused into
+        # logits_fn) silently keep the plain flash path
+        self.head_fused = bool(head_fusion and features_fn is not None
+                               and head_fn is not None)
         self.steps = int(steps)
         self.temperature = float(temperature)
         self.optimizer = sgd(lr, momentum=momentum)
@@ -153,11 +180,11 @@ class KDPipeline:
         assert kind in ("probs", "cache")
         logits_fn, tau = self.logits_fn, self.temperature
         as_logits = kind == "cache" and self.kd_kernel == "flash"
-        # teacher-side padding happens HERE, once per round, so the jitted
-        # KD step bodies never re-pad the cache row (satellite: the
-        # per-step _pad_v copy is off the hot path)
+        # dense-cache lane padding happens HERE, once per round, so the
+        # jitted KD step bodies never re-pad the prob row; the flash
+        # mean-logit cache needs no padding at all (in-kernel iota mask)
         keep_pad = kind == "cache" and kd_ops.pallas_active()
-        cache_dtype, tile_v = self.cache_dtype, self.tile_v
+        cache_dtype = self.cache_dtype
         if not self._shard_teachers():
             @jax.jit
             def pre(ts, bs):
@@ -169,8 +196,7 @@ class KDPipeline:
                     lambda b: logits_fn(p, b))(bs))(ts)        # (M, nB, B, V)
                 lg = lg.astype(jnp.float32)
                 if as_logits:
-                    data = kd_ops.pad_teacher_logits(
-                        jnp.mean(lg, axis=0), tile_v).astype(cache_dtype)
+                    data = jnp.mean(lg, axis=0).astype(cache_dtype)
                     # the f32 normalizer residual rides with the cache:
                     # τ-fixed and student-independent, computed ONCE here
                     # so the per-step kernel skips the teacher reduction
@@ -211,8 +237,7 @@ class KDPipeline:
             mean = sharded(ts, mask, bs) / M                   # (nB, B, V)
             if as_logits:
                 # the psum'd logit-sum/M IS the flash cache representation
-                data = kd_ops.pad_teacher_logits(
-                    mean, tile_v).astype(cache_dtype)
+                data = mean.astype(cache_dtype)
                 return data, kd_ops.teacher_cache_lse(data, tau)
             # softmax(mean/τ) through the same fused kernel (M=1 stack)
             return kd_ops.ensemble_softmax_many(mean[None], tau,
@@ -239,11 +264,13 @@ class KDPipeline:
                          batches: PyTree) -> PyTree:
         """The per-round teacher tensor the KD step bodies consume:
         the ``(n_batches, B, Vc)`` f32 prob tensor for
-        ``kd_kernel="dense"``; for ``"flash"`` the compressed pair
-        ``(mean_logits, lse)`` — the ``cache_dtype`` mean-logit tensor
-        (bf16 default, ≤ half the dense cache bytes) plus its tiny
-        ``(n_batches, B)`` f32 normalizer residual — pre-padded to the
-        kernels' lane/tile multiple on the Pallas path."""
+        ``kd_kernel="dense"`` (lane-padded on the Pallas path); for
+        ``"flash"`` the compressed pair ``(mean_logits, lse)`` — the
+        ``cache_dtype`` mean-logit tensor (bf16 default, ≤ half the
+        dense cache bytes) plus its tiny ``(n_batches, B)`` f32
+        normalizer residual — at the TRUE vocab width on every path
+        (ragged tails are masked inside the flash kernels, never
+        padded)."""
         return self._ensure_cache_fn()(teacher_stack, batches)
 
     def _ensure_cache_fn(self):
@@ -274,7 +301,21 @@ class KDPipeline:
         logits_fn, optimizer, tau = self.logits_fn, self.optimizer, \
             self.temperature
 
-        if self.kd_kernel == "flash":
+        if self.head_fused:
+            tile_v = self.tile_v
+            features_fn, head_fn = self.features_fn, self.head_fn
+
+            def loss_fn(student, batch, cache_row):
+                # head-fused flash: the student LM-head matmul runs
+                # inside the streaming vocab tiles — neither the teacher
+                # row nor the student row exists at (B, V) width; grads
+                # reach the backbone via ∂h and the head via ∂W/∂b
+                zt, lse = cache_row
+                w, b = head_fn(student)
+                return kd_ops.flash_kd_head_loss(
+                    features_fn(student, batch), w, b, zt, tau, tile_v,
+                    teacher_lse=lse)
+        elif self.kd_kernel == "flash":
             tile_v = self.tile_v
 
             def loss_fn(student, batch, cache_row):

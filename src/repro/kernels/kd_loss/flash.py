@@ -31,25 +31,49 @@ lse_t): the backward
 is then a single second streaming pass with NO reductions and no
 recompute of either softmax.
 
-Two implementations share that algorithm:
+**Head fusion** (``flash_kd_head_*``): at LM scale the student row
+``z_s = h @ W (+ b)`` is itself the memory wall — ``logits_fn`` has to
+materialize the full ``(B, V)`` product before the loss even starts.  The
+head-fused variants take the pre-head features ``h`` ``(B, D)`` plus the
+LM-head matrix ``W`` ``(D, V)`` and compute ``h @ W[:, tile]`` INSIDE each
+streaming tile, so the student logit row never exists at any width beyond
+one tile.  The backward is still reduction-free per tile — with
+d = g·(τ/B)·(q_tile − p_tile):
 
-  * ``flash_kd_fwd_tiled`` / ``flash_kd_bwd_ref`` — pure-jnp streaming
-    loop (``lax.fori_loop`` over full tiles + a static ragged tail, so no
-    padding copies anywhere).  The default off-TPU path and the target of
-    the hypothesis property suite (``tests/test_flash_kd.py``).
-  * ``flash_kd_fwd`` / ``flash_kd_bwd`` — Pallas TPU kernels, grid
-    ``(B/Bb, V/Vt)`` with the V axis innermost; the five per-row
-    accumulators ride in revisited f32 output blocks (TPU grids run
-    sequentially, so a block mapped to the same slot acts as carry —
-    the same trick ``kernel.ensemble_softmax`` uses).
+    ∂h += d @ W[:, tile]ᵀ        (accumulated across tiles)
+    ∂W[:, tile] = hᵀ @ d         (written once per tile)
+    ∂b[tile]    = Σ_batch d
+
+i.e. the ``(B, V)`` gradient exists only as the transient ``(B, tile)``
+block ``d``; the per-tile ∂h accumulator merely REASSOCIATES the same
+V-term sum the dense contraction computes, so its deviation from the
+dense grouping random-walks over the tile count — ≈1e-7·√(V/tile)
+relative, far inside the 2e-4 end-to-end budget (the ∂W/∂b slices are
+single f32 contractions, bit-comparable to the dense grad).
+
+Two implementations share the algorithm:
+
+  * ``flash_kd_fwd_tiled`` / ``flash_kd_bwd_ref`` and the head-fused
+    ``flash_kd_head_fwd_tiled`` / ``flash_kd_head_bwd_tiled`` —
+    pure-jnp streaming loops (``lax.fori_loop`` over full tiles + a
+    static ragged-tail epilogue, so no padding copies anywhere).  The
+    default off-TPU path and the target of the hypothesis property
+    suites (``tests/test_flash_kd.py``, ``tests/test_head_fusion.py``).
+  * ``flash_kd_fwd`` / ``flash_kd_bwd`` / ``flash_kd_head_fwd`` /
+    ``flash_kd_head_bwd`` — Pallas TPU kernels; the per-row accumulators
+    ride in revisited f32 output blocks (TPU grids run sequentially, so
+    a block mapped to the same slot acts as carry — the same trick
+    ``kernel.ensemble_softmax`` uses).
 
 VMEM budget at Bb=4, Vt=4096: two (4, 4096) f32 tiles ≈ 128 KB — live
 memory is set by the TILE, not by V; the 256 K-vocab rows never exist on
-chip at once.  Padding (ops.py pads V to a tile multiple on the Pallas
-path only): fill −1e30 for BOTH operands — exp underflows to exactly 0
-under the running max (real lanes dominate, and the last tile always
-holds ≥1 real lane) and the cross term sees (t−s) = 0, so padded lanes
-are exact no-ops.
+chip at once.  Ragged vocabularies (V not a tile multiple) need NO
+padding on any path: the Pallas grid runs ``ceil(V/Vt)`` tiles and the
+kernels mask the tail lanes in place with a ``broadcasted_iota`` column
+check (masked lanes read as ``FLASH_PAD`` — exp underflows to exactly 0
+under the running max, the cross term sees (t−s) = 0, and masked
+backward lanes are zeroed), while the jnp path streams the tail as one
+statically-shaped epilogue tile.
 """
 from __future__ import annotations
 
@@ -66,8 +90,8 @@ DEFAULT_TILE_V = 4096
 # XLA:CPU sweep at full vector width; explicit tile_v always wins (tests
 # pin small tiles to exercise the accumulator)
 DEFAULT_TILE_V_HOST = 32768
-# pad fill for BOTH student logits and the mean-logit cache on the Pallas
-# path: representable in bf16, exp()→0 exactly, and (t − s) = 0 on pads
+# masked-lane fill for BOTH student logits and the mean-logit cache:
+# representable in bf16, exp()→0 exactly, and (t − s) = 0 on masked lanes
 FLASH_PAD = -1e30
 
 
@@ -192,10 +216,151 @@ def flash_kd_bwd_ref(student_logits, teacher_mean_logits, lse_s, lse_t, g,
 
 
 # =====================================================================
-# Pallas kernels: grid (B/Bb, V/Vt), V innermost (sequential carry)
+# pure-jnp head-fused streaming implementation
 # =====================================================================
+def _head_sweep(h32, head_w, head_b, teacher_mean_logits, carry, update,
+                tile: int):
+    """Like ``_tiled_sweep`` but the student tile is COMPUTED on the fly:
+    ``h @ W[:, tile] (+ b[tile])`` — the ``(B, V)`` student row never
+    exists.  Same unroll-vs-fori policy and static ragged-tail epilogue.
+
+    ``update(carry, s_tile, t_tile, w_tile, i0)`` additionally receives
+    the head slab and the tile's start column so the backward can reuse
+    this exact scaffolding (∂h needs ``w_tile``, the disjoint ∂W/∂b
+    writes need ``i0``); forward updates ignore the extras.
+    """
+    V = teacher_mean_logits.shape[1]
+    n_full = V // tile
+
+    def s_of(w_c, b_c):
+        s = h32 @ w_c.astype(jnp.float32)
+        if b_c is not None:
+            s = s + b_c.astype(jnp.float32)[None, :]
+        return s
+
+    def at(c, i0, w_c, b_c, t_c):
+        return update(c, s_of(w_c, b_c), t_c, w_c, i0)
+
+    if n_full <= 16:
+        for i in range(n_full):
+            sl = slice(i * tile, (i + 1) * tile)
+            carry = at(carry, i * tile, head_w[:, sl],
+                       None if head_b is None else head_b[sl],
+                       teacher_mean_logits[:, sl])
+    else:
+        def body(i, c):
+            w_c = jax.lax.dynamic_slice_in_dim(head_w, i * tile, tile, axis=1)
+            t_c = jax.lax.dynamic_slice_in_dim(teacher_mean_logits, i * tile,
+                                               tile, axis=1)
+            b_c = (None if head_b is None else
+                   jax.lax.dynamic_slice_in_dim(head_b, i * tile, tile, 0))
+            return at(c, i * tile, w_c, b_c, t_c)
+
+        carry = jax.lax.fori_loop(0, n_full, body, carry)
+    if V % tile:
+        sl = slice(n_full * tile, V)
+        carry = at(carry, n_full * tile, head_w[:, sl],
+                   None if head_b is None else head_b[sl],
+                   teacher_mean_logits[:, sl])
+    return carry
+
+
+def flash_kd_head_fwd_tiled(features, head_w, head_b, teacher_mean_logits,
+                            temperature: float = 1.0,
+                            tile_v: int = DEFAULT_TILE_V_HOST,
+                            teacher_lse=None):
+    """Head-fused streaming KD forward: ``(loss, lse_s, lse_t)`` from
+    pre-head features ``(B, D)`` + head ``(D, V)`` (+ optional ``(V,)``
+    bias) — ``z_s = h @ W + b`` is produced one ``(B, tile)`` block at a
+    time inside the online-logsumexp sweep and discarded."""
+    B = features.shape[0]
+    V = teacher_mean_logits.shape[-1]
+    inv_temp = 1.0 / float(temperature)
+    tile = max(1, min(int(tile_v), V))
+    h32 = features.astype(jnp.float32)
+
+    neg_inf = jnp.full((B,), -jnp.inf, jnp.float32)
+    zero = jnp.zeros((B,), jnp.float32)
+    if teacher_lse is not None:
+        lse_t = teacher_lse.astype(jnp.float32)
+        m_s, l_s, cross = _head_sweep(
+            h32, head_w, head_b, teacher_mean_logits, (neg_inf, zero, zero),
+            lambda c, s_c, t_c, *_: _acc_tile_lse(c, s_c, t_c, lse_t,
+                                                  inv_temp),
+            tile)
+        lse_s = m_s + jnp.log(l_s)
+        kl = cross - lse_t + lse_s
+    else:
+        m_s, l_s, m_t, l_t, acc = _head_sweep(
+            h32, head_w, head_b, teacher_mean_logits,
+            (neg_inf, zero, neg_inf, zero, zero),
+            lambda c, s_c, t_c, *_: _acc_tile(c, s_c, t_c, inv_temp), tile)
+        lse_s = m_s + jnp.log(l_s)
+        lse_t = m_t + jnp.log(l_t)
+        kl = acc / l_t - lse_t + lse_s
+    loss = jnp.mean(kl) * float(temperature) ** 2
+    return loss, lse_s, lse_t
+
+
+def flash_kd_head_bwd_tiled(features, head_w, head_b, teacher_mean_logits,
+                            lse_s, lse_t, g, temperature: float = 1.0,
+                            tile_v: int = DEFAULT_TILE_V_HOST):
+    """Head-fused residual backward: ``(∂h, ∂W, ∂b)`` in one streaming
+    pass, zero re-reductions.  The per-tile logit gradient
+    d = g·(τ/B)·(q − p) exists only at ``(B, tile)`` width; ``∂h``
+    accumulates ``d @ W_tileᵀ`` across tiles (f32 accumulator — error
+    grows with the tile count only, see module docstring) while
+    ``∂W[:, tile] = hᵀ @ d`` / ``∂b[tile] = Σ_b d`` are disjoint
+    write-once slices."""
+    B, D = features.shape
+    V = teacher_mean_logits.shape[-1]
+    inv_temp = 1.0 / float(temperature)
+    tile = max(1, min(int(tile_v), V))
+    h32 = features.astype(jnp.float32)
+    coef = jnp.asarray(g, jnp.float32) * (float(temperature) / B)
+    lse_s = lse_s.astype(jnp.float32)
+    lse_t = lse_t.astype(jnp.float32)
+
+    def bwd_tile(c, s_c, t_c, w_c, i0):
+        gh, gw, gb = c
+        q = jnp.exp(s_c * inv_temp - lse_s[:, None])
+        p = jnp.exp(t_c.astype(jnp.float32) * inv_temp - lse_t[:, None])
+        d = (q - p) * coef                  # (B, width) — the only width
+        #                                     the logit grad ever has
+        gh = gh + d @ w_c.astype(jnp.float32).T
+        gw = jax.lax.dynamic_update_slice_in_dim(gw, h32.T @ d, i0, axis=1)
+        if gb is not None:
+            gb = jax.lax.dynamic_update_slice_in_dim(gb, jnp.sum(d, axis=0),
+                                                     i0, 0)
+        return gh, gw, gb
+
+    gh, gw, gb = _head_sweep(
+        h32, head_w, head_b, teacher_mean_logits,
+        (jnp.zeros((B, D), jnp.float32), jnp.zeros((D, V), jnp.float32),
+         None if head_b is None else jnp.zeros((V,), jnp.float32)),
+        bwd_tile, tile)
+    return (gh.astype(features.dtype), gw.astype(head_w.dtype),
+            None if gb is None else gb.astype(head_b.dtype))
+
+
+# =====================================================================
+# Pallas kernels: grid (B/Bb, ceil(V/Vt)), V innermost (sequential carry)
+# =====================================================================
+def _mask_tail(x, v_idx, v_total: int, fill):
+    """Replace the ragged-tail lanes (global column ≥ v_total) with
+    ``fill`` — the in-kernel ``broadcasted_iota`` mask that removes any
+    need for host-side padding (ROADMAP open item, executed).  Static
+    no-op when the tile divides V."""
+    vt = x.shape[-1]
+    if v_total % vt == 0:
+        return x
+    col = v_idx * vt + jax.lax.broadcasted_iota(jnp.int32, x.shape,
+                                                x.ndim - 1)
+    return jnp.where(col < v_total, x, fill)
+
+
 def _flash_fwd_kernel(s_ref, t_ref, m_s_ref, l_s_ref, m_t_ref, l_t_ref,
-                      acc_ref, *, inv_temp: float):
+                      acc_ref, *, inv_temp: float, v_total: int):
     v = pl.program_id(1)
 
     @pl.when(v == 0)
@@ -206,8 +371,11 @@ def _flash_fwd_kernel(s_ref, t_ref, m_s_ref, l_s_ref, m_t_ref, l_t_ref,
         l_t_ref[...] = jnp.zeros(l_t_ref.shape, jnp.float32)
         acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
 
-    s = s_ref[...].astype(jnp.float32) * inv_temp          # (bb, vt)
-    t = t_ref[...].astype(jnp.float32) * inv_temp
+    # ragged tail: FLASH_PAD lanes are exact no-ops (exp→0, (t−s)=0)
+    s = _mask_tail(s_ref[...].astype(jnp.float32), v, v_total, FLASH_PAD)
+    t = _mask_tail(t_ref[...].astype(jnp.float32), v, v_total, FLASH_PAD)
+    s = s * inv_temp                                       # (bb, vt)
+    t = t * inv_temp
 
     # accumulator blocks are (bb, LANES) with the value broadcast across
     # lanes — revisited across the v axis they carry the online state
@@ -230,7 +398,7 @@ def _flash_fwd_kernel(s_ref, t_ref, m_s_ref, l_s_ref, m_t_ref, l_t_ref,
 
 
 def _flash_fwd_lse_kernel(s_ref, t_ref, lse_t_ref, m_s_ref, l_s_ref,
-                          cross_ref, *, inv_temp: float):
+                          cross_ref, *, inv_temp: float, v_total: int):
     v = pl.program_id(1)
 
     @pl.when(v == 0)
@@ -239,8 +407,10 @@ def _flash_fwd_lse_kernel(s_ref, t_ref, lse_t_ref, m_s_ref, l_s_ref,
         l_s_ref[...] = jnp.zeros(l_s_ref.shape, jnp.float32)
         cross_ref[...] = jnp.zeros(cross_ref.shape, jnp.float32)
 
-    s = s_ref[...].astype(jnp.float32) * inv_temp
-    t = t_ref[...].astype(jnp.float32) * inv_temp
+    s = _mask_tail(s_ref[...].astype(jnp.float32), v, v_total, FLASH_PAD)
+    t = _mask_tail(t_ref[...].astype(jnp.float32), v, v_total, FLASH_PAD)
+    s = s * inv_temp
+    t = t * inv_temp
 
     m_s_old = m_s_ref[...]
     m_s_new = jnp.maximum(m_s_old, jnp.max(s, axis=-1, keepdims=True))
@@ -269,8 +439,9 @@ def flash_kd_fwd(student_logits, teacher_mean_logits,
                  temperature: float = 1.0, block_b: int = DEFAULT_BB,
                  block_v: int = DEFAULT_TILE_V, interpret: bool = True,
                  teacher_lse=None):
-    """Fused streaming KD forward; V must be a multiple of ``block_v``
-    (ops.py pads once with FLASH_PAD at cache build, not per step).
+    """Fused streaming KD forward; any V works — a tile-unaligned vocab
+    runs ``ceil(V/Vt)`` grid steps with the tail lanes masked IN KERNEL
+    (``_mask_tail``), so neither operand is ever padded host-side.
     Returns ``(loss, lse_s, lse_t)`` — the residuals feed the backward.
     With ``teacher_lse`` (cache-build precompute) the kernel drops the
     teacher's online max/rescale chain: 3 accumulators instead of 5.
@@ -278,15 +449,14 @@ def flash_kd_fwd(student_logits, teacher_mean_logits,
     B, V = student_logits.shape
     bb = _block_b(B, block_b)
     vt = min(block_v, V)
-    assert V % vt == 0, (V, vt)
     stat = functools.partial(pl.BlockSpec, (bb, _STAT_LANES),
                              lambda b, v: (b, 0))
     if teacher_lse is not None:
         lse_t = teacher_lse.astype(jnp.float32)
         outs = pl.pallas_call(
             functools.partial(_flash_fwd_lse_kernel,
-                              inv_temp=1.0 / temperature),
-            grid=(B // bb, V // vt),
+                              inv_temp=1.0 / temperature, v_total=V),
+            grid=(B // bb, pl.cdiv(V, vt)),
             in_specs=[pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
                       pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
                       pl.BlockSpec((bb,), lambda b, v: (b,))],
@@ -300,8 +470,9 @@ def flash_kd_fwd(student_logits, teacher_mean_logits,
         kl = cross - lse_t + lse_s
         return jnp.mean(kl) * temperature ** 2, lse_s, lse_t
     outs = pl.pallas_call(
-        functools.partial(_flash_fwd_kernel, inv_temp=1.0 / temperature),
-        grid=(B // bb, V // vt),
+        functools.partial(_flash_fwd_kernel, inv_temp=1.0 / temperature,
+                          v_total=V),
+        grid=(B // bb, pl.cdiv(V, vt)),
         in_specs=[pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
                   pl.BlockSpec((bb, vt), lambda b, v: (b, v))],
         out_specs=[stat() for _ in range(5)],
@@ -317,26 +488,27 @@ def flash_kd_fwd(student_logits, teacher_mean_logits,
 
 
 def _flash_bwd_kernel(s_ref, t_ref, lse_s_ref, lse_t_ref, g_ref, o_ref, *,
-                      inv_temp: float, tau_over_b: float):
-    s = s_ref[...].astype(jnp.float32) * inv_temp
-    t = t_ref[...].astype(jnp.float32) * inv_temp
-    q = jnp.exp(s - lse_s_ref[...][:, None])
-    p = jnp.exp(t - lse_t_ref[...][:, None])
+                      inv_temp: float, tau_over_b: float, v_total: int):
+    v = pl.program_id(1)
+    s = _mask_tail(s_ref[...].astype(jnp.float32), v, v_total, FLASH_PAD)
+    t = _mask_tail(t_ref[...].astype(jnp.float32), v, v_total, FLASH_PAD)
+    q = jnp.exp(s * inv_temp - lse_s_ref[...][:, None])
+    p = jnp.exp(t * inv_temp - lse_t_ref[...][:, None])
     o_ref[...] = ((q - p) * (g_ref[0] * tau_over_b)).astype(o_ref.dtype)
 
 
 def flash_kd_bwd(student_logits, teacher_mean_logits, lse_s, lse_t, g,
                  temperature: float = 1.0, block_b: int = DEFAULT_BB,
                  block_v: int = DEFAULT_TILE_V, interpret: bool = True):
-    """Second streaming pass: ∂loss/∂student_logits from saved residuals."""
+    """Second streaming pass: ∂loss/∂student_logits from saved residuals.
+    Ragged-tail stores past V land in masked lanes (q = p = 0 there)."""
     B, V = student_logits.shape
     bb = _block_b(B, block_b)
     vt = min(block_v, V)
-    assert V % vt == 0, (V, vt)
     return pl.pallas_call(
         functools.partial(_flash_bwd_kernel, inv_temp=1.0 / temperature,
-                          tau_over_b=temperature / B),
-        grid=(B // bb, V // vt),
+                          tau_over_b=temperature / B, v_total=V),
+        grid=(B // bb, pl.cdiv(V, vt)),
         in_specs=[pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
                   pl.BlockSpec((bb, vt), lambda b, v: (b, v)),
                   pl.BlockSpec((bb,), lambda b, v: (b,)),
@@ -347,3 +519,226 @@ def flash_kd_bwd(student_logits, teacher_mean_logits, lse_s, lse_t, g,
         interpret=interpret,
     )(student_logits, teacher_mean_logits, lse_s, lse_t,
       jnp.reshape(g, (1,)).astype(jnp.float32))
+
+
+# =====================================================================
+# Pallas head-fused kernels: grid (ceil(V/Vt),), full feature rows live
+# =====================================================================
+# The head-fused grid streams the V axis only: the (B, D) feature block
+# and the (B, LANES) accumulators stay resident while each step loads one
+# (D, Vt) head slab + one (B, Vt) cache tile and runs the MXU matmul
+# in-kernel.  That keeps every output revisit CONSECUTIVE (a TPU
+# requirement for carry blocks): ∂h accumulates across the whole grid,
+# ∂W/∂b blocks are written exactly once at their own v step.
+
+def _head_tile(h, w_ref, b_ref, v, v_total: int):
+    """(B, vt) student tile ``h @ W_tile (+ b_tile)`` with masked-lane
+    head columns zeroed first (OOB slab lanes must not poison the MXU)."""
+    w = _mask_tail(w_ref[...].astype(jnp.float32), v, v_total, 0.0)
+    s = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    if b_ref is not None:
+        s = s + _mask_tail(b_ref[...].astype(jnp.float32), v, v_total,
+                           0.0)[None, :]
+    return _mask_tail(s, v, v_total, FLASH_PAD)
+
+
+def _flash_head_fwd_kernel(h_ref, w_ref, b_ref, t_ref, m_s_ref, l_s_ref,
+                           m_t_ref, l_t_ref, acc_ref, *, inv_temp: float,
+                           v_total: int):
+    v = pl.program_id(0)
+
+    @pl.when(v == 0)
+    def _init():
+        m_s_ref[...] = jnp.full(m_s_ref.shape, -jnp.inf, jnp.float32)
+        l_s_ref[...] = jnp.zeros(l_s_ref.shape, jnp.float32)
+        m_t_ref[...] = jnp.full(m_t_ref.shape, -jnp.inf, jnp.float32)
+        l_t_ref[...] = jnp.zeros(l_t_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    h = h_ref[...].astype(jnp.float32)
+    s = _head_tile(h, w_ref, b_ref, v, v_total) * inv_temp
+    t = _mask_tail(t_ref[...].astype(jnp.float32), v, v_total,
+                   FLASH_PAD) * inv_temp
+
+    m_s_old = m_s_ref[...]
+    m_s_new = jnp.maximum(m_s_old, jnp.max(s, axis=-1, keepdims=True))
+    l_s_ref[...] = (l_s_ref[...] * jnp.exp(m_s_old - m_s_new)
+                    + jnp.sum(jnp.exp(s - m_s_new[:, :1]), axis=-1,
+                              keepdims=True))
+    m_s_ref[...] = m_s_new
+
+    m_t_old = m_t_ref[...]
+    m_t_new = jnp.maximum(m_t_old, jnp.max(t, axis=-1, keepdims=True))
+    e_t = jnp.exp(t - m_t_new[:, :1])
+    scale = jnp.exp(m_t_old - m_t_new)
+    l_t_ref[...] = (l_t_ref[...] * scale
+                    + jnp.sum(e_t, axis=-1, keepdims=True))
+    acc_ref[...] = (acc_ref[...] * scale
+                    + jnp.sum(e_t * (t - s), axis=-1, keepdims=True))
+    m_t_ref[...] = m_t_new
+
+
+def _flash_head_fwd_lse_kernel(h_ref, w_ref, b_ref, t_ref, lse_t_ref,
+                               m_s_ref, l_s_ref, cross_ref, *,
+                               inv_temp: float, v_total: int):
+    v = pl.program_id(0)
+
+    @pl.when(v == 0)
+    def _init():
+        m_s_ref[...] = jnp.full(m_s_ref.shape, -jnp.inf, jnp.float32)
+        l_s_ref[...] = jnp.zeros(l_s_ref.shape, jnp.float32)
+        cross_ref[...] = jnp.zeros(cross_ref.shape, jnp.float32)
+
+    h = h_ref[...].astype(jnp.float32)
+    s = _head_tile(h, w_ref, b_ref, v, v_total) * inv_temp
+    t = _mask_tail(t_ref[...].astype(jnp.float32), v, v_total,
+                   FLASH_PAD) * inv_temp
+
+    m_s_old = m_s_ref[...]
+    m_s_new = jnp.maximum(m_s_old, jnp.max(s, axis=-1, keepdims=True))
+    l_s_ref[...] = (l_s_ref[...] * jnp.exp(m_s_old - m_s_new)
+                    + jnp.sum(jnp.exp(s - m_s_new[:, :1]), axis=-1,
+                              keepdims=True))
+    m_s_ref[...] = m_s_new
+
+    p = jnp.exp(t - lse_t_ref[...][:, None])
+    cross_ref[...] += jnp.sum(p * (t - s), axis=-1, keepdims=True)
+
+
+def flash_kd_head_fwd(features, head_w, head_b, teacher_mean_logits,
+                      temperature: float = 1.0,
+                      block_v: int = DEFAULT_TILE_V, interpret: bool = True,
+                      teacher_lse=None):
+    """Pallas head-fused forward: ``(loss, lse_s, lse_t)``.  The student
+    logit row exists only as the in-kernel ``(B, vt)`` MXU product."""
+    B, D = features.shape
+    V = teacher_mean_logits.shape[-1]
+    vt = min(block_v, V)
+    grid = (pl.cdiv(V, vt),)
+    stat = functools.partial(pl.BlockSpec, (B, _STAT_LANES),
+                             lambda v: (0, 0))
+    in_specs = [pl.BlockSpec((B, D), lambda v: (0, 0)),
+                pl.BlockSpec((D, vt), lambda v: (0, v))]
+    operands = [features, head_w]
+    if head_b is not None:
+        in_specs.append(pl.BlockSpec((vt,), lambda v: (v,)))
+        operands.append(head_b)
+    in_specs.append(pl.BlockSpec((B, vt), lambda v: (0, v)))
+    operands.append(teacher_mean_logits)
+
+    def with_bias(kern):
+        if head_b is not None:
+            return kern
+        return lambda h_ref, w_ref, *rest, **kw: kern(h_ref, w_ref, None,
+                                                      *rest, **kw)
+
+    if teacher_lse is not None:
+        lse_t = teacher_lse.astype(jnp.float32)
+        in_specs.append(pl.BlockSpec((B,), lambda v: (0,)))
+        operands.append(lse_t)
+        outs = pl.pallas_call(
+            functools.partial(with_bias(_flash_head_fwd_lse_kernel),
+                              inv_temp=1.0 / temperature, v_total=V),
+            grid=grid, in_specs=in_specs,
+            out_specs=[stat() for _ in range(3)],
+            out_shape=[jax.ShapeDtypeStruct((B, _STAT_LANES), jnp.float32)
+                       for _ in range(3)],
+            interpret=interpret,
+        )(*operands)
+        m_s, l_s, cross = (o[:, 0] for o in outs)
+        lse_s = m_s + jnp.log(l_s)
+        kl = cross - lse_t + lse_s
+        return jnp.mean(kl) * temperature ** 2, lse_s, lse_t
+    outs = pl.pallas_call(
+        functools.partial(with_bias(_flash_head_fwd_kernel),
+                          inv_temp=1.0 / temperature, v_total=V),
+        grid=grid, in_specs=in_specs,
+        out_specs=[stat() for _ in range(5)],
+        out_shape=[jax.ShapeDtypeStruct((B, _STAT_LANES), jnp.float32)
+                   for _ in range(5)],
+        interpret=interpret,
+    )(*operands)
+    m_s, l_s, m_t, l_t, acc = (o[:, 0] for o in outs)
+    lse_s = m_s + jnp.log(l_s)
+    lse_t = m_t + jnp.log(l_t)
+    kl = acc / l_t - lse_t + lse_s
+    return jnp.mean(kl) * temperature ** 2, lse_s, lse_t
+
+
+def _flash_head_bwd_kernel(h_ref, w_ref, b_ref, t_ref, lse_s_ref, lse_t_ref,
+                           g_ref, gh_ref, gw_ref, gb_ref, *, inv_temp: float,
+                           tau_over_b: float, v_total: int):
+    v = pl.program_id(0)
+
+    @pl.when(v == 0)
+    def _init():
+        gh_ref[...] = jnp.zeros(gh_ref.shape, jnp.float32)
+
+    h = h_ref[...].astype(jnp.float32)
+    w = _mask_tail(w_ref[...].astype(jnp.float32), v, v_total, 0.0)
+    s = jnp.dot(h, w, preferred_element_type=jnp.float32)
+    if b_ref is not None:
+        s = s + _mask_tail(b_ref[...].astype(jnp.float32), v, v_total,
+                           0.0)[None, :]
+    s = _mask_tail(s, v, v_total, FLASH_PAD)
+    t = _mask_tail(t_ref[...].astype(jnp.float32), v, v_total, FLASH_PAD)
+    q = jnp.exp(s * inv_temp - lse_s_ref[...][:, None])
+    p = jnp.exp(t * inv_temp - lse_t_ref[...][:, None])
+    d = (q - p) * (g_ref[0] * tau_over_b)       # (B, vt) — THE only width
+    #                                             the logit grad ever has
+    # ∂h accumulates across the v sweep (masked lanes: d = 0, w = 0)
+    gh_ref[...] += jnp.dot(d, w.T, preferred_element_type=jnp.float32)
+    gw_ref[...] = jnp.dot(h.T, d,
+                          preferred_element_type=jnp.float32).astype(
+        gw_ref.dtype)
+    if gb_ref is not None:
+        gb_ref[...] = jnp.sum(d, axis=0).astype(gb_ref.dtype)
+
+
+def flash_kd_head_bwd(features, head_w, head_b, teacher_mean_logits,
+                      lse_s, lse_t, g, temperature: float = 1.0,
+                      block_v: int = DEFAULT_TILE_V, interpret: bool = True):
+    """Pallas head-fused backward: ``(∂h, ∂W, ∂b)`` from saved residuals —
+    one streaming V sweep, ∂h carried in a revisited f32 block."""
+    B, D = features.shape
+    V = teacher_mean_logits.shape[-1]
+    vt = min(block_v, V)
+    grid = (pl.cdiv(V, vt),)
+    in_specs = [pl.BlockSpec((B, D), lambda v: (0, 0)),
+                pl.BlockSpec((D, vt), lambda v: (0, v))]
+    operands = [features, head_w]
+    if head_b is not None:
+        in_specs.append(pl.BlockSpec((vt,), lambda v: (v,)))
+        operands.append(head_b)
+    in_specs += [pl.BlockSpec((B, vt), lambda v: (0, v)),
+                 pl.BlockSpec((B,), lambda v: (0,)),
+                 pl.BlockSpec((B,), lambda v: (0,)),
+                 pl.BlockSpec((1,), lambda v: (0,))]
+    operands += [teacher_mean_logits, lse_s, lse_t,
+                 jnp.reshape(g, (1,)).astype(jnp.float32)]
+    out_specs = [pl.BlockSpec((B, D), lambda v: (0, 0)),
+                 pl.BlockSpec((D, vt), lambda v: (0, v))]
+    out_shape = [jax.ShapeDtypeStruct((B, D), jnp.float32),
+                 jax.ShapeDtypeStruct((D, V), head_w.dtype)]
+    if head_b is not None:
+        out_specs.append(pl.BlockSpec((vt,), lambda v: (v,)))
+        out_shape.append(jax.ShapeDtypeStruct((V,), head_b.dtype))
+
+    kern = _flash_head_bwd_kernel
+    if head_b is None:
+        def kern(h_ref, w_ref, t_ref, ls_ref, lt_ref, g_ref, gh_ref,
+                 gw_ref, **kw):
+            return _flash_head_bwd_kernel(h_ref, w_ref, None, t_ref, ls_ref,
+                                          lt_ref, g_ref, gh_ref, gw_ref,
+                                          None, **kw)
+
+    outs = pl.pallas_call(
+        functools.partial(kern, inv_temp=1.0 / temperature,
+                          tau_over_b=temperature / B, v_total=V),
+        grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(*operands)
+    gh = outs[0].astype(features.dtype)
+    gw = outs[1]
+    gb = outs[2] if head_b is not None else None
+    return gh, gw, gb

@@ -9,21 +9,24 @@ Two KD kernel families live here:
 
   * **dense** (``kd_loss`` + ``ensemble_softmax``) — consumes a full
     ``(B, V)`` f32 teacher-*probability* row per step; the parity oracle.
-  * **flash** (``flash_kd_loss``) — consumes the mean teacher *logit* row
-    (bf16-storable: the compressed teacher cache) and fuses the teacher
-    τ-softmax, student log-softmax and KL into streaming ``V``-tile
-    passes with online logsumexp (``flash.py``); the forward saves only
-    per-row normalizers so the backward is a second streaming pass with
-    no recompute.
+  * **flash** (``flash_kd_loss`` / ``flash_kd_head_loss``) — consumes the
+    mean teacher *logit* row (bf16-storable: the compressed teacher
+    cache) and fuses the teacher τ-softmax, student log-softmax and KL
+    into streaming ``V``-tile passes with online logsumexp (``flash.py``);
+    the forward saves only per-row normalizers so the backward is a
+    second streaming pass with no recompute.  The **head-fused** variant
+    additionally takes pre-head features + the LM-head matrix and runs
+    the ``h @ W[:, tile]`` matmul inside each tile, so the ``(B, V)``
+    student logit row is never materialized either — gradients flow to
+    the features, the head matrix and the optional bias through per-tile
+    accumulators.
 
-Vocab padding: the dense path pads to a multiple of 128 lanes with -1e30
-student logits / 0 teacher probs (exact for softmax + KL); the flash
-Pallas path pads both operands to a tile multiple with ``FLASH_PAD``
-(exact no-op lanes — see flash.py).  Teacher-side padding is applied ONCE
-at cache build by the KD pipeline's precompute (dense:
-``ensemble_softmax(..., keep_pad=True)``; flash: ``pad_teacher_logits``),
-never inside the per-step bodies; the off-TPU flash path pads nothing at
-all (ragged tails stream as a static epilogue tile).
+Vocab padding: the dense Pallas path pads to a multiple of 128 lanes with
+-1e30 student logits / 0 teacher probs (exact for softmax + KL); the
+flash paths pad NOTHING anywhere — tile-unaligned vocabularies are
+handled in kernel (``flash._mask_tail``'s ``broadcasted_iota`` column
+mask on the Pallas grid; a statically-shaped ragged epilogue tile on the
+jnp sweep), so the per-step bodies perform zero host-side copies.
 """
 from __future__ import annotations
 
@@ -34,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.kd_loss import flash, kernel, ref
-from repro.kernels.kd_loss.flash import DEFAULT_TILE_V, FLASH_PAD
+from repro.kernels.kd_loss.flash import DEFAULT_TILE_V
 
 
 def _use_pallas() -> bool:
@@ -45,8 +48,9 @@ def _use_pallas() -> bool:
 
 def pallas_active() -> bool:
     """Public probe: will the KD ops dispatch to the Pallas kernels?
-    Cache builders use it to decide whether to pre-pad the teacher tensor
-    (the Pallas layout) or keep it unpadded (the jnp paths)."""
+    Cache builders use it to decide whether to pre-pad the DENSE prob
+    tensor (the lane-padded Pallas layout) — the flash cache is never
+    padded on any path."""
     return _use_pallas()
 
 
@@ -60,17 +64,6 @@ def _pad_v(x, fill, multiple: int = 128):
     if pad == 0:
         return x
     return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
-
-
-# ------------------------------------------------- cache-build-time padding
-def pad_teacher_logits(mean_logits, tile_v: int | None = None):
-    """Pad a mean-teacher-*logit* cache to the flash kernel's tile multiple
-    ONCE (``FLASH_PAD`` lanes are exact no-ops under the online lse).
-    No-op off the Pallas path — the jnp flash path streams ragged tails
-    without any padding."""
-    if not _use_pallas():
-        return mean_logits
-    return _pad_v(mean_logits, FLASH_PAD, int(tile_v or DEFAULT_TILE_V))
 
 
 # ---------------------------------------------------------------- kd_loss
@@ -111,20 +104,11 @@ kd_loss.defvjp(_kd_fwd, _kd_bwd)
 
 
 # ------------------------------------------------------------ flash_kd_loss
-def _flash_pad_pair(s, zt, tile: int):
-    """Pallas-path operand padding to one tile multiple: the cache (zt) is
-    normally pre-padded at build (``pad_teacher_logits``) so only the
-    student needs the per-step pad, and only when V isn't tile-aligned."""
-    sp = _pad_v(s, FLASH_PAD, tile)
-    ztp = zt if zt.shape[-1] == sp.shape[-1] else _pad_v(zt, FLASH_PAD, tile)
-    return sp, ztp
-
-
 def _flash_fwd_impl(s, zt, teacher_lse, temperature, tile_v):
     if _use_pallas():
-        tile = int(tile_v or DEFAULT_TILE_V)
-        sp, ztp = _flash_pad_pair(s, zt, tile)
-        return flash.flash_kd_fwd(sp, ztp, temperature, block_v=tile,
+        # no operand padding — ragged vocabularies mask in kernel
+        return flash.flash_kd_fwd(s, zt, temperature,
+                                  block_v=int(tile_v or DEFAULT_TILE_V),
                                   interpret=_interpret(),
                                   teacher_lse=teacher_lse)
     return flash.flash_kd_fwd_tiled(
@@ -149,12 +133,10 @@ def _flash_fwd(student_logits, teacher_mean_logits, teacher_lse,
 
 def _flash_bwd(temperature, tile_v, saved, g):
     s, zt, lse_s, lse_t = saved
-    tile = int(tile_v or DEFAULT_TILE_V)
     if _use_pallas():
-        sp, ztp = _flash_pad_pair(s, zt, tile)
-        gs = flash.flash_kd_bwd(sp, ztp, lse_s, lse_t, g, temperature,
-                                block_v=tile, interpret=_interpret())
-        gs = gs[..., :s.shape[-1]]
+        gs = flash.flash_kd_bwd(s, zt, lse_s, lse_t, g, temperature,
+                                block_v=int(tile_v or DEFAULT_TILE_V),
+                                interpret=_interpret())
     else:
         gs = flash.flash_kd_bwd_ref(s, zt, lse_s, lse_t, g, temperature)
     return gs, None, None
@@ -185,12 +167,92 @@ def flash_kd_loss(student_logits, teacher_mean_logits,
                           temperature, tile_v)
 
 
+# ------------------------------------------------------ flash_kd_head_loss
+def _flash_head_fwd_impl(h, w, b, zt, teacher_lse, temperature, tile_v):
+    if _use_pallas():
+        return flash.flash_kd_head_fwd(h, w, b, zt, temperature,
+                                       block_v=int(tile_v or DEFAULT_TILE_V),
+                                       interpret=_interpret(),
+                                       teacher_lse=teacher_lse)
+    return flash.flash_kd_head_fwd_tiled(
+        h, w, b, zt, temperature, int(tile_v or flash.DEFAULT_TILE_V_HOST),
+        teacher_lse=teacher_lse)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _flash_kd_head_loss(features, head_w, head_b, teacher_mean_logits,
+                        teacher_lse, temperature, tile_v):
+    loss, _, _ = _flash_head_fwd_impl(features, head_w, head_b,
+                                      teacher_mean_logits, teacher_lse,
+                                      temperature, tile_v)
+    return loss
+
+
+def _flash_head_fwd(features, head_w, head_b, teacher_mean_logits,
+                    teacher_lse, temperature, tile_v):
+    loss, lse_s, lse_t = _flash_head_fwd_impl(features, head_w, head_b,
+                                              teacher_mean_logits,
+                                              teacher_lse, temperature,
+                                              tile_v)
+    return loss, (features, head_w, head_b, teacher_mean_logits,
+                  lse_s, lse_t)
+
+
+def _flash_head_bwd(temperature, tile_v, saved, g):
+    h, w, b, zt, lse_s, lse_t = saved
+    if _use_pallas():
+        gh, gw, gb = flash.flash_kd_head_bwd(
+            h, w, b, zt, lse_s, lse_t, g, temperature,
+            block_v=int(tile_v or DEFAULT_TILE_V), interpret=_interpret())
+    else:
+        gh, gw, gb = flash.flash_kd_head_bwd_tiled(
+            h, w, b, zt, lse_s, lse_t, g, temperature,
+            int(tile_v or flash.DEFAULT_TILE_V_HOST))
+    return gh, gw, gb, None, None
+
+
+_flash_kd_head_loss.defvjp(_flash_head_fwd, _flash_head_bwd)
+
+
+def flash_kd_head_loss(features, head_w, head_b=None,
+                       teacher_mean_logits=None, temperature: float = 1.0,
+                       tile_v: int | None = None, teacher_lse=None):
+    """Head-fused vocab-tiled KD loss: the student LM-head matmul runs
+    INSIDE the streaming V sweep.
+
+    ``features`` is the pre-head activation ``(B, D)`` (post final-norm),
+    ``head_w`` the ``(D, V)`` head matrix (any float dtype — bf16 heads
+    upcast to f32 per tile), ``head_b`` an optional ``(V,)`` bias.  Each
+    tile computes ``h @ W[:, tile] (+ b[tile])`` and feeds it straight
+    into the online-logsumexp KL accumulator, so live student-logit
+    memory is O(B·tile) — the full ``(B, V)`` row never exists, which is
+    what lets server-side KD run at V≈256k × large B.
+
+    Differentiable wrt ``features``, ``head_w`` and ``head_b`` (teachers
+    frozen): the backward streams the same tiles once more, accumulating
+    ``∂h`` across tiles and writing the disjoint ``∂W``/``∂b`` slices —
+    the logit gradient only ever exists at ``(B, tile)`` width.  Equals
+    ``flash_kd_loss(h @ W + b, z̄, τ)`` up to f32 accumulation order
+    (bounded by the tile count; see ``flash.py``).
+    """
+    if teacher_mean_logits is None:
+        # the bias slot precedes the teacher operand (so no-bias callers
+        # read naturally) — catch the classic off-by-one-argument misuse
+        # here instead of deep inside the kernel
+        raise TypeError(
+            "flash_kd_head_loss needs teacher_mean_logits; got None — "
+            "did you skip the head_b slot? Pass head_b=None explicitly: "
+            "flash_kd_head_loss(h, W, None, teacher_mean_logits, ...)")
+    return _flash_kd_head_loss(features, head_w, head_b,
+                               teacher_mean_logits, teacher_lse,
+                               temperature, tile_v)
+
+
 def teacher_cache_lse(mean_logits, temperature: float = 1.0):
     """Per-row logsumexp(z̄/τ) of a (…, V) mean-logit cache — the f32
-    normalizer residual stored beside the compressed cache at build time
-    (``FLASH_PAD`` lanes contribute exactly zero).  Computed from the
-    STORED (possibly bf16-rounded) values so it is exact for what the
-    per-step kernel consumes."""
+    normalizer residual stored beside the compressed cache at build time.
+    Computed from the STORED (possibly bf16-rounded) values so it is
+    exact for what the per-step kernel consumes."""
     return jax.nn.logsumexp(mean_logits.astype(jnp.float32) / temperature,
                             axis=-1)
 

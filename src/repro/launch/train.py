@@ -55,6 +55,13 @@ def main() -> None:
                     help="KD kernel family: dense f32-prob cache (oracle) "
                          "or flash — vocab-tiled streaming KL over the "
                          "compressed mean-logit teacher cache")
+    ap.add_argument("--kd-head-fusion", action="store_true",
+                    help="flash only: stream the student LM-head matmul "
+                         "through the vocab tiles too (tasks exposing a "
+                         "features/head split — the --arch LM task), so "
+                         "the (B, V) student logit row never "
+                         "materializes; other tasks fall back to the "
+                         "logits path")
     ap.add_argument("--teacher-cache-dtype", default=None,
                     choices=["float32", "bfloat16"],
                     help="flash teacher-cache storage precision (default "
@@ -92,6 +99,7 @@ def main() -> None:
         distill_steps=args.distill_steps, seed=args.seed,
         execution=args.execution, kd_pipeline=args.kd_pipeline,
         kd_kernel=args.kd_kernel,
+        kd_head_fusion=args.kd_head_fusion,
         teacher_cache_dtype=args.teacher_cache_dtype,
         overlap=args.overlap, teacher_dtype=args.teacher_dtype,
         **({"K": args.K, "R": args.R}

@@ -269,12 +269,26 @@ class Model:
             x = jnp.concatenate([pe, x[:, P:]], axis=1)
         return x
 
+    def head(self, params):
+        """(D, V) LM-head matrix — the tied-embedding transpose or the
+        separate ``lm_head``; no bias in any zoo family.  The accessor
+        the head-fused flash-KD path slices per vocab tile (gradients
+        flow back through the transpose to the embedding when tied)."""
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
     def _logits_out(self, params, x):
-        cfg = self.cfg
-        x = apply_norm(params["final_norm"], x, cfg)
-        head = (params["embed"].T if cfg.tie_embeddings
-                else params["lm_head"]).astype(x.dtype)
-        return x @ head
+        x = apply_norm(params["final_norm"], x, self.cfg)
+        return x @ self.head(params).astype(x.dtype)
+
+    def features(self, params, batch, *, remat: bool = False):
+        """(B, S, D) post-final-norm hidden states — the LM-head input,
+        i.e. ``logits == features @ head`` exactly.  The head-fused
+        KD path consumes this instead of ``logits`` so the ``(B·S, V)``
+        student row never materializes."""
+        x = self._embed_in(params, batch)
+        x, _, _ = self._stack_forward(params, x, mode="train", remat=remat)
+        return apply_norm(params["final_norm"], x, self.cfg)
 
     # ---- full-sequence forward -----------------------------------------
     def _stack_forward(self, params, x, *, mode: str, caches=None, pos=None,

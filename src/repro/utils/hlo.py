@@ -157,3 +157,46 @@ def roofline(flops: float, hbm_bytes: float, collective_bytes: float,
         collective_bytes=collective_bytes,
         chips=chips,
     )
+
+
+# ---------------------------------------------------------------------
+# jaxpr liveness analysis (flash-KD memory claims)
+# ---------------------------------------------------------------------
+def live_intermediate_shapes(jaxpr) -> set:
+    """Every LIVE intermediate (eqn output) shape in a jaxpr, recursively
+    through scan/cond/pjit/custom-vjp sub-jaxprs.
+
+    Dead equations — e.g. the symbolic-zero cotangent jax instantiates
+    for a frozen (non-differentiated) operand, which XLA removes — are
+    skipped via a reverse liveness pass, so the set reflects the buffers
+    a compiled program actually holds.  The flash-KD benches and tests
+    use this to assert the head-fused path never materializes the
+    ``(B, V)`` student logit row (live student memory is O(B·tile)).
+    """
+    from jax.core import ClosedJaxpr, Jaxpr, Var
+
+    def subs(val):
+        if isinstance(val, ClosedJaxpr):
+            yield val.jaxpr
+        elif isinstance(val, Jaxpr):
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from subs(v)
+
+    shapes = set()
+    live = {v for v in jaxpr.outvars if isinstance(v, Var)}
+    for eqn in reversed(jaxpr.eqns):
+        if not any(isinstance(v, Var) and v in live for v in eqn.outvars):
+            continue                      # dead: no consumer downstream
+        for v in eqn.invars:
+            if isinstance(v, Var):
+                live.add(v)
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                shapes.add(tuple(aval.shape))
+        for val in eqn.params.values():
+            for sub in subs(val):
+                shapes |= live_intermediate_shapes(sub)
+    return shapes

@@ -137,7 +137,14 @@ def tree_sq_dist(a: PyTree, b: PyTree):
 
 
 def tree_cast(tree: PyTree, dtype) -> PyTree:
-    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+    """Cast floating leaves to ``dtype``; leaves already there pass
+    through untouched (no copy, no convert op — callers re-casting an
+    already-f32 tree per batch must not pay a pytree copy per call)."""
+    dtype = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype != dtype else x,
+        tree)
 
 
 def tree_size(tree: PyTree) -> int:

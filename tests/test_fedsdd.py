@@ -66,9 +66,9 @@ def test_kd_cost_independent_of_clients(task):
     calls = []
     orig = dist.ensemble_probs
 
-    def counting(teachers, batch, logits_fn, temperature=1.0):
+    def counting(teachers, batch, logits_fn, temperature=1.0, **kw):
         calls.append(len(teachers))
-        return orig(teachers, batch, logits_fn, temperature)
+        return orig(teachers, batch, logits_fn, temperature, **kw)
 
     dist.ensemble_probs = counting
     try:

@@ -134,9 +134,9 @@ def test_flash_tile_invariance():
 @pytest.mark.parametrize("B,V,tile", [(4, 384, 128), (8, 1000, 256),
                                       (4, 130, 128)])
 def test_flash_pallas_kernels(B, V, tile, monkeypatch):
-    """Forced-Pallas (interpret) flash kernels vs the dense oracle,
-    including the cache-prepad path (pad applied once at build, not in
-    the step)."""
+    """Forced-Pallas (interpret) flash kernels vs the dense oracle —
+    tile-unaligned V included: the ragged tail is masked IN KERNEL
+    (``flash._mask_tail``), no operand is padded on any side."""
     monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
     r = np.random.default_rng(B + V)
     s = jnp.asarray(r.normal(0, 3, (B, V)), jnp.float32)
@@ -144,25 +144,52 @@ def test_flash_pallas_kernels(B, V, tile, monkeypatch):
     want = float(dense_oracle(s, zt, 4.0))
     np.testing.assert_allclose(float(ops.flash_kd_loss(s, zt, 4.0, tile)),
                                want, rtol=1e-5)
-    ztp = ops.pad_teacher_logits(zt, tile)
-    assert ztp.shape[-1] % tile == 0
-    np.testing.assert_allclose(float(ops.flash_kd_loss(s, ztp, 4.0, tile)),
-                               want, rtol=1e-5)
-    g_got = jax.grad(lambda x: ops.flash_kd_loss(x, ztp, 4.0, tile))(s)
+    g_got = jax.grad(lambda x: ops.flash_kd_loss(x, zt, 4.0, tile))(s)
     g_want = jax.grad(lambda x: dense_oracle(x, zt, 4.0))(s)
     assert g_got.shape == s.shape
     np.testing.assert_allclose(np.asarray(g_got), np.asarray(g_want),
                                atol=1e-6)
-    # precomputed-normalizer Pallas kernel (3 accumulators): FLASH_PAD
-    # lanes contribute zero to the stored lse, so pad + lse compose
-    lse = ops.teacher_cache_lse(ztp, 4.0)
+    # precomputed-normalizer Pallas kernel (3 accumulators): masked tail
+    # lanes contribute zero to the stored lse, so ragged V + lse compose
+    lse = ops.teacher_cache_lse(zt, 4.0)
     np.testing.assert_allclose(
-        float(ops.flash_kd_loss(s, ztp, 4.0, tile, teacher_lse=lse)),
+        float(ops.flash_kd_loss(s, zt, 4.0, tile, teacher_lse=lse)),
         want, rtol=1e-5)
-    g_lse = jax.grad(lambda x: ops.flash_kd_loss(x, ztp, 4.0, tile,
+    g_lse = jax.grad(lambda x: ops.flash_kd_loss(x, zt, 4.0, tile,
                                                  teacher_lse=lse))(s)
     np.testing.assert_allclose(np.asarray(g_lse), np.asarray(g_want),
                                atol=1e-6)
+
+
+def test_flash_pallas_no_host_padding(monkeypatch):
+    """Satellite (ROADMAP open item, closed): a tile-unaligned V on the
+    forced-Pallas flash path must trigger ZERO host-side padding copies —
+    neither per step on the student row (the old ``_pad_v`` hot-path
+    copy) nor at cache build on the teacher row.  ``ops._pad_v`` is the
+    only padder; instrumenting it proves the ragged tail lives entirely
+    in the kernels' iota mask."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    calls: list = []
+    orig = ops._pad_v
+
+    def spy(*a, **k):
+        calls.append(a)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(ops, "_pad_v", spy)
+    B, V, tile = 4, 1000, 256                 # 1000 % 256 != 0
+    r = np.random.default_rng(9)
+    s = jnp.asarray(r.normal(0, 3, (B, V)), jnp.float32)
+    zt = jnp.asarray(r.normal(0, 3, (B, V)), jnp.float32)
+    lse = ops.teacher_cache_lse(zt, 4.0)
+    want = float(dense_oracle(s, zt, 4.0))
+    for kw in ({}, {"teacher_lse": lse}):
+        np.testing.assert_allclose(
+            float(ops.flash_kd_loss(s, zt, 4.0, tile, **kw)), want,
+            rtol=1e-5)
+        g = jax.grad(lambda x: ops.flash_kd_loss(x, zt, 4.0, tile, **kw))(s)
+        assert g.shape == s.shape
+    assert not calls, "flash path performed host-side padding"
 
 
 def test_dense_prepadded_probs_cache(monkeypatch):
