@@ -55,6 +55,11 @@ def run_smoke(csv: CSV) -> None:
     # flash-KD: compressed-cache bytes + vocab-tiled kernel vs dense +
     # the head-fused row (gated: no live (B, V) student intermediate)
     kd_memory(csv, Vs=(512,), steps=8, reps=1, prefix="smoke")
+    # spilling ClientStore residency: tiny client counts, same gated
+    # flat-in-C claim as the full t9 row
+    from benchmarks.bench_scaling import store_memory
+    store_memory(csv, client_counts=(256, 2048), sampled=4, reps=1,
+                 prefix="smoke/store_memory")
     # the overlapped-executor measurement at its t3 operating point (~2
     # min): smaller configs give the min-over-window estimator too few
     # quiet windows on shared CI runners and the ratio row turns to noise

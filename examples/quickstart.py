@@ -79,6 +79,26 @@ def main() -> None:
     print(f"LM KD loss (head-fused): first={st_lm.history[-1]['kd_loss_first']:.4f} "
           f"last={st_lm.history[-1]['kd_loss_last']:.4f}")
 
+    print("\n== 10,000 clients on one box (spilling ClientStore) ==")
+    # The server's per-client state lives behind FedState.store
+    # (core/client_store.py).  client_store="spilling" keeps only the
+    # round's SAMPLED clients resident: data shards are generated lazily
+    # on first touch (synthetic_scaling_task materializes nothing up
+    # front), evicted rows and SCAFFOLD controls spill through fedckpt
+    # npz files, and the global control is a running sum — so
+    # store.nbytes() stays flat whether C is 10k or 1M ("memory" is the
+    # dense O(C) parity oracle).
+    from repro.core.tasks import synthetic_scaling_task
+
+    big = synthetic_scaling_task(num_clients=10_000, examples_per_client=32)
+    fed_big = make_runner("scaffold", big, num_clients=10_000,
+                          participation=8 / 10_000, local_epochs=1,
+                          client_batch=16, execution="vectorized",
+                          client_store="spilling", client_cache_buckets=8)
+    st_big = fed_big.run(rounds=3)
+    print(f"C=10k rounds done; resident client-state bytes: "
+          f"{st_big.store.nbytes():,} (O(sampled), not O(C))")
+
 
 if __name__ == "__main__":
     main()

@@ -47,14 +47,6 @@ from repro.utils.pytree import tree_stack, tree_unstack, tree_where
 PyTree = Any
 
 
-def _num_examples(ds) -> int:
-    if isinstance(ds, tuple):
-        return len(ds[0])
-    if isinstance(ds, dict):
-        return len(next(iter(ds.values())))
-    return len(ds)
-
-
 # =====================================================================
 # round plan: host-side schedule, stacked device-side batches
 # =====================================================================
@@ -110,72 +102,23 @@ class ClientEntry:
     idx: np.ndarray         # (S_c, bs) int32 minibatch index rows
 
 
-# Bucket shard stacks AND per-client device rows kept resident; under
-# partial participation (or the overlap executor's per-group phase split)
-# each round can bucket a fresh client subset (a fresh cache key), so the
-# cache is LRU-bounded rather than unbounded.
-MAX_CACHED_BUCKETS = int(os.environ.get("REPRO_ENGINE_CACHE_BUCKETS", "64"))
-
-
-def _lru_get(cache: Optional[dict], key):
-    if cache is not None and key in cache:
-        cache[key] = cache.pop(key)          # LRU: move to newest
-        return cache[key]
-    return None
-
-
-def _lru_put(cache: Optional[dict], key, value):
-    if cache is not None:
-        cache[key] = value
-        while len(cache) > MAX_CACHED_BUCKETS:
-            cache.pop(next(iter(cache)))     # evict least-recently used
-    return value
-
-
-def _client_row(task, cid: int, n_pad: int, cache: Optional[dict]) -> PyTree:
-    """One client's full shard as a device-resident (n_pad, ...) pytree.
-
-    Cached per (cid, n_pad) — the round-stable unit: bucket compositions
-    churn (group reshuffles, the overlap executor's group split) but a
-    client's padded row never does, so the host→device upload happens
-    once per client, not once per bucket composition.
-    """
-    key = ("row", int(cid), int(n_pad))
-    hit = _lru_get(cache, key)
-    if hit is not None:
-        return hit
-    ds = task.client_data[int(cid)]
-    n = _num_examples(ds)
-    full = task.make_batch(ds, np.arange(n))
-    row = jax.tree.map(
-        lambda x: jnp.asarray(np.concatenate(
-            [np.asarray(x),
-             np.zeros((n_pad - n,) + x.shape[1:], np.asarray(x).dtype)])
-            if n < n_pad else np.asarray(x)), full)
-    return _lru_put(cache, key, row)
-
-
-def _stack_bucket_data(task, cids: Sequence[int], n_pad: int,
-                       cache: Optional[dict]) -> PyTree:
-    """Device-resident (Cb, n_pad, ...) stack of full client shards.
-
-    Uses ``task.make_batch(ds, arange(n))`` so any per-example transform
-    the task applies is baked in; the engine assumes make_batch is a
-    per-example map (true of minibatch SGD tasks by construction).  A
-    bucket miss assembles the stack from cached per-client device rows —
-    a device-side copy, not a host re-upload.
-    """
-    key = (tuple(int(c) for c in cids), int(n_pad))
-    hit = _lru_get(cache, key)
-    if hit is not None:
-        return hit
-    rows = [_client_row(task, int(c), int(n_pad), cache) for c in cids]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
-    return _lru_put(cache, key, stacked)
+# The per-client device-row / bucket-stack LRU now lives in
+# ``core.client_store.ClientStore`` — the engine's old bolt-on cache
+# (``MAX_CACHED_BUCKETS`` + the ``REPRO_ENGINE_CACHE_BUCKETS`` env var)
+# promoted to an API with a first-class ``FedConfig(client_cache_buckets)``
+# knob.  Plan building takes a store; ``None`` builds through an
+# ephemeral in-memory store (no cross-call caching — the old
+# ``data_cache=None`` semantics).
+def _store_for(task, store):
+    if store is None:
+        from repro.core.client_store import InMemoryStore
+        return InMemoryStore(task)
+    return store
 
 
 def build_round_entries(task, cfg, groups: Sequence[np.ndarray],
-                        rng: np.random.Generator) -> list[ClientEntry]:
+                        rng: np.random.Generator,
+                        store=None) -> list[ClientEntry]:
     """Draw every sampled client's epoch schedule.
 
     CRITICAL: permutations are drawn in the exact order the sequential
@@ -184,11 +127,11 @@ def build_round_entries(task, cfg, groups: Sequence[np.ndarray],
     the overlap executor can reorder *training* (groups k>0 before group
     0) without reordering the rng stream.
     """
+    store = _store_for(task, store)
     entries: list[ClientEntry] = []
     cids, gids = group_major_order(groups)
     for pos, (cid, k) in enumerate(zip(cids, gids)):
-        ds = task.client_data[int(cid)]
-        n = _num_examples(ds)
+        n = store.num_examples(int(cid))
         bs = min(cfg.client_batch, n)
         steps = []
         for _ in range(cfg.local_epochs):
@@ -218,9 +161,16 @@ def entry_pad_hints(entries: Sequence[ClientEntry]) -> dict[int, tuple]:
 
 
 def plans_from_entries(task, entries: Sequence[ClientEntry],
-                       data_cache: Optional[dict] = None,
+                       store=None,
                        pad_to: Optional[dict] = None) -> list[ClientPlan]:
-    """Bucket pre-drawn entries by batch size and stack them for vmap."""
+    """Bucket pre-drawn entries by batch size and stack them for vmap.
+
+    All shard access goes through the ``ClientStore`` (``store=None``
+    builds through an ephemeral in-memory one): rows/stacks come off its
+    bounded device tier, so plan building is O(sampled) in memory no
+    matter how many clients the task holds.
+    """
+    store = _store_for(task, store)
     plans: list[ClientPlan] = []
     for bs in sorted({e.bs for e in entries}):
         # sorted-cid bucket order -> round-stable data-cache key
@@ -242,8 +192,7 @@ def plans_from_entries(task, entries: Sequence[ClientEntry],
             sizes=np.asarray([e.n for e in sub]),
             order=np.asarray([e.pos for e in sub]),
             batch_size=bs,
-            data=_stack_bucket_data(task, [e.cid for e in sub], n_pad,
-                                    data_cache),
+            data=store.get_bucket([e.cid for e in sub], n_pad),
             indices=jnp.asarray(np.stack(idxs)),
             step_mask=jnp.asarray(np.stack(masks)),
         ))
@@ -252,21 +201,21 @@ def plans_from_entries(task, entries: Sequence[ClientEntry],
 
 def plan_from_entries(task, entries: Sequence[ClientEntry],
                       groups: Sequence[np.ndarray],
-                      data_cache: Optional[dict] = None,
+                      store=None,
                       pad_to: Optional[dict] = None) -> RoundPlan:
     """RoundPlan over an entry subset (the overlap executor's phase split)."""
     return RoundPlan(groups=list(groups),
-                     plans=plans_from_entries(task, entries, data_cache,
+                     plans=plans_from_entries(task, entries, store,
                                               pad_to),
                      num_clients=len(entries))
 
 
 def build_round_plan(task, cfg, groups: Sequence[np.ndarray],
                      rng: np.random.Generator,
-                     data_cache: Optional[dict] = None) -> RoundPlan:
+                     store=None) -> RoundPlan:
     """Materialize every sampled client's epoch schedule, stacked."""
-    entries = build_round_entries(task, cfg, groups, rng)
-    return plan_from_entries(task, entries, groups, data_cache)
+    entries = build_round_entries(task, cfg, groups, rng, store)
+    return plan_from_entries(task, entries, groups, store)
 
 
 # =====================================================================
@@ -310,7 +259,6 @@ class VectorizedClientEngine:
         self.mesh = mesh
         self.client_sharding = client_sharding
         self.step_mode = step_mode
-        self.data_cache: dict = {}   # bucket shard stacks, across rounds
         self._vec_fn = None
         self._step_fn = None
 

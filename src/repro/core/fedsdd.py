@@ -30,6 +30,9 @@ from repro.core import distillation as dist
 from repro.core import engine as vec_engine
 from repro.core import round_plan
 from repro.core.aggregation import fedavg_aggregate, secure_aggregate
+from repro.core.client_store import (
+    ClientStore, DenseControlView, make_client_store,
+)
 from repro.core.grouping import assign_groups, sample_clients
 from repro.distill import KDPipeline, TeacherBank
 from repro.optim.optimizers import (
@@ -89,43 +92,84 @@ class FedConfig:
     # teacher-bank storage precision: "bfloat16" stores the K·R ring bf16
     # on device (f32 ensemble compute), doubling R at the same memory
     teacher_dtype: Optional[str] = None   # None (keep) | float32 | bfloat16
+    # client-state/data store (core/client_store.py): "memory" keeps the
+    # dense O(C) structures (the parity oracle); "spilling" keeps only
+    # touched clients resident — SCAFFOLD controls and data shards spill
+    # through fedckpt, so server memory is O(sampled), not O(C)
+    client_store: str = "memory"    # memory (oracle) | spilling
+    client_store_dir: Optional[str] = None  # spill directory (spilling only)
+    # LRU capacity of the store's device tier (rows + bucket stacks +
+    # hot controls) — was the REPRO_ENGINE_CACHE_BUCKETS env var, which
+    # still overrides this knob but is deprecated
+    client_cache_buckets: int = 64
     # misc
     secure_aggregation: bool = False
     seed: int = 0
 
     def validate(self) -> None:
-        assert self.K >= 1 and self.R >= 1
-        assert self.distill_target in ("main", "all", "none")
-        assert self.ensemble_source in ("aggregated", "clients")
-        assert self.local_algo in ("fedavg", "fedprox", "scaffold")
-        assert self.execution in ("sequential", "vectorized")
-        assert self.client_sharding in ("auto", "vmap", "shard_map")
-        assert self.kd_pipeline in ("legacy", "fused")
-        assert self.kd_kernel in ("dense", "flash")
+        """Reject inconsistent configs with actionable ``ValueError``s.
+
+        Deliberately not ``assert``: assertions vanish under ``python -O``
+        and a silently-accepted bad config trains the wrong experiment.
+        """
+        def _require(ok: bool, msg: str) -> None:
+            if not ok:
+                raise ValueError(f"invalid FedConfig: {msg}")
+
+        def _choice(name: str, allowed: tuple) -> None:
+            _require(getattr(self, name) in allowed,
+                     f"{name}={getattr(self, name)!r} not in {allowed}")
+
+        _require(self.K >= 1, f"K={self.K} but need at least one global "
+                 "model (K>=1)")
+        _require(self.R >= 1, f"R={self.R} but the temporal ensemble "
+                 "needs at least the current round (R>=1)")
+        _choice("distill_target", ("main", "all", "none"))
+        _choice("ensemble_source", ("aggregated", "clients"))
+        _choice("local_algo", ("fedavg", "fedprox", "scaffold"))
+        _choice("execution", ("sequential", "vectorized"))
+        _choice("client_sharding", ("auto", "vmap", "shard_map"))
+        _choice("kd_pipeline", ("legacy", "fused"))
+        _choice("kd_kernel", ("dense", "flash"))
         if self.kd_head_fusion:
-            assert self.kd_kernel == "flash", \
-                "kd_head_fusion streams the LM-head matmul through the " \
-                "flash vocab tiles — the dense prob path materializes " \
-                "full student rows by construction"
-        assert self.teacher_cache_dtype in (None, "float32", "bfloat16")
+            _require(self.kd_kernel == "flash",
+                     "kd_head_fusion streams the LM-head matmul through "
+                     "the flash vocab tiles — the dense prob path "
+                     "materializes full student rows by construction; set "
+                     "kd_kernel='flash'")
+        _choice("teacher_cache_dtype", (None, "float32", "bfloat16"))
         if self.teacher_cache_dtype is not None:
-            assert self.kd_kernel == "flash", \
-                "teacher_cache_dtype selects the flash mean-logit cache " \
-                "precision — the dense oracle's prob cache is f32-only"
-            assert self.kd_pipeline == "fused", \
-                "the compressed teacher cache lives in the fused " \
-                "KDPipeline; the legacy host loop keeps f32 rows, so a " \
-                "cache dtype there would be silently inert"
-        assert self.overlap in ("off", "async", "fused")
-        assert self.teacher_dtype in (None, "float32", "bfloat16")
+            _require(self.kd_kernel == "flash",
+                     "teacher_cache_dtype selects the flash mean-logit "
+                     "cache precision — the dense oracle's prob cache is "
+                     "f32-only; set kd_kernel='flash' or drop the dtype")
+            _require(self.kd_pipeline == "fused",
+                     "the compressed teacher cache lives in the fused "
+                     "KDPipeline; the legacy host loop keeps f32 rows, so "
+                     "a cache dtype there would be silently inert")
+        _choice("overlap", ("off", "async", "fused"))
+        _choice("teacher_dtype", (None, "float32", "bfloat16"))
         if self.overlap != "off":
-            assert self.kd_pipeline == "fused", \
-                "overlapped rounds dispatch KD as one device program — " \
-                "the host-driven kd_pipeline='legacy' loop cannot overlap"
+            _require(self.kd_pipeline == "fused",
+                     "overlapped rounds dispatch KD as one device "
+                     "program — the host-driven kd_pipeline='legacy' loop "
+                     "cannot overlap; set kd_pipeline='fused' or "
+                     "overlap='off'")
         if self.distill_target != "none" and self.ensemble_source == "clients":
-            assert not self.secure_aggregation, \
-                "client-model ensembles (FedDF/FedBE) are incompatible with " \
-                "secure aggregation — the FedSDD privacy argument (§3.2)"
+            _require(not self.secure_aggregation,
+                     "client-model ensembles (FedDF/FedBE) are "
+                     "incompatible with secure aggregation — the FedSDD "
+                     "privacy argument (§3.2); use "
+                     "ensemble_source='aggregated'")
+        _choice("client_store", ("memory", "spilling"))
+        _require(self.client_cache_buckets >= 1,
+                 f"client_cache_buckets={self.client_cache_buckets} but "
+                 "the store needs at least one resident bucket")
+        if self.client_store_dir is not None:
+            _require(self.client_store == "spilling",
+                     "client_store_dir names the spill directory, which "
+                     "only the spilling store uses; set "
+                     "client_store='spilling' or drop the directory")
 
 
 PRESETS: dict[str, dict] = {
@@ -175,8 +219,12 @@ class FedState:
     round: int
     global_models: list[PyTree]          # index 0 = main global model
     ensemble: TeacherBank                # device-resident K·R teacher ring
+    # per-client state/data tier (core/client_store.py) — ALL per-client
+    # access (shards, padded device rows, SCAFFOLD controls) goes here
+    store: Optional[ClientStore] = None
     scaffold_c_global: Optional[PyTree] = None
-    scaffold_c_clients: Optional[list[PyTree]] = None
+    # deprecated dense read-only view over store controls (one release)
+    scaffold_c_clients: Optional[Sequence[PyTree]] = None
     history: list[dict] = field(default_factory=list)
     # overlap modes: the deferred round-t KD job (runs during round t+1's
     # k>0 local training; drained by FederatedRunner.finalize), and the
@@ -209,11 +257,12 @@ class FederatedRunner:
             round=0,
             global_models=models,
             ensemble=TeacherBank(cfg.K, cfg.R, dtype=cfg.teacher_dtype),
+            store=make_client_store(cfg, self.task),
         )
         if cfg.local_algo == "scaffold":
+            state.store.init_controls(models[0])
             state.scaffold_c_global = tree_zeros_like(models[0])
-            state.scaffold_c_clients = [tree_zeros_like(models[0])
-                                        for _ in range(cfg.num_clients)]
+            state.scaffold_c_clients = DenseControlView(state.store)
         return state
 
     # ---- local training --------------------------------------------------
@@ -240,6 +289,16 @@ class FederatedRunner:
             self._train_step = (optimizer, step)
         return self._train_step
 
+    def _store(self, state: FedState) -> ClientStore:
+        """The state's client store; states constructed by hand (tests,
+        benches) get one lazily so every per-client access has a home."""
+        if state.store is None:
+            state.store = make_client_store(self.cfg, self.task)
+            if self.cfg.local_algo == "scaffold":
+                state.store.init_controls(state.global_models[0])
+                state.scaffold_c_clients = DenseControlView(state.store)
+        return state.store
+
     def _local_train_scheduled(self, params: PyTree, client_id: int,
                                state: FedState, idx_rows) -> PyTree:
         """One client's local training over a PRE-DRAWN minibatch schedule.
@@ -251,30 +310,30 @@ class FederatedRunner:
         rng stream.
         """
         cfg = self.cfg
-        ds = self.task.client_data[client_id]
+        store = self._store(state)
+        ds = store.client_shard(client_id)
         optimizer, step = self._train_batch_step()
         opt_state = optimizer.init(params)
         if cfg.local_algo == "fedprox":
             opt_state["anchor"] = params
         if cfg.local_algo == "scaffold":
             opt_state = opt_state._replace(
-                c_local=state.scaffold_c_clients[client_id],
+                c_local=store.get_control(client_id),
                 c_global=state.scaffold_c_global)
         w_start = params
         for row in idx_rows:
             batch = self.task.make_batch(ds, row)
             params, opt_state, _ = step(params, opt_state, batch)
         if cfg.local_algo == "scaffold":
-            state.scaffold_c_clients[client_id] = scaffold_new_control(
-                opt_state, w_start, params, cfg.client_lr)
+            store.put_control(client_id, scaffold_new_control(
+                opt_state, w_start, params, cfg.client_lr))
         return params
 
     def local_train(self, params: PyTree, client_id: int, state: FedState,
                     rng: np.random.Generator) -> tuple[PyTree, int]:
         """One client's full local training (cfg.local_epochs over its shard)."""
         cfg = self.cfg
-        ds = self.task.client_data[client_id]
-        n = vec_engine._num_examples(ds)
+        n = self._store(state).num_examples(client_id)
         bs = min(cfg.client_batch, n)
         rows = []
         for _ in range(cfg.local_epochs):
@@ -464,7 +523,8 @@ class _SequentialRoundOps:
         self.runner, self.state = runner, state
         self.groups, self.t = groups, t
         self.entries = vec_engine.build_round_entries(
-            runner.task, runner.cfg, groups, rng)
+            runner.task, runner.cfg, groups, rng,
+            store=runner._store(state))
         self.models: list = [None] * len(self.entries)   # by round position
 
     def fused_capable(self) -> bool:
@@ -488,9 +548,7 @@ class _SequentialRoundOps:
         if cfg.local_algo == "scaffold":
             # server control: c += |S|/N * mean_i (c_i' − c_i)  (we use the
             # simpler running-average form: c = mean of client controls)
-            cs = state.scaffold_c_clients
-            state.scaffold_c_global = jax.tree.map(
-                lambda *xs: sum(xs) / len(xs), *cs)
+            state.scaffold_c_global = state.store.control_mean()
 
     def aggregate(self) -> list[PyTree]:
         """Per-group Eq. 1-2 over the trained client models."""
@@ -560,8 +618,9 @@ class _VectorizedRoundOps:
         self.runner, self.state = runner, state
         self.groups, self.t = groups, t
         self.eng = runner._make_engine()
+        self.store = runner._store(state)
         self.entries = vec_engine.build_round_entries(
-            runner.task, runner.cfg, groups, rng)
+            runner.task, runner.cfg, groups, rng, store=self.store)
         # round-stable pad targets: subset buckets (the overlap phase
         # split) compile once instead of retracing per group shuffle
         self.pad_hints = vec_engine.entry_pad_hints(self.entries)
@@ -583,31 +642,34 @@ class _VectorizedRoundOps:
         if not ents:
             return
         runner, state, cfg = self.runner, self.state, self.runner.cfg
-        rplan = vec_engine.plan_from_entries(runner.task, ents, self.groups,
-                                             self.eng.data_cache,
-                                             pad_to=self.pad_hints)
-        optimizer = self.eng.optimizer
-        stacked_k = tree_stack(state.global_models)   # (K, ...) per phase
+        store = self.store
+        # pin this phase's clients resident while their bucket stacks are
+        # assembled and consumed — the O(sampled) residency contract
+        with store.sampled_view([e.cid for e in ents]) as view:
+            rplan = vec_engine.plan_from_entries(
+                runner.task, ents, self.groups, store=store,
+                pad_to=self.pad_hints)
+            optimizer = self.eng.optimizer
+            stacked_k = tree_stack(state.global_models)  # (K, ...) per phase
 
-        def init_params_for(plan):
-            gid = jnp.asarray(plan.group_of)
-            return jax.tree.map(lambda x: x[gid], stacked_k)
+            def init_params_for(plan):
+                gid = jnp.asarray(plan.group_of)
+                return jax.tree.map(lambda x: x[gid], stacked_k)
 
-        def init_opt_state_for(plan, w0):
-            s0 = jax.vmap(optimizer.init)(w0)
-            if cfg.local_algo == "scaffold":
-                c_loc = tree_stack([state.scaffold_c_clients[int(c)]
-                                    for c in plan.cids])
-                nb = len(plan.cids)
-                c_glob = jax.tree.map(
-                    lambda x: jnp.broadcast_to(x, (nb,) + x.shape),
-                    state.scaffold_c_global)
-                s0 = s0._replace(c_local=c_loc, c_global=c_glob)
-            return s0
+            def init_opt_state_for(plan, w0):
+                s0 = jax.vmap(optimizer.init)(w0)
+                if cfg.local_algo == "scaffold":
+                    c_loc = tree_stack(view.controls(plan.cids))
+                    nb = len(plan.cids)
+                    c_glob = jax.tree.map(
+                        lambda x: jnp.broadcast_to(x, (nb,) + x.shape),
+                        state.scaffold_c_global)
+                    s0 = s0._replace(c_local=c_loc, c_global=c_glob)
+                return s0
 
-        stacked, gids, sizes, buckets = self.eng.train_round(
-            rplan, init_params_for, init_opt_state_for,
-            run_buckets=run_buckets)
+            stacked, gids, sizes, buckets = self.eng.train_round(
+                rplan, init_params_for, init_opt_state_for,
+                run_buckets=run_buckets)
         orders = np.sort(np.concatenate([p.order for p in rplan.plans]))
         self.results.append((stacked, gids, sizes, orders))
         self.buckets.extend(buckets)
@@ -620,11 +682,9 @@ class _VectorizedRoundOps:
                     lambda st, a, b: scaffold_new_control(
                         st, a, b, cfg.client_lr))(s, w0, p)
                 for i, cid in enumerate(plan.cids):
-                    state.scaffold_c_clients[int(cid)] = jax.tree.map(
-                        lambda x, i=i: x[i], new_c)
-            cs = state.scaffold_c_clients
-            state.scaffold_c_global = jax.tree.map(
-                lambda *xs: sum(xs) / len(xs), *cs)
+                    self.store.put_control(int(cid), jax.tree.map(
+                        lambda x, i=i: x[i], new_c))
+            state.scaffold_c_global = self.store.control_mean()
 
     def aggregate(self) -> list[PyTree]:
         """Eq. 2 for every group at once — one fused segment reduction

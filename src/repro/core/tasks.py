@@ -59,6 +59,51 @@ def _mlp_logits(params, x):
     return jax.nn.relu(h) @ params["w2"] + params["b2"]
 
 
+# ------------------------------------------------------- lazy client data
+class LazyClientData:
+    """Sequence-like ``FedTask.client_data`` that generates shards on
+    first touch.
+
+    The point is C=1M clients with zero upfront materialization: the
+    server never holds a dense list of shards, ``len()`` and per-client
+    sizes are known a priori (``num_examples`` — the ``ClientStore``
+    protocol's no-materialization size probe), and a small LRU keeps the
+    handful of shards a round actually touches.  ``make_shard(cid, n)``
+    must be deterministic in ``cid`` so regeneration after eviction (or
+    a process restart) reproduces the identical shard.
+    """
+
+    def __init__(self, num_clients: int, examples_per_client: int,
+                 make_shard, cache_size: int = 16):
+        self._num_clients = int(num_clients)
+        self._n = int(examples_per_client)
+        self._make_shard = make_shard
+        self._cache_size = int(cache_size)
+        self._cache: dict[int, object] = {}     # insertion-ordered LRU
+
+    def __len__(self) -> int:
+        return self._num_clients
+
+    def num_examples(self, cid: int) -> int:
+        return self._n
+
+    def __getitem__(self, cid: int):
+        cid = int(cid)
+        if not 0 <= cid < self._num_clients:
+            raise IndexError(cid)
+        if cid in self._cache:
+            self._cache[cid] = self._cache.pop(cid)   # refresh recency
+            return self._cache[cid]
+        shard = self._make_shard(cid, self._n)
+        self._cache[cid] = shard
+        while len(self._cache) > self._cache_size:
+            self._cache.pop(next(iter(self._cache)))
+        return shard
+
+    def __iter__(self):
+        return (self[c] for c in range(self._num_clients))
+
+
 # ---------------------------------------------------------------- tasks
 def classification_task(model: str = "cnn",
                         num_clients: int = 20,
@@ -119,6 +164,51 @@ def classification_task(model: str = "cnn",
     return FedTask(init_fn=init_fn, loss_fn=loss_fn, logits_fn=logits_fn,
                    client_data=client_data, server_batches=server_batches,
                    make_batch=make_batch, eval_fn=eval_fn)
+
+
+def synthetic_scaling_task(num_clients: int,
+                           examples_per_client: int = 64,
+                           num_classes: int = 10,
+                           num_server: int = 256,
+                           server_batch: int = 128,
+                           noise: float = 0.6,
+                           seed: int = 0) -> FedTask:
+    """A classification task sized by client COUNT, not data volume:
+    ``client_data`` is a ``LazyClientData`` over per-cid deterministic
+    shards (``SyntheticClassification.client_shard``), so constructing
+    the task at C=1M allocates nothing — shards exist only while a round
+    holds them.  The store-memory scaling bench and the spilling-store
+    quickstart run on this; the tiny MLP keeps round time about data
+    movement rather than FLOPs.  No eval set (eval over C clients is not
+    what this task measures)."""
+    data = SyntheticClassification(num_classes=num_classes,
+                                   num_train=0, num_test=0,
+                                   num_server=num_server, noise=noise,
+                                   seed=seed)
+    client_data = LazyClientData(num_clients, examples_per_client,
+                                 data.client_shard)
+    sx = data.server_unlabeled()
+    server_batches = [
+        {"x": jnp.asarray(sx[i:i + server_batch])}
+        for i in range(0, len(sx) - server_batch + 1, server_batch)
+    ]
+
+    init_fn = partial(_init_mlp, num_classes=num_classes)
+    logits_fn = lambda p, b: _mlp_logits(p, b["x"])
+
+    def loss_fn(p, b):
+        logits = _mlp_logits(p, b["x"])
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, b["y"][:, None], -1))
+        return loss, {}
+
+    def make_batch(ds, idx):
+        x, y = ds
+        return {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx])}
+
+    return FedTask(init_fn=init_fn, loss_fn=loss_fn, logits_fn=logits_fn,
+                   client_data=client_data, server_batches=server_batches,
+                   make_batch=make_batch, eval_fn=None)
 
 
 def lm_task(cfg: ModelConfig,

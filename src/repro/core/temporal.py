@@ -8,11 +8,20 @@ pytree on device, in-place slot writes with donated buffers, the same
 the same ``spill_dir`` crash-recovery format through ``fedckpt``.
 
 ``TemporalEnsemble`` remains as an alias so existing imports keep
-working; new code should import ``TeacherBank`` from ``repro.distill``.
+working — importing this module warns, and the shim is scheduled for
+removal (see ROADMAP); new code should import ``TeacherBank`` from
+``repro.distill``.
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.distill.teacher_bank import TeacherBank
+
+warnings.warn(
+    "repro.core.temporal is a deprecated compatibility shim; import "
+    "TeacherBank from repro.distill (removal next release)",
+    DeprecationWarning, stacklevel=2)
 
 TemporalEnsemble = TeacherBank
 

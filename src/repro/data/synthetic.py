@@ -70,6 +70,26 @@ class SyntheticClassification:
             self._cache["server"] = x
         return self._cache["server"]
 
+    def client_shard(self, cid: int, n: int):
+        """One client's (x, y) shard, generated deterministically from
+        (seed, cid) alone — the lazy generator behind million-client
+        scaling tasks: no dense partition of a global array exists, so a
+        shard costs nothing until a round actually samples its client.
+        Each client leans toward two 'home' classes (a crude non-IID
+        skew standing in for the Dirichlet partition, which would need
+        the O(C·n) global label vector this path exists to avoid)."""
+        rng = np.random.default_rng(self.seed)
+        templates = self._templates(rng)
+        rng_c = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 1_000_003, int(cid)]))
+        home = rng_c.integers(0, self.num_classes, 2)
+        y = np.where(rng_c.random(n) < 0.7,
+                     home[rng_c.integers(0, 2, n)],
+                     rng_c.integers(0, self.num_classes, n))
+        x = templates[y] + rng_c.normal(
+            0, self.noise, (n, *self.image_shape)).astype(np.float32)
+        return x.astype(np.float32), y.astype(np.int32)
+
 
 def batches(x, y, batch_size: int, rng: np.random.Generator):
     """One epoch of shuffled minibatches (drops the ragged tail)."""

@@ -164,6 +164,17 @@ class KDPipeline:
             self._batches_src = server_batches
         return self._batches
 
+    def nbytes(self) -> int:
+        """Resident bytes of the pipeline's retained server-batch stack —
+        the distill-side entry in the server residency audit alongside
+        ``ClientStore.nbytes()`` and ``TeacherBank.nbytes()``.  O(server
+        set), independent of C by construction; zero before the first
+        round touches the pipeline."""
+        if self._batches is None:
+            return 0
+        return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(self._batches))
+
     # --------------------------------------------------- teacher precompute
     def _shard_teachers(self) -> bool:
         """Shard decision for the teacher pass — the same shared policy

@@ -1,1 +1,4 @@
-from repro.fedckpt.checkpointer import Checkpointer, load_pytree, save_pytree  # noqa: F401
+from repro.fedckpt.checkpointer import (  # noqa: F401
+    Checkpointer, client_state_path, load_pytree, save_pytree,
+    spilled_client_ids,
+)

@@ -56,6 +56,35 @@ def spill_members(directory: str, round_idx: int, stacked: PyTree,
     return paths
 
 
+# ---------------------------------------------------------------------
+# per-client state spills (the ClientStore's disk tier): one npz per
+# (kind, client), restorable by a fresh process over the same directory
+# ---------------------------------------------------------------------
+_CLIENT_RE = re.compile(r"^(?P<kind>[a-z]+)_c(?P<cid>\d{8})(?P<suffix>.*)\.npz$")
+
+
+def client_state_path(directory: str, kind: str, cid: int,
+                      suffix: str = "") -> str:
+    """Canonical spill path for one client's state of a given kind
+    (``ctrl`` = SCAFFOLD control, ``data`` = padded shard row):
+    ``{kind}_c{cid:08d}{suffix}.npz``."""
+    return os.path.join(directory, f"{kind}_c{cid:08d}{suffix}.npz")
+
+
+def spilled_client_ids(directory: str, kind: str) -> list[int]:
+    """Client ids with a spilled ``kind`` file in ``directory`` — how a
+    restarted ``SpillingStore`` discovers which clients were ever
+    touched (O(touched), never O(C))."""
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for fn in os.listdir(directory):
+        m = _CLIENT_RE.match(fn)
+        if m and m.group("kind") == kind:
+            out.append(int(m.group("cid")))
+    return sorted(set(out))
+
+
 def load_pytree(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (shapes/dtypes must match)."""
     data = np.load(path if path.endswith(".npz") else path + ".npz")

@@ -78,6 +78,21 @@ def main() -> None:
                     choices=["float32", "bfloat16"],
                     help="teacher-bank storage precision (bfloat16 halves "
                          "bank memory; ensemble compute stays f32)")
+    ap.add_argument("--client-store", default="memory",
+                    choices=["memory", "spilling"],
+                    help="per-client state/data store: memory keeps the "
+                         "dense O(C) structures (parity oracle); spilling "
+                         "keeps only touched clients resident and spills "
+                         "SCAFFOLD controls/data shards through fedckpt, "
+                         "so server memory is O(sampled)")
+    ap.add_argument("--client-store-dir", default=None,
+                    help="spill directory for --client-store spilling "
+                         "(default: a fresh temp dir; reuse one to restore "
+                         "spilled controls across restarts)")
+    ap.add_argument("--client-cache-buckets", type=int, default=64,
+                    help="LRU capacity of the store's device tier (rows + "
+                         "bucket stacks + hot controls); replaces the "
+                         "deprecated REPRO_ENGINE_CACHE_BUCKETS env var")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None, help="write history JSON here")
@@ -102,6 +117,9 @@ def main() -> None:
         kd_head_fusion=args.kd_head_fusion,
         teacher_cache_dtype=args.teacher_cache_dtype,
         overlap=args.overlap, teacher_dtype=args.teacher_dtype,
+        client_store=args.client_store,
+        client_store_dir=args.client_store_dir,
+        client_cache_buckets=args.client_cache_buckets,
         **({"K": args.K, "R": args.R}
            if PRESETS[args.preset].get("K", 1) > 1 else {}),
         **overrides)

@@ -1,0 +1,252 @@
+"""ClientStore: O(sampled) per-client state/data (core/client_store.py).
+
+The spilling store must be a *refactoring* of the dense in-memory oracle:
+same rounds, same models (allclose — the running-sum SCAFFOLD control
+mean reassociates float adds), with resident bytes that stay flat as the
+total client count grows.  Also covers the LRU tier (eviction order,
+pinning via SampledView), the simulated-restart restore contract, the
+deprecated dense control view, the env-var override, and the
+FedConfig.validate() ValueError matrix.
+"""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client_store import (
+    _LRU, DenseControlView, InMemoryStore, SpillingStore,
+    resolve_cache_buckets,
+)
+from repro.core.fedsdd import FedConfig, make_config, make_runner
+from repro.core.tasks import classification_task, synthetic_scaling_task
+
+ATOL, RTOL = 1e-4, 1e-4
+
+
+@pytest.fixture(scope="module")
+def task():
+    return classification_task(model="mlp", num_clients=6, alpha=0.5,
+                               num_train=240, num_server=256, seed=0)
+
+
+def small(**kw):
+    base = dict(num_clients=6, participation=0.5, local_epochs=1,
+                client_lr=0.05, server_lr=0.05, distill_steps=3,
+                client_batch=32, rounds=3)
+    base.update(kw)
+    return base
+
+
+def assert_models_close(ms_a, ms_b):
+    assert len(ms_a) == len(ms_b)
+    for a, b in zip(ms_a, ms_b):
+        jax.tree.map(lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=RTOL, atol=ATOL), a, b)
+
+
+# ------------------------------------------------ spilling-vs-memory parity
+@pytest.mark.parametrize("preset", ["fedavg", "fedprox", "scaffold"])
+@pytest.mark.parametrize("execution", ["sequential", "vectorized"])
+def test_store_parity(task, tmp_path, preset, execution):
+    """Spilling store == dense oracle for every local algorithm on both
+    engines.  Tiny cache capacity forces constant evict/restore churn."""
+    mem = make_runner(preset, task, execution=execution,
+                      **small()).run(rounds=3)
+    spill = make_runner(preset, task, execution=execution,
+                        client_store="spilling", client_cache_buckets=2,
+                        client_store_dir=str(tmp_path / execution),
+                        **small()).run(rounds=3)
+    assert_models_close(mem.global_models, spill.global_models)
+    if preset == "scaffold":
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=RTOL, atol=ATOL),
+            mem.scaffold_c_global, spill.scaffold_c_global)
+
+
+def test_store_parity_fedsdd(task, tmp_path):
+    """Full Algorithm 1 (K=2 + KD) rides the store unchanged."""
+    kw = small(participation=1.0)
+    mem = make_runner("fedsdd", task, K=2, execution="vectorized",
+                      **kw).run(rounds=2)
+    spill = make_runner("fedsdd", task, K=2, execution="vectorized",
+                        client_store="spilling", client_cache_buckets=2,
+                        client_store_dir=str(tmp_path), **kw).run(rounds=2)
+    assert_models_close(mem.global_models, spill.global_models)
+
+
+# ------------------------------------------------------- restart restore
+def test_spilled_controls_survive_restart(task, tmp_path):
+    """A fresh SpillingStore over the same directory restores every
+    spilled SCAFFOLD control and rebuilds the running control sum — the
+    simulated-restart contract."""
+    r = make_runner("scaffold", task, client_store="spilling",
+                    client_cache_buckets=1, client_store_dir=str(tmp_path),
+                    **small(participation=1.0))
+    st = r.run(rounds=2)
+    store = st.store
+    # force every hot control to disk so the restart sees all of them
+    for cid in range(len(task.client_data)):
+        c = store.get_control(cid)
+        from repro.fedckpt.checkpointer import save_pytree
+        save_pytree(store._ctrl_path(cid), c)
+
+    fresh = SpillingStore(task, capacity=4, directory=str(tmp_path))
+    fresh.init_controls(st.global_models[0])
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+        store.control_mean(), fresh.control_mean())
+    for cid in range(len(task.client_data)):
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+            store.get_control(cid), fresh.get_control(cid))
+
+
+def test_evicted_data_row_restores_bit_exact(task, tmp_path):
+    """A row evicted to disk reloads identical to its rebuild."""
+    store = SpillingStore(task, capacity=1, directory=str(tmp_path))
+    n = store.num_examples(0)
+    row0 = jax.tree.map(np.asarray, store.get_data(0, n))
+    store.get_data(1, n)        # capacity 1: evicts + spills row 0
+    assert os.path.exists(store._data_path(0, n))
+    back = store.get_data(0, n)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        a, np.asarray(b)), row0, back)
+
+
+# --------------------------------------------------------------- LRU tier
+def test_lru_eviction_order():
+    """Strict least-recently-USED eviction: a get refreshes recency."""
+    evicted = []
+    lru = _LRU(2, on_evict=lambda k, v: evicted.append(k))
+    lru.put(("row", 0, 8), "a")
+    lru.put(("row", 1, 8), "b")
+    lru.get(("row", 0, 8))              # 0 now newer than 1
+    lru.put(("row", 2, 8), "c")
+    assert evicted == [("row", 1, 8)]
+    lru.put(("row", 0, 8), "a2")        # re-put refreshes, no eviction
+    lru.put(("row", 3, 8), "d")
+    assert evicted == [("row", 1, 8), ("row", 2, 8)]
+
+
+def test_sampled_view_pins_rows(task):
+    """An open SampledView must keep its clients' rows resident even
+    past capacity; close() releases them for eviction."""
+    store = InMemoryStore(task, capacity=2)
+    with store.sampled_view([0, 1, 2]) as view:
+        for c in (0, 1, 2):
+            view.get_data(c, store.num_examples(c))
+        # over capacity, but every entry is pinned -> nothing evicted
+        assert len(store._data) == 3
+    store.get_data(3, store.num_examples(3))   # unpinned now: shrinks
+    assert len(store._data) <= 2
+
+
+def test_nbytes_flat_in_client_count():
+    """THE tentpole claim: resident bytes do not grow with C."""
+    sizes = {}
+    for C in (64, 4096):
+        t = synthetic_scaling_task(num_clients=C, examples_per_client=16,
+                                   num_server=128)
+        r = make_runner("fedavg", t, execution="vectorized", num_clients=C,
+                        participation=4 / C, local_epochs=1, client_batch=8,
+                        client_store="spilling", client_cache_buckets=4)
+        st = r.run(rounds=2)
+        sizes[C] = st.store.nbytes()
+    assert sizes[4096] <= sizes[64] * 1.25, sizes
+
+
+def test_dense_memory_store_nbytes_grows_with_touched_controls(task):
+    """The oracle's accounting: nbytes reflects distinct control buffers
+    (shared zero templates count once)."""
+    store = InMemoryStore(task)
+    zeros = jax.tree.map(jnp.zeros_like, _model_like(task))
+    store.init_controls(zeros)
+    base = store.nbytes()
+    store.put_control(0, jax.tree.map(lambda x: x + 1.0, zeros))
+    assert store.nbytes() > base
+
+
+def _model_like(task):
+    return task.init_fn(jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------- deprecated dense view
+def test_dense_control_view_reads_and_warns(task):
+    store = InMemoryStore(task)
+    store.init_controls(_model_like(task))
+    view = DenseControlView(store)
+    assert len(view) == len(task.client_data)
+    with pytest.warns(DeprecationWarning, match="scaffold_c_clients"):
+        c0 = view[0]
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), c0, store.get_control(0))
+
+
+def test_dense_control_view_is_read_only(task):
+    store = InMemoryStore(task)
+    store.init_controls(_model_like(task))
+    with pytest.raises(TypeError, match="put_control"):
+        DenseControlView(store)[0] = _model_like(task)
+
+
+# -------------------------------------------------------- env-var override
+def test_env_var_override_warns(monkeypatch):
+    monkeypatch.setenv("REPRO_ENGINE_CACHE_BUCKETS", "7")
+    with pytest.warns(DeprecationWarning, match="REPRO_ENGINE_CACHE_BUCKETS"):
+        assert resolve_cache_buckets(64) == 7
+
+
+def test_configured_capacity_without_env(monkeypatch):
+    monkeypatch.delenv("REPRO_ENGINE_CACHE_BUCKETS", raising=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_cache_buckets(9) == 9
+        assert resolve_cache_buckets(None) == 64
+
+
+# ------------------------------------------------- validate() ValueError
+@pytest.mark.parametrize("bad", [
+    dict(K=0), dict(R=0),
+    dict(distill_target="sometimes"),
+    dict(ensemble_source="nowhere"),
+    dict(local_algo="adam"),
+    dict(execution="quantum"),
+    dict(client_sharding="psum"),
+    dict(kd_pipeline="v2"),
+    dict(kd_kernel="sparse"),
+    dict(kd_head_fusion=True, kd_kernel="dense"),
+    dict(teacher_cache_dtype="int8"),
+    dict(teacher_cache_dtype="bfloat16", kd_kernel="dense"),
+    dict(teacher_cache_dtype="bfloat16", kd_kernel="flash",
+         kd_pipeline="legacy"),
+    dict(overlap="sometimes"),
+    dict(overlap="async", kd_pipeline="legacy"),
+    dict(teacher_dtype="float16"),
+    dict(distill_target="main", ensemble_source="clients",
+         secure_aggregation=True),
+    dict(client_store="redis"),
+    dict(client_cache_buckets=0),
+    dict(client_store="memory", client_store_dir="/tmp/x"),
+])
+def test_validate_raises_value_error(bad):
+    with pytest.raises(ValueError, match="invalid FedConfig"):
+        FedConfig(**bad).validate()
+
+
+def test_validate_messages_are_actionable():
+    with pytest.raises(ValueError, match="flash vocab tiles"):
+        FedConfig(kd_head_fusion=True).validate()
+    with pytest.raises(ValueError, match="flash mean-logit cache"):
+        FedConfig(teacher_cache_dtype="bfloat16").validate()
+    with pytest.raises(ValueError, match="overlapped rounds"):
+        FedConfig(overlap="async", kd_pipeline="legacy").validate()
+
+
+def test_valid_configs_still_pass():
+    FedConfig().validate()
+    make_config("fedsdd").validate()
+    FedConfig(client_store="spilling", client_store_dir="/tmp/ok",
+              client_cache_buckets=1).validate()

@@ -94,7 +94,7 @@ def test_kd_cost_independent_of_clients(task):
 
 def test_secure_aggregation_runs_with_fedsdd_not_feddf(task):
     make_config("fedsdd", secure_aggregation=True).validate()
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="secure aggregation"):
         make_config("feddf", secure_aggregation=True).validate()
     r = make_runner("fedsdd", task, K=2, secure_aggregation=True,
                     **small(distill_steps=2))

@@ -445,5 +445,5 @@ def test_rounds_bf16_cache_within_bound(task):
 def test_config_validation():
     """teacher_cache_dtype without kd_kernel='flash' is a config error —
     the dense prob cache is f32-only."""
-    with pytest.raises(AssertionError, match="flash mean-logit cache"):
+    with pytest.raises(ValueError, match="flash mean-logit cache"):
         make_runner("fedsdd", None, teacher_cache_dtype="bfloat16", **small())

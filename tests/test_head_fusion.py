@@ -322,7 +322,7 @@ def test_pipeline_head_fusion_requires_flash():
 
 
 def test_config_head_fusion_requires_flash():
-    with pytest.raises(AssertionError, match="flash vocab tiles"):
+    with pytest.raises(ValueError, match="flash vocab tiles"):
         make_runner("fedsdd", None, kd_head_fusion=True)
 
 

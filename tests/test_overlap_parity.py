@@ -204,7 +204,7 @@ def test_overlap_resume_across_run_calls(task):
 
 
 def test_overlap_requires_fused_pipeline(task):
-    with pytest.raises(AssertionError, match="overlapped rounds"):
+    with pytest.raises(ValueError, match="overlapped rounds"):
         make_runner("fedsdd", task, overlap="async",
                     kd_pipeline="legacy", **small())
 

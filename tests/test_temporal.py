@@ -6,15 +6,20 @@ bank-specific pieces (stacked view, spill round-trip, wraparound
 bookkeeping) are covered below.
 """
 import os
+import sys
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.temporal import TemporalEnsemble
 from repro.distill import TeacherBank
 from repro.fedckpt.checkpointer import load_pytree
+
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    from repro.core.temporal import TemporalEnsemble
 
 
 def model(v):
@@ -66,6 +71,13 @@ def test_spill_to_disk(tmp_path):
 def test_temporal_ensemble_is_teacher_bank():
     """The compat alias and the bank are the same class."""
     assert TemporalEnsemble is TeacherBank
+
+
+def test_temporal_shim_warns_on_import():
+    """The compat module announces its own removal."""
+    sys.modules.pop("repro.core.temporal", None)
+    with pytest.warns(DeprecationWarning, match="repro.core.temporal"):
+        import repro.core.temporal  # noqa: F401
 
 
 def test_spill_dir_round_trip(tmp_path):
