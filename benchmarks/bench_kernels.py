@@ -74,4 +74,21 @@ def run(scale, csv: CSV) -> dict:
     bytes_ = 2 * 8 * 4096 * H * dh * 4
     csv.add("kern/flash_decode/S4096", us,
             f"tpu_roofline_us={bytes_ / spec.hbm_bandwidth * 1e6:.1f}")
+
+    # paged decode: same B=8, S=4096 working set, streamed through a
+    # shuffled block pool (serve-path layout) — roofline is identical to
+    # the contiguous row; the delta is the block-table indirection cost
+    import numpy as np
+    bsz, nbmax = 64, 4096 // 64
+    pk = kc.reshape(8 * nbmax, bsz, H, dh)
+    pv = vc.reshape(8 * nbmax, bsz, H, dh)
+    perm = np.random.default_rng(0).permutation(8 * nbmax)
+    inv = np.argsort(perm)
+    pk, pv = pk[perm], pv[perm]
+    bt = jnp.asarray(inv.reshape(8, nbmax), jnp.int32)
+    sl = jnp.full((8,), 4096, jnp.int32)
+    us = _time(jax.jit(lambda a, b, c, t, s: fa.paged_decode(a, b, c, t, s)),
+               q1, pk, pv, bt, sl)
+    csv.add("kern/paged_decode/S4096", us,
+            f"tpu_roofline_us={bytes_ / spec.hbm_bandwidth * 1e6:.1f}")
     return out

@@ -1,0 +1,191 @@
+"""Closed-loop serving traffic bench: continuous batching vs the static
+oracle (ROADMAP direction 3).
+
+A Poisson arrival-rate sweep drives the ``ContinuousEngine`` with
+ragged-length requests and reports per-rate p50/p99 latency, sustained
+tokens/s, and peak paged-pool utilization.  The same request set is then
+served through the static-batch oracle (``generate_static`` — fixed
+batches, every row decoded to the batch max), giving the gated claim row:
+
+  serve/claim_continuous_batching  pass ⇔
+    continuous tokens/s >= 1.0x static oracle at the top sweep rate
+    AND zero dropped requests (every request returns exactly its
+    requested token count)
+    AND paged decode parity vs contiguous flash_decode (rtol 1e-5,
+    fallback and forced-Pallas interpret)
+    AND paged pool bytes < static cache bytes at the same max_seq_len
+    (O(active tokens) vs O(batch · max_len))
+
+Ragged decode lengths are where continuous batching earns its keep: the
+static batch decodes max(max_new) steps for every row, while the engine
+evicts finished requests and admits queued ones into the freed slots.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CSV
+
+
+def paged_parity(csv: CSV, prefix: str = "serve") -> bool:
+    """Paged-vs-contiguous decode attention parity (both dispatch paths)."""
+    import os
+
+    from repro.kernels.flash_attention import ops as fa
+    from repro.models import attention as xla_attn
+
+    B, S, Hkv, G, dh, bs = 3, 48, 2, 2, 16, 8
+    H = Hkv * G
+    nbmax = S // bs
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, dh), jnp.float32)
+    lens = jnp.asarray([S, 17, 8], jnp.int32)   # aligned, ragged, boundary
+    ref = xla_attn.decode_attention(q, kc, vc, lens)
+
+    # shuffled pool: request b's block j lives at pool block perm[b, j]
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(np.arange(1, 1 + B * nbmax)).reshape(B, nbmax)
+    pool_k = jnp.zeros((1 + B * nbmax, bs, Hkv, dh), jnp.float32)
+    pool_v = jnp.zeros_like(pool_k)
+    for b in range(B):
+        for j in range(nbmax):
+            pool_k = pool_k.at[perm[b, j]].set(kc[b, j * bs:(j + 1) * bs])
+            pool_v = pool_v.at[perm[b, j]].set(vc[b, j * bs:(j + 1) * bs])
+    bt = jnp.asarray(perm, jnp.int32)
+
+    errs = {}
+    out = fa.paged_decode(q, pool_k, pool_v, bt, lens)
+    errs["fallback"] = float(jnp.max(jnp.abs(out - ref)))
+    os.environ["REPRO_FORCE_PALLAS"] = "1"
+    try:
+        out = fa.paged_decode(q, pool_k, pool_v, bt, lens)
+        errs["pallas"] = float(jnp.max(jnp.abs(out - ref)))
+    finally:
+        del os.environ["REPRO_FORCE_PALLAS"]
+    scale = float(jnp.max(jnp.abs(ref)))
+    ok = all(e <= 1e-5 * max(scale, 1.0) for e in errs.values())
+    csv.add(f"{prefix}/paged_parity", 0,
+            f"pass={ok} err_fallback={errs['fallback']:.2e} "
+            f"err_pallas={errs['pallas']:.2e}")
+    return ok
+
+
+def _make_requests(cfg, num_requests: int, prompt_len: int,
+                   new_lo: int, new_hi: int, seed: int = 0):
+    from repro.data.synthetic import make_model_batch
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    prompts = np.asarray(make_model_batch(cfg, num_requests, prompt_len,
+                                          seed=seed)["tokens"])
+    return [Request(rid=i, tokens=prompts[i],
+                    max_new_tokens=int(rng.integers(new_lo, new_hi + 1)))
+            for i in range(num_requests)]
+
+
+def _serve_static(model, params, requests, max_batch: int):
+    """Oracle: fixed batches in arrival order, each decoded to its batch
+    max — returns (useful_tokens, wall_s, per-request token lists)."""
+    from repro.serve import generate_static
+
+    toks_by_rid, useful = {}, 0
+    t0 = time.perf_counter()
+    for i in range(0, len(requests), max_batch):
+        chunk = requests[i:i + max_batch]
+        prompts = np.stack([r.tokens for r in chunk])
+        n = max(r.max_new_tokens for r in chunk)
+        out = np.asarray(generate_static(model, params, prompts, n))
+        for j, r in enumerate(chunk):
+            toks_by_rid[r.rid] = out[j, :r.max_new_tokens].tolist()
+            useful += r.max_new_tokens
+    return useful, time.perf_counter() - t0, toks_by_rid
+
+
+def run_serve_smoke(csv: CSV, prefix: str = "serve") -> None:
+    """The CI smoke sweep: tiny shapes, one arch, two arrival rates."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import ContinuousEngine, run_closed_loop
+    from repro.serve.paged_cache import pool_bytes
+
+    parity_ok = paged_parity(csv, prefix)
+
+    cfg = get_config("qwen2.5-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_batch, prompt_len, new_lo, new_hi = 8, 16, 1, 64
+    bs, chunk = 8, 2
+    max_seq_len = prompt_len + new_hi     # both paths size for this horizon
+    num_requests = 24
+    # pool sized to MEAN in-flight demand (plus slack), not
+    # batch x max_seq_len — admission control queues the overflow
+    mean_need = math.ceil((prompt_len + (new_lo + new_hi) / 2 + bs) / bs)
+    num_blocks = 1 + max_batch * mean_need + 4
+
+    requests = _make_requests(cfg, num_requests, prompt_len, new_lo, new_hi)
+    # warm both paths so the sweep measures serving, not jit compiles
+    warm = ContinuousEngine(model, params, max_batch=max_batch,
+                            num_blocks=num_blocks, block_size=bs,
+                            max_seq_len=max_seq_len, chunk_steps=chunk)
+    warm.run(requests)
+    _serve_static(model, params, requests, max_batch)
+
+    cont_toks, cont_tps = {}, 0.0
+    rng = np.random.default_rng(7)
+    for rate in (100.0, 1000.0):
+        engine = ContinuousEngine(model, params, max_batch=max_batch,
+                                  num_blocks=num_blocks, block_size=bs,
+                                  max_seq_len=max_seq_len, chunk_steps=chunk)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, num_requests))
+        t0 = time.perf_counter()
+        results = run_closed_loop(engine, requests, arrivals)
+        wall = time.perf_counter() - t0
+        lat = sorted(r.latency for r in results)
+        useful = sum(len(r.tokens) for r in results)
+        tps = useful / max(wall, 1e-9)
+        csv.add(f"{prefix}/traffic/rate{rate:g}", wall * 1e6,
+                f"tok_per_s={tps:.1f} p50_ms={lat[len(lat) // 2] * 1e3:.1f} "
+                f"p99_ms={lat[-1] * 1e3:.1f} "
+                f"pool_util_peak={engine.peak_utilization:.2f} "
+                f"steps={engine.steps}")
+        cont_tps = tps                     # claim compares the top rate
+        cont_toks = {r.rid: r.tokens for r in results}
+
+    useful, wall, static_toks = _serve_static(model, params, requests,
+                                              max_batch)
+    static_tps = useful / max(wall, 1e-9)
+    csv.add(f"{prefix}/static_oracle", wall * 1e6,
+            f"tok_per_s={static_tps:.1f}")
+
+    # O(active tokens) memory: the pool the sweep actually ran vs the
+    # static caches max_batch x max_seq_len would preallocate
+    pb = pool_bytes(model.init_paged_cache(num_blocks, bs))
+    static_b = sum(int(np.prod(s)) * jnp.dtype(d).itemsize
+                   for s, d in jax.tree.leaves(
+                       model.cache_shapes(max_batch, max_seq_len),
+                       is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                       and isinstance(x[0], tuple)))
+    csv.add(f"{prefix}/pool_bytes", 0,
+            f"paged={pb} static={static_b} ratio={static_b / pb:.1f}x")
+
+    dropped = sum(1 for r in requests
+                  if len(cont_toks.get(r.rid, [])) != r.max_new_tokens)
+    identical = all(cont_toks.get(r.rid) == static_toks[r.rid]
+                    for r in requests)
+    ok = (parity_ok and dropped == 0 and identical
+          and cont_tps >= 1.0 * static_tps and pb < static_b)
+    csv.add(f"{prefix}/claim_continuous_batching", 0,
+            f"pass={ok} cont_tok_per_s={cont_tps:.1f} "
+            f"static_tok_per_s={static_tps:.1f} dropped={dropped} "
+            f"tokens_identical={identical}")
+
+
+def run(scale, csv: CSV) -> None:
+    run_serve_smoke(csv)

@@ -60,6 +60,10 @@ def run_smoke(csv: CSV) -> None:
     from benchmarks.bench_scaling import store_memory
     store_memory(csv, client_counts=(256, 2048), sampled=4, reps=1,
                  prefix="smoke/store_memory")
+    # serving: paged-decode parity + closed-loop traffic vs static oracle
+    # (gated: >= 1.0x tokens/s, zero drops, O(active tokens) pool)
+    from benchmarks.bench_serve import run_serve_smoke
+    run_serve_smoke(csv)
     # the overlapped-executor measurement at its t3 operating point (~2
     # min): smaller configs give the min-over-window estimator too few
     # quiet windows on shared CI runners and the ratio row turns to noise

@@ -1,8 +1,10 @@
-"""Serve a model: prefill a batch of prompts then decode tokens.
+"""Serve a model: static batch, or continuous batching over a paged KV pool.
 
     PYTHONPATH=src python examples/serve_model.py --arch qwen2.5-14b
+    PYTHONPATH=src python examples/serve_model.py --arch qwen2.5-14b --continuous
 
-(Thin wrapper over the production driver; see src/repro/launch/serve.py.)
+(Thin wrapper over the production driver; see src/repro/launch/serve.py
+and the repro.serve package it drives.)
 """
 import os
 import sys

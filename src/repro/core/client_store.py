@@ -10,7 +10,7 @@ and data an explicit API with two implementations:
   * ``InMemoryStore`` — today's behavior, the parity oracle: dense
     control list, every shard reachable, a bounded LRU of device rows /
     bucket stacks (what used to be the engine's bolt-on ``data_cache``
-    dict capped by the ``REPRO_ENGINE_CACHE_BUCKETS`` env var).
+    dict).
   * ``SpillingStore`` — only *touched* clients are resident.  SCAFFOLD
     controls live in an LRU hot set whose evictions spill through
     ``fedckpt`` (one npz per client, ``load_pytree``-restorable across a
@@ -25,18 +25,13 @@ and data an explicit API with two implementations:
 
 Both engines (``core/fedsdd`` sequential + vectorized ops, the
 ``core/engine`` bucket/plan path) route all per-client access through
-``FedState.store``; ``FedState.scaffold_c_clients`` remains as a
-deprecated read-only dense view for one release.
-
-The LRU capacity is the ``FedConfig(client_cache_buckets=...)`` knob;
-the old ``REPRO_ENGINE_CACHE_BUCKETS`` env var still overrides it but
-warns (see ``resolve_cache_buckets``).
+``FedState.store``.  The LRU capacity is the
+``FedConfig(client_cache_buckets=...)`` knob.
 """
 from __future__ import annotations
 
 import os
 import tempfile
-import warnings
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -47,23 +42,11 @@ PyTree = Any
 
 DEFAULT_CACHE_BUCKETS = 64
 
-#: deprecated env override for FedConfig.client_cache_buckets
-_ENV_CACHE_BUCKETS = "REPRO_ENGINE_CACHE_BUCKETS"
-
 
 def resolve_cache_buckets(configured: Optional[int] = None) -> int:
-    """The store's LRU capacity: ``FedConfig(client_cache_buckets=...)``
-    is the first-class knob; the legacy ``REPRO_ENGINE_CACHE_BUCKETS``
-    env var (the PR-3 bolt-on it replaces) still wins when set, with a
-    deprecation warning."""
-    env = os.environ.get(_ENV_CACHE_BUCKETS)
-    if env is not None:
-        warnings.warn(
-            f"{_ENV_CACHE_BUCKETS} is deprecated; set "
-            "FedConfig(client_cache_buckets=...) instead (the env var "
-            "still overrides it, for one release)",
-            DeprecationWarning, stacklevel=2)
-        return int(env)
+    """The store's LRU capacity: the ``FedConfig(client_cache_buckets=...)``
+    knob, defaulted.  (The legacy ``REPRO_ENGINE_CACHE_BUCKETS`` env
+    override shipped its scheduled removal.)"""
     return DEFAULT_CACHE_BUCKETS if configured is None else int(configured)
 
 
@@ -435,42 +418,6 @@ class SpillingStore(ClientStore):
         if self._ctrl_sum is not None:
             total += _tree_nbytes(self._ctrl_sum)
         return total
-
-
-class DenseControlView:
-    """``FedState.scaffold_c_clients`` as it used to look: a dense
-    read-only sequence over ALL clients' controls.  Deprecated — reads
-    delegate to the store (O(C) if you walk all of it, which is the
-    point of deprecating it); writes must go through
-    ``store.put_control``."""
-
-    def __init__(self, store: ClientStore):
-        self._store = store
-        self._warned = False
-
-    def _warn(self) -> None:
-        if not self._warned:
-            self._warned = True
-            warnings.warn(
-                "FedState.scaffold_c_clients is a deprecated dense view; "
-                "use state.store.get_control/put_control (removal next "
-                "release)", DeprecationWarning, stacklevel=3)
-
-    def __len__(self) -> int:
-        return self._store.num_clients
-
-    def __getitem__(self, cid: int) -> PyTree:
-        self._warn()
-        return self._store.get_control(int(cid))
-
-    def __iter__(self):
-        self._warn()
-        return (self._store.get_control(c) for c in range(len(self)))
-
-    def __setitem__(self, cid, value):
-        raise TypeError(
-            "FedState.scaffold_c_clients is read-only; write through "
-            "state.store.put_control(cid, c)")
 
 
 def make_client_store(cfg, task) -> ClientStore:

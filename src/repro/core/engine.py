@@ -104,7 +104,6 @@ class ClientEntry:
 
 # The per-client device-row / bucket-stack LRU now lives in
 # ``core.client_store.ClientStore`` — the engine's old bolt-on cache
-# (``MAX_CACHED_BUCKETS`` + the ``REPRO_ENGINE_CACHE_BUCKETS`` env var)
 # promoted to an API with a first-class ``FedConfig(client_cache_buckets)``
 # knob.  Plan building takes a store; ``None`` builds through an
 # ephemeral in-memory store (no cross-call caching — the old

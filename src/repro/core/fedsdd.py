@@ -30,9 +30,7 @@ from repro.core import distillation as dist
 from repro.core import engine as vec_engine
 from repro.core import round_plan
 from repro.core.aggregation import fedavg_aggregate, secure_aggregate
-from repro.core.client_store import (
-    ClientStore, DenseControlView, make_client_store,
-)
+from repro.core.client_store import ClientStore, make_client_store
 from repro.core.grouping import assign_groups, sample_clients
 from repro.distill import KDPipeline, TeacherBank
 from repro.optim.optimizers import (
@@ -99,8 +97,7 @@ class FedConfig:
     client_store: str = "memory"    # memory (oracle) | spilling
     client_store_dir: Optional[str] = None  # spill directory (spilling only)
     # LRU capacity of the store's device tier (rows + bucket stacks +
-    # hot controls) — was the REPRO_ENGINE_CACHE_BUCKETS env var, which
-    # still overrides this knob but is deprecated
+    # hot controls)
     client_cache_buckets: int = 64
     # misc
     secure_aggregation: bool = False
@@ -223,8 +220,6 @@ class FedState:
     # access (shards, padded device rows, SCAFFOLD controls) goes here
     store: Optional[ClientStore] = None
     scaffold_c_global: Optional[PyTree] = None
-    # deprecated dense read-only view over store controls (one release)
-    scaffold_c_clients: Optional[Sequence[PyTree]] = None
     history: list[dict] = field(default_factory=list)
     # overlap modes: the deferred round-t KD job (runs during round t+1's
     # k>0 local training; drained by FederatedRunner.finalize), and the
@@ -262,7 +257,6 @@ class FederatedRunner:
         if cfg.local_algo == "scaffold":
             state.store.init_controls(models[0])
             state.scaffold_c_global = tree_zeros_like(models[0])
-            state.scaffold_c_clients = DenseControlView(state.store)
         return state
 
     # ---- local training --------------------------------------------------
@@ -296,7 +290,6 @@ class FederatedRunner:
             state.store = make_client_store(self.cfg, self.task)
             if self.cfg.local_algo == "scaffold":
                 state.store.init_controls(state.global_models[0])
-                state.scaffold_c_clients = DenseControlView(state.store)
         return state.store
 
     def _local_train_scheduled(self, params: PyTree, client_id: int,

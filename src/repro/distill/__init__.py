@@ -3,8 +3,7 @@
 Two pieces, both built for device residency:
 
   * ``TeacherBank`` — the K·R temporal-ensemble checkpoints as ONE stacked
-    pytree ring buffer on device (``teacher_bank``), replacing the old
-    host-list ``core.temporal.TemporalEnsemble`` (which now aliases it).
+    pytree ring buffer on device (``teacher_bank``).
   * ``KDPipeline`` — the fully-jitted KD phase (``pipeline``): the
     round's teacher cache precomputed once (f32 probs for
     ``kd_kernel="dense"``, the compressed bf16 mean-logit + lse-residual

@@ -1,8 +1,8 @@
 """Device-resident teacher bank (paper §3.1.3, Eq. 5).
 
 The teacher ensemble is the checkpoints of all K global models over the
-last R rounds.  The old ``core.temporal.TemporalEnsemble`` kept them as
-host-side pytree lists that were re-stacked and re-uploaded every round;
+last R rounds.  Host-side pytree lists would be re-stacked and
+re-uploaded every round;
 here the whole bank is ONE stacked pytree held on device (leaves
 ``(R, K, ...)``) and ``push`` is an in-place ``dynamic_update_index_in_dim``
 with the old buffer donated — no host round-trips, no re-stacking, and the

@@ -4,7 +4,7 @@ Arrays are flattened with stable '/'-joined key paths into one ``.npz``
 per step; structure round-trips exactly (dtypes included).  ``Checkpointer``
 adds step management + retention, and is what the temporal-ensembling ring
 persists through when checkpoints must survive the process
-(``core/temporal.py`` keeps the hot ring in memory).
+(``distill.TeacherBank`` keeps the hot ring on device).
 """
 from __future__ import annotations
 

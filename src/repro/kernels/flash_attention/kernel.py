@@ -174,3 +174,91 @@ def flash_decode(q, k, v, cache_len, *, kb: int = 512, interpret: bool = True):
         ],
         interpret=interpret,
     )(jnp.reshape(cache_len, (1,)).astype(jnp.int32), q, k, v)
+
+
+# ---------------------------------------------------------------------
+# paged decode (block-table indirection over a shared KV pool)
+# ---------------------------------------------------------------------
+def _paged_decode_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, nbmax: int, bs: int,
+                         window: int, scale: float):
+    """One (request, kv-head) pair per leading grid slot; the trailing axis
+    walks that request's block table.  ``bt_ref``/``sl_ref`` are the
+    scalar-prefetch block table (B, nbmax) and sequence lengths (B,) —
+    the K/V BlockSpec index_maps consult ``bt_ref`` so each grid step DMAs
+    exactly the pool block the request owns, never the whole pool."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sl = sl_ref[b]
+
+    @pl.when(j * bs < sl)                     # blocks past the tail: no-ops
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (G, bs)
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        ok = pos < sl
+        if window > 0:
+            ok = jnp.logical_and(ok, pos >= sl - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(j == nbmax - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q, k_pool, v_pool, block_tables, seq_lens, *,
+                       window: int = 0, interpret: bool = True):
+    """q (B, Hkv, G, dh); k/v pools (nb, bs, Hkv, dh); block_tables
+    (B, nbmax) int32 pool-block ids; seq_lens (B,) int32 valid lengths.
+
+    Streams each request's KV through its block table with the same
+    online-logsumexp state as ``flash_decode`` — the pool is never
+    gathered into a contiguous per-request cache.  Rows with
+    ``seq_lens == 0`` (inactive slots) produce zeros.
+    """
+    B, Hkv, G, dh = q.shape
+    nb, bs, _, _ = k_pool.shape
+    _, nbmax = block_tables.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nbmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, j, bt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda b, h, j, bt, sl: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda b, h, j, bt, sl: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh),
+                               lambda b, h, j, bt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, nbmax=nbmax, bs=bs,
+                          window=window, scale=dh ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q, k_pool, v_pool)

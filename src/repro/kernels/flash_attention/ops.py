@@ -81,3 +81,34 @@ def flash_decode(q1, k_cache, v_cache, cache_len):
     vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
     of = kernel.flash_decode(qf, kf, vf, cache_len, interpret=_interpret())
     return of.reshape(B, 1, H, dh)
+
+
+def paged_decode(q1, k_pool, v_pool, block_tables, seq_lens, *,
+                 window: int = 0):
+    """Decode attention through a paged KV pool.
+
+    q1 (B,1,H,dh); pools (nb,bs,Hkv,dh) — ONE pool shared by all requests;
+    block_tables (B,nbmax) int32 maps request-local block j to pool block
+    ``block_tables[b, j]`` (token t of request b lives at pool slot
+    ``[block_tables[b, t//bs], t%bs]``); seq_lens (B,) int32 valid lengths
+    (0 = inactive slot, output row is garbage and must be masked by the
+    caller).  Returns (B,1,H,dh).
+
+    TPU/forced-Pallas: the paged split-K kernel streams pool blocks via
+    the scalar-prefetched block table.  Fallback: gather the table into a
+    contiguous per-request view and run the chunked-XLA decode — same
+    math, parity-pinned in tests/test_serve.py.
+    """
+    B, _, H, dh = q1.shape
+    nb, bs, Hkv, _ = k_pool.shape
+    G = H // Hkv
+    if _use_pallas():
+        qf = q1.reshape(B, Hkv, G, dh)
+        of = kernel.paged_flash_decode(qf, k_pool, v_pool, block_tables,
+                                       seq_lens, window=window,
+                                       interpret=_interpret())
+        return of.reshape(B, 1, H, dh)
+    nbmax = block_tables.shape[1]
+    kg = k_pool[block_tables].reshape(B, nbmax * bs, Hkv, dh)
+    vg = v_pool[block_tables].reshape(B, nbmax * bs, Hkv, dh)
+    return xla_attn.decode_attention(q1, kg, vg, seq_lens, window=window)

@@ -91,8 +91,7 @@ def main() -> None:
                          "spilled controls across restarts)")
     ap.add_argument("--client-cache-buckets", type=int, default=64,
                     help="LRU capacity of the store's device tier (rows + "
-                         "bucket stacks + hot controls); replaces the "
-                         "deprecated REPRO_ENGINE_CACHE_BUCKETS env var")
+                         "bucket stacks + hot controls)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--out", default=None, help="write history JSON here")

@@ -177,10 +177,14 @@ def sliding_attention(q, k, v, *, window: int, q_block: int = 512):
     return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
 
 
-def decode_attention(q1, k_cache, v_cache, cache_len=None):
+def decode_attention(q1, k_cache, v_cache, cache_len=None, *, window: int = 0):
     """One-token attention.  q1 (B,1,H,dh); caches (B,S,Hkv,dh).
 
-    ``cache_len``: number of valid cache entries (scalar); None = all.
+    ``cache_len``: number of valid cache entries — a scalar, or a (B,)
+    vector for ragged batches (the paged serving path); None = all.
+    ``window``>0 additionally masks keys older than the last ``window``
+    positions (linear-layout sliding window; the ring-buffer decode in
+    ``gqa_decode`` handles window by eviction instead).
     """
     B, _, H, dh = q1.shape
     _, S, Hkv, _ = k_cache.shape
@@ -189,8 +193,13 @@ def decode_attention(q1, k_cache, v_cache, cache_len=None):
     scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
                         preferred_element_type=jnp.float32)
     if cache_len is not None:
-        valid = jnp.arange(S) < cache_len
-        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        cl = jnp.asarray(cache_len)
+        cl = cl[:, None] if cl.ndim == 1 else cl[None, None]
+        pos = jnp.arange(S)[None, :]
+        valid = pos < cl
+        if window > 0:
+            valid &= pos >= cl - window
+        scores = jnp.where(valid[:, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(q1.dtype), v_cache)
     return out.reshape(B, 1, H, dh)
@@ -249,6 +258,46 @@ def gqa_decode(p, x1, cache, cfg, pos):
     out = decode_attention(q, k_cache, v_cache,
                            cache_len=jnp.minimum(pos + 1, S))
     return out.reshape(B, 1, -1) @ p["wo"].astype(x1.dtype), {"k": k_cache, "v": v_cache}
+
+
+def gqa_paged_decode(p, x1, cache, cfg, pos_info):
+    """Paged-pool GQA decode.  x1 (B,1,D); cache {'k','v'} leaves are
+    (nb, bs, Hkv, dh) block POOLS shared by every in-flight request —
+    token t of request b lives at pool slot ``[bt[b, t//bs], t % bs]``.
+
+    ``pos_info = (block_tables (B, nbmax) int32, seq_lens (B,) int32)``:
+    per-request absolute positions replace ``gqa_decode``'s scalar pos, so
+    ragged requests decode in ONE batch.  The new token's K/V is scattered
+    at position ``seq_lens[b]``; inactive slots (seq_len 0, all-null block
+    table) scatter into the reserved null block 0 and read garbage — the
+    serve engine masks their logits.  Sliding-window configs mask by
+    position (the pool is linear, not a ring).
+    """
+    bt, sl = pos_info
+    B = x1.shape[0]
+    q, k, v = _project_qkv(p, x1, cfg)
+    abs_pos = sl[:, None]                                  # (B, 1)
+    q = apply_rope(q, abs_pos, cfg.rope_theta)
+    k = apply_rope(k, abs_pos, cfg.rope_theta)
+    bs = cache["k"].shape[1]
+    blk = jnp.take_along_axis(bt, (sl // bs)[:, None].astype(bt.dtype),
+                              axis=1)[:, 0]
+    off = sl % bs
+    k_pool = cache["k"].at[blk, off].set(k[:, 0])
+    v_pool = cache["v"].at[blk, off].set(v[:, 0])
+    window = cfg.sliding_window if cfg.attn_variant == "sliding" else 0
+    from repro.kernels.flash_attention import ops as flash_ops
+    out = flash_ops.paged_decode(q, k_pool, v_pool, bt, sl + 1,
+                                 window=window)
+    return (out.reshape(B, 1, -1) @ p["wo"].astype(x1.dtype),
+            {"k": k_pool, "v": v_pool})
+
+
+def gqa_paged_cache_shape(cfg, num_blocks: int, block_size: int):
+    return {
+        "k": (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim),
+        "v": (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim),
+    }
 
 
 def gqa_cache_shape(cfg, batch: int, seq_len: int):

@@ -113,8 +113,15 @@ def apply_block(p, x, cfg: ModelConfig, kind: BlockKind, *,
     h = apply_norm(p["norm1"], x, cfg)
     new_cache = cache
     if kind.mixer in ("gqa", "mla"):
-        if mode == "decode":
-            fwd = attn.mla_decode if kind.mixer == "mla" else attn.gqa_decode
+        if mode in ("decode", "paged"):
+            if mode == "paged":
+                # paged_decode_step validates the schedule up front, so a
+                # non-GQA mixer here is a programming error, not user error
+                assert kind.mixer == "gqa", kind.mixer
+                fwd = attn.gqa_paged_decode
+            else:
+                fwd = (attn.mla_decode if kind.mixer == "mla"
+                       else attn.gqa_decode)
             a, new_cache = fwd(p["attn"], h, cache, cfg, pos)
         else:
             fwd = attn.mla_forward if kind.mixer == "mla" else attn.gqa_forward
@@ -345,7 +352,7 @@ class Model:
             else:
                 (x, aux_total), new_blocks = jax.lax.scan(body, (x, aux_total), xs)
         out_caches = None
-        if mode in ("prefill", "decode"):
+        if mode in ("prefill", "decode", "paged"):
             out_caches = {"prefix": new_prefix, "blocks": new_blocks}
         return x, out_caches, aux_total
 
@@ -373,11 +380,39 @@ class Model:
             loss = loss + cfg.moe.router_aux_coef * aux / max(1, sum(cfg.moe_layer_flags()))
         return loss, {"ce": loss, "moe_aux": aux}
 
-    def prefill(self, params, batch):
-        """Returns (last-token logits (B,V), caches)."""
+    def prefill(self, params, batch, *, last=None):
+        """Returns (last-token logits (B,V), caches).
+
+        ``last`` (B,) int32 — per-request index of the true final prompt
+        token, for right-padded ragged batches (the serve path pads
+        prompts to a block-size multiple so prefill shapes stay static).
+        Default reads position S-1 for every row, the unpadded case.
+        """
         x = self._embed_in(params, batch)
         x, caches, _ = self._stack_forward(params, x, mode="prefill")
-        return self._logits_out(params, x[:, -1:])[:, 0], caches
+        if last is None:
+            x_last = x[:, -1:]
+        else:
+            x_last = jnp.take_along_axis(
+                x, jnp.asarray(last)[:, None, None], axis=1)
+        return self._logits_out(params, x_last)[:, 0], caches
+
+    def paged_decode_step(self, params, tokens, caches, block_tables,
+                          seq_lens):
+        """ONE token against a paged pool shared across requests.
+
+        tokens (B,1) int32; block_tables (B,nbmax) int32; seq_lens (B,)
+        int32 tokens already in the cache (0 = inactive slot; its output
+        row is garbage and the new k/v land in the reserved null block).
+        -> (logits (B,V), caches) with the new token scattered at
+        ``[block_tables[b, seq_lens[b]//bs], seq_lens[b]%bs]``.
+        """
+        batch = {"tokens": tokens}
+        x = self._embed_in(params, batch)
+        x, caches, _ = self._stack_forward(
+            params, x, mode="paged", caches=caches,
+            pos=(block_tables, seq_lens))
+        return self._logits_out(params, x)[:, 0], caches
 
     def decode_step(self, params, tokens, caches, pos):
         """tokens (B,1) int32, pos scalar int32.  -> (logits (B,V), caches)."""
@@ -410,6 +445,37 @@ class Model:
 
     def init_cache(self, batch: int, seq_len: int):
         shapes = self.cache_shapes(batch, seq_len)
+        return jax.tree.map(lambda sd: jnp.zeros(sd[0], sd[1]), shapes,
+                            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                            and isinstance(x[0], tuple))
+
+    def paged_cache_shapes(self, num_blocks: int, block_size: int):
+        """Shape pytree for ONE paged pool shared by all in-flight
+        requests: every layer's k/v lives in ``(num_blocks, block_size,
+        Hkv, dh)`` blocks addressed through per-request block tables, so
+        cache memory is O(pool) regardless of batch·max_len.  Paged
+        serving is attention-only: MLA latent caches and SSM recurrent
+        states have no sequence axis to page, so mixed schedules raise.
+        """
+        cfg = self.cfg
+        bad = {k.mixer for k in self.schedule if k.mixer != "gqa"}
+        if bad:
+            raise ValueError(
+                f"paged serving supports all-GQA schedules only, got "
+                f"mixer(s) {sorted(bad)} — use the contiguous static path")
+        q, _ = self.prefix_period
+        shape = attn.gqa_paged_cache_shape(cfg, num_blocks, block_size)
+        prefix = [{k: (s, cfg.cdtype) for k, s in shape.items()}
+                  for _ in range(q)]
+        blocks = None
+        if self.n_super:
+            blocks = {f"b{j}": {k: ((self.n_super,) + s, cfg.cdtype)
+                                for k, s in shape.items()}
+                      for j in range(len(self.superblock))}
+        return {"prefix": prefix, "blocks": blocks}
+
+    def init_paged_cache(self, num_blocks: int, block_size: int):
+        shapes = self.paged_cache_shapes(num_blocks, block_size)
         return jax.tree.map(lambda sd: jnp.zeros(sd[0], sd[1]), shapes,
                             is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
                             and isinstance(x[0], tuple))

@@ -1,0 +1,25 @@
+"""Load-shaped serving for the main global model (ROADMAP direction 3).
+
+FedSDD's deployable artifact is ONE model — the KD-enhanced main global
+model — so the serving path is a single-model decoder loop, not an
+ensemble.  This package turns the old fixed-batch synchronous loop into a
+continuous-batching engine over a paged KV cache:
+
+  paged_cache  block allocator + pool views + prefill→pool scatter
+  engine       ContinuousEngine: queue, admission, prefill/decode split
+  static       static-batch oracle (prefill + one lax.scan decode)
+
+``launch/serve.py`` is the CLI over this package; ``benchmarks/
+bench_serve.py`` drives the closed-loop Poisson traffic sweep.
+"""
+from repro.serve.engine import (ContinuousEngine, Request, RequestResult,
+                                run_closed_loop)
+from repro.serve.paged_cache import (BlockAllocator, blocks_needed,
+                                     pool_bytes, scatter_prefill)
+from repro.serve.static import generate_static
+
+__all__ = [
+    "BlockAllocator", "ContinuousEngine", "Request", "RequestResult",
+    "blocks_needed", "generate_static", "pool_bytes", "run_closed_loop",
+    "scatter_prefill",
+]

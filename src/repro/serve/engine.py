@@ -1,0 +1,326 @@
+"""Continuous-batching scheduler over the paged KV pool.
+
+The engine keeps a fixed number of batch slots (``max_batch``) and ONE
+jitted decode program over the static pool — slot occupancy changes by
+editing the (host-side) block tables, never by retracing.  Each
+``step()``:
+
+  1. **Admission**: FIFO queue head is admitted while a slot, its
+     worst-case block reservation (``blocks_needed``), and the token
+     budget are all available.  Admission runs the request's prefill —
+     a jitted prefill+scatter program over the block-aligned padded
+     prompt (one trace per padded length) — which also produces the
+     request's first greedy token, so it joins the in-flight decode
+     batch at the very next step.
+  2. **Decode**: one ``paged_decode_step`` for every slot.  Inactive
+     slots carry ``seq_len == 0`` and an all-null block table, so their
+     lanes compute garbage that scatters into the null block and is
+     never read.
+  3. **Eviction**: finished requests free their blocks and zero their
+     slot; the slot is reusable at the next step's admission.
+
+Reserving the full worst-case block set at admission means a request can
+never stall mid-decode waiting for pages — the zero-dropped-requests
+invariant the traffic bench gates on, with no preemption machinery.
+
+The decode loop never blocks on the device: greedy argmax and the
+seq_len advance happen inside the jitted program, the sampled token
+feeds the next step as a device array, and per-step token vectors are
+only materialized to host memory when a request finishes (eviction
+gathers its lane from the buffered step outputs).  Scheduling decisions
+need no token values — lifetimes are fixed counters at admission — so
+the host just dispatches; steps pipeline behind JAX's async dispatch.
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import paged_cache as pc
+
+
+@lru_cache(maxsize=8)
+def _programs(model):
+    """Jitted prefill+scatter and decode programs, shared per model so
+    every engine instance (and repeat bench runs) reuses the compile
+    cache.  jit re-specializes per input shape, so engines with different
+    max_batch/nbmax coexist under the same wrapped callables."""
+
+    def _prefill(params, toks, last, pool, block_ids):
+        logits, ctg = model.prefill(params, {"tokens": toks}, last=last)
+        pool = pc.scatter_prefill(pool, ctg, block_ids)
+        return jnp.argmax(logits, -1).astype(jnp.int32), pool
+
+    def _decode(params, tok, pool, bt, sl, rem, k: int):
+        # k micro-steps per dispatch (multi-step scheduling): a lane
+        # whose token budget (rem) runs out mid-chunk freezes — its
+        # seq_len stops advancing, so its repeated scatter lands on the
+        # one slot past its generated text and its garbage logits are
+        # discarded by the host.  Live lanes are untouched: they only
+        # ever read positions < their own seq_len.
+        def micro(carry, _):
+            tok, pool, sl, rem = carry
+            logits, pool = model.paged_decode_step(params, tok[:, None],
+                                                   pool, bt, sl)
+            nt = jnp.argmax(logits, -1).astype(jnp.int32)
+            adv = (rem > 0).astype(jnp.int32)
+            return (nt, pool, sl + adv, rem - adv), nt
+
+        (tok, pool, sl, rem), ys = jax.lax.scan(
+            micro, (tok, pool, sl, rem), None, length=k)
+        return tok, pool, sl, rem, ys
+
+    return (jax.jit(_prefill, donate_argnums=(3,)),
+            jax.jit(_decode, donate_argnums=(2,), static_argnums=(6,)))
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # (L,) int32 prompt
+    max_new_tokens: int
+    t_submit: float = 0.0       # stamped by ContinuousEngine.submit
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: list[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0        # first generated token (end of prefill)
+    t_finish: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.t_submit
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit
+
+
+class _Slot:
+    __slots__ = ("req", "result", "blocks", "remaining", "start_step")
+
+    def __init__(self, req, result, blocks, remaining, start_step):
+        self.req = req
+        self.result = result
+        self.blocks = blocks
+        self.remaining = remaining
+        self.start_step = start_step    # index into the step-token buffer
+
+
+class ContinuousEngine:
+    """Continuous-batching greedy decoder for one (all-GQA) model.
+
+    ``token_budget`` caps the sum of reserved tokens (blocks × block
+    size) across in-flight requests — admission control independent of
+    pool size, defaulting to the whole pool.
+    """
+
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 num_blocks: int = 256, block_size: int = 16,
+                 max_seq_len: int = 512, token_budget: int | None = None,
+                 chunk_steps: int = 8):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.max_seq_len = max_seq_len
+        self.nbmax = math.ceil(max_seq_len / block_size)
+        self.token_budget = (token_budget if token_budget is not None
+                             else (num_blocks - 1) * block_size)
+        # micro-steps per decode dispatch; the scheduler (admission,
+        # eviction) runs at chunk boundaries.  ALWAYS chunk_steps deep so
+        # the decode program never retraces — a lane finishing mid-chunk
+        # freezes via its rem counter instead of shrinking the chunk
+        self.chunk_steps = chunk_steps
+        # device state: pool + decode loop carries, donated through the
+        # jitted step; the host never reads them mid-flight
+        self.pool = model.init_paged_cache(num_blocks, block_size)
+        self._cur_tok = jnp.zeros((max_batch,), jnp.int32)
+        self._sl_dev = jnp.zeros((max_batch,), jnp.int32)
+        self._bt_dev = jnp.zeros((max_batch, self.nbmax), jnp.int32)
+        self._rem_dev = jnp.zeros((max_batch,), jnp.int32)
+        self._dirty = False          # host tables changed since last push
+        self._step_toks: list = []   # per-chunk (k, B) token arrays,
+        #                              device until eviction materializes
+        # host state
+        self.alloc = pc.BlockAllocator(num_blocks)
+        self.block_tables = np.zeros((max_batch, self.nbmax), np.int32)
+        self.seq_lens = np.zeros((max_batch,), np.int32)
+        self.slots: list[_Slot | None] = [None] * max_batch
+        self.queue: deque[Request] = deque()
+        self.reserved_tokens = 0
+        self.steps = 0
+        self.peak_utilization = 0.0
+        self._prefill, self._decode = _programs(model)
+
+    # ---- queue ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        L = len(req.tokens)
+        need = pc.blocks_needed(L, req.max_new_tokens, self.block_size)
+        if need > self.nbmax or L + req.max_new_tokens > self.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: {L}+{req.max_new_tokens} tokens exceeds "
+                f"max_seq_len={self.max_seq_len}")
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return self.num_active == 0 and not self.queue
+
+    @property
+    def pool_utilization(self) -> float:
+        return self.alloc.utilization
+
+    # ---- admission -----------------------------------------------------
+    def _can_admit(self, req: Request) -> tuple[int, list[int]] | None:
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return None
+        need = pc.blocks_needed(len(req.tokens), req.max_new_tokens,
+                                self.block_size)
+        if self.reserved_tokens + need * self.block_size > self.token_budget:
+            return None
+        blocks = self.alloc.alloc(need)
+        if blocks is None:
+            return None
+        return slot, blocks
+
+    def _admit(self, req: Request, slot: int, blocks: list[int]) -> None:
+        L = len(req.tokens)
+        bs = self.block_size
+        lpad = math.ceil(L / bs) * bs
+        toks = np.zeros((1, lpad), np.int32)
+        toks[0, :L] = req.tokens
+        result = RequestResult(rid=req.rid, prompt_len=L,
+                               t_submit=req.t_submit,
+                               t_admit=time.perf_counter())
+        tok, self.pool = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray([L - 1]),
+            self.pool, jnp.asarray(blocks[:lpad // bs], jnp.int32))
+        first = int(tok[0])     # the one per-request sync: prefill result
+        result.t_first = time.perf_counter()
+        result.tokens.append(first)
+        self.block_tables[slot] = pc.build_table(blocks, self.nbmax)
+        self.seq_lens[slot] = L
+        self._cur_tok = self._cur_tok.at[slot].set(first)
+        self._dirty = True
+        self.reserved_tokens += len(blocks) * bs
+        self.slots[slot] = _Slot(req, result, blocks,
+                                 remaining=req.max_new_tokens - 1,
+                                 start_step=len(self._step_toks))
+
+    def _lane_tokens(self, slot: int, start: int, n: int) -> list[int]:
+        """Materialize one lane's ``n`` tokens from the buffered chunk
+        outputs (converts each touched (k, B) chunk to numpy once, in
+        place).  Rows past the lane's budget in its final chunk are the
+        frozen-lane garbage and are not taken."""
+        out, t = [], start
+        while len(out) < n:
+            if not isinstance(self._step_toks[t], np.ndarray):
+                self._step_toks[t] = np.asarray(self._step_toks[t])
+            take = min(len(self._step_toks[t]), n - len(out))
+            out.extend(int(x) for x in self._step_toks[t][:take, slot])
+            t += 1
+        return out
+
+    def _evict(self, slot: int) -> RequestResult:
+        s = self.slots[slot]
+        s.result.tokens.extend(
+            self._lane_tokens(slot, s.start_step,
+                              s.req.max_new_tokens - 1))
+        s.result.t_finish = time.perf_counter()
+        self.alloc.free(s.blocks)
+        self.reserved_tokens -= len(s.blocks) * self.block_size
+        self.block_tables[slot] = 0
+        self.seq_lens[slot] = 0
+        self.slots[slot] = None
+        self._dirty = True
+        return s.result
+
+    # ---- the step ------------------------------------------------------
+    def step(self) -> list[RequestResult]:
+        """Admit what fits, decode one token for every active slot, evict
+        what finished.  Returns the results finished this step."""
+        finished = []
+        while self.queue:
+            grant = self._can_admit(self.queue[0])
+            if grant is None:
+                break
+            req = self.queue.popleft()
+            self._admit(req, *grant)
+            self.peak_utilization = max(self.peak_utilization,
+                                        self.alloc.utilization)
+            if self.slots[grant[0]].remaining == 0:     # max_new_tokens == 1
+                finished.append(self._evict(grant[0]))
+        if self.num_active:
+            if self._dirty:
+                self._bt_dev = jnp.asarray(self.block_tables)
+                self._sl_dev = jnp.asarray(self.seq_lens)
+                self._rem_dev = jnp.asarray(np.asarray(
+                    [0 if s is None else s.remaining for s in self.slots],
+                    np.int32))
+                self._dirty = False
+            k = self.chunk_steps
+            (self._cur_tok, self.pool, self._sl_dev, self._rem_dev,
+             ys) = self._decode(self.params, self._cur_tok, self.pool,
+                                self._bt_dev, self._sl_dev, self._rem_dev, k)
+            self._step_toks.append(ys)
+            for i, s in enumerate(self.slots):
+                if s is None:
+                    continue
+                used = min(s.remaining, k)   # host mirror of the device adv
+                self.seq_lens[i] += used
+                s.remaining -= used
+                if s.remaining == 0:
+                    finished.append(self._evict(i))
+            self.steps += k
+        return finished
+
+    def run(self, requests) -> list[RequestResult]:
+        """Submit everything up front and step until drained (the
+        deterministic fixed-trace mode the scheduler tests pin)."""
+        for r in requests:
+            self.submit(r)
+        out = []
+        while not self.idle:
+            out.extend(self.step())
+        return out
+
+
+def run_closed_loop(engine: ContinuousEngine, requests, arrivals
+                    ) -> list[RequestResult]:
+    """Closed-loop traffic driver: ``arrivals[i]`` seconds after start,
+    request i becomes visible.  The engine steps continuously; latency is
+    measured submit→finish, so queueing delay under load is included."""
+    assert len(arrivals) == len(requests)
+    order = np.argsort(arrivals, kind="stable")
+    t0 = time.perf_counter()
+    results, i = [], 0
+    while len(results) < len(requests):
+        now = time.perf_counter() - t0
+        while i < len(order) and arrivals[order[i]] <= now:
+            engine.submit(requests[order[i]])
+            i += 1
+        if engine.idle:
+            time.sleep(min(1e-3, max(0.0, arrivals[order[i]] - now)))
+            continue
+        results.extend(engine.step())
+    return results

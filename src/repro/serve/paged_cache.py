@@ -1,0 +1,113 @@
+"""Paged KV cache: one preallocated block pool + per-request block tables.
+
+Every attention layer's K/V lives in fixed-size blocks inside ONE pool of
+shape ``(num_blocks, block_size, Hkv, dh)`` shared by all in-flight
+requests; a request owns an ordered list of pool blocks and addresses
+token ``t`` at pool slot ``[table[t // bs], t % bs]``.  Cache memory is
+O(pool) — sized to the tokens actually in flight — instead of the static
+path's O(batch · max_len), and ragged-length requests pack into one
+decode batch with no copying on admit or evict.
+
+Block 0 is reserved as the null block: inactive batch slots keep an
+all-zero table row and ``seq_len == 0``, so their (masked-out) decode
+writes scatter harmlessly into it and never corrupt live requests.
+
+The allocator is host-side Python — allocation happens at admission, off
+the jitted decode path.  Device-side work is ``scatter_prefill``: one
+reshape + indexed ``.at[].set`` per layer that moves a contiguous prefill
+cache into the request's pool blocks (fused into the engine's jitted
+prefill program).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+def blocks_needed(prompt_len: int, max_new_tokens: int, block_size: int) -> int:
+    """Worst-case block count for a request, reserved in full at admission
+    so the zero-drop invariant needs no preemption: covers the prompt
+    padded to a block multiple AND every decoded token's scatter slot."""
+    padded_prompt = math.ceil(prompt_len / block_size) * block_size
+    return math.ceil(max(padded_prompt, prompt_len + max_new_tokens)
+                     / block_size)
+
+
+def pool_bytes(caches) -> int:
+    """Total bytes of a paged pool pytree (the O(active tokens) claim the
+    serve bench asserts against the static path's O(batch · max_len))."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(caches))
+
+
+class BlockAllocator:
+    """LIFO free-list over pool blocks 1..num_blocks-1 (0 is the null
+    block).  ``alloc`` is all-or-nothing: admission control asks for the
+    request's full worst-case block set and backs off if the pool can't
+    cover it."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(f"pool needs >= 2 blocks (one is the reserved "
+                             f"null block), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.used_blocks / max(1, self.num_blocks - 1)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        ids, self._free = self._free[-n:], self._free[:-n]
+        return ids[::-1]
+
+    def free(self, ids) -> None:
+        for b in ids:
+            assert b != NULL_BLOCK, "null block is never owned"
+        self._free.extend(ids)
+
+
+def scatter_prefill(pool, contiguous, block_ids):
+    """Move one request's contiguous prefill caches into its pool blocks.
+
+    ``contiguous`` is the B=1 cache pytree from ``Model.prefill`` over a
+    block-aligned padded prompt: leaves ``(1, Lpad, Hkv, dh)`` (prefix
+    layers) or ``(n_super, 1, Lpad, Hkv, dh)`` (scan-stacked superblocks).
+    ``block_ids`` is the ``(Lpad // bs,)`` int32 vector of owned pool
+    blocks.  Traced inside the engine's jitted prefill program, so the
+    reshape + indexed set fuses with the forward pass.
+    """
+
+    def scatter(pool_leaf, ctg_leaf):
+        bs = pool_leaf.shape[-3]
+        if ctg_leaf.ndim == 5:          # (ns, 1, Lpad, Hkv, dh) stacked
+            ns, _, lp, hk, dh = ctg_leaf.shape
+            blk = ctg_leaf.reshape(ns, lp // bs, bs, hk, dh)
+            return pool_leaf.at[:, block_ids].set(blk.astype(pool_leaf.dtype))
+        _, lp, hk, dh = ctg_leaf.shape   # (1, Lpad, Hkv, dh) prefix layer
+        blk = ctg_leaf.reshape(lp // bs, bs, hk, dh)
+        return pool_leaf.at[block_ids].set(blk.astype(pool_leaf.dtype))
+
+    return jax.tree.map(scatter, pool, contiguous)
+
+
+def build_table(block_ids, nbmax: int) -> np.ndarray:
+    """(nbmax,) int32 row for the engine's block-table array: owned blocks
+    first, null-block padding after."""
+    row = np.zeros((nbmax,), np.int32)
+    row[:len(block_ids)] = block_ids
+    return row

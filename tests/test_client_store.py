@@ -4,12 +4,10 @@ The spilling store must be a *refactoring* of the dense in-memory oracle:
 same rounds, same models (allclose — the running-sum SCAFFOLD control
 mean reassociates float adds), with resident bytes that stay flat as the
 total client count grows.  Also covers the LRU tier (eviction order,
-pinning via SampledView), the simulated-restart restore contract, the
-deprecated dense control view, the env-var override, and the
-FedConfig.validate() ValueError matrix.
+pinning via SampledView), the simulated-restart restore contract, and
+the FedConfig.validate() ValueError matrix.
 """
 import os
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -17,8 +15,7 @@ import numpy as np
 import pytest
 
 from repro.core.client_store import (
-    _LRU, DenseControlView, InMemoryStore, SpillingStore,
-    resolve_cache_buckets,
+    _LRU, InMemoryStore, SpillingStore, resolve_cache_buckets,
 )
 from repro.core.fedsdd import FedConfig, make_config, make_runner
 from repro.core.tasks import classification_task, synthetic_scaling_task
@@ -173,38 +170,13 @@ def _model_like(task):
     return task.init_fn(jax.random.PRNGKey(0))
 
 
-# ------------------------------------------------- deprecated dense view
-def test_dense_control_view_reads_and_warns(task):
-    store = InMemoryStore(task)
-    store.init_controls(_model_like(task))
-    view = DenseControlView(store)
-    assert len(view) == len(task.client_data)
-    with pytest.warns(DeprecationWarning, match="scaffold_c_clients"):
-        c0 = view[0]
-    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
-        np.asarray(a), np.asarray(b)), c0, store.get_control(0))
-
-
-def test_dense_control_view_is_read_only(task):
-    store = InMemoryStore(task)
-    store.init_controls(_model_like(task))
-    with pytest.raises(TypeError, match="put_control"):
-        DenseControlView(store)[0] = _model_like(task)
-
-
-# -------------------------------------------------------- env-var override
-def test_env_var_override_warns(monkeypatch):
+# ------------------------------------------------- capacity resolution
+def test_resolve_cache_buckets(monkeypatch):
+    # the legacy REPRO_ENGINE_CACHE_BUCKETS env override shipped its
+    # scheduled removal: only the configured knob (or default) decides
     monkeypatch.setenv("REPRO_ENGINE_CACHE_BUCKETS", "7")
-    with pytest.warns(DeprecationWarning, match="REPRO_ENGINE_CACHE_BUCKETS"):
-        assert resolve_cache_buckets(64) == 7
-
-
-def test_configured_capacity_without_env(monkeypatch):
-    monkeypatch.delenv("REPRO_ENGINE_CACHE_BUCKETS", raising=False)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        assert resolve_cache_buckets(9) == 9
-        assert resolve_cache_buckets(None) == 64
+    assert resolve_cache_buckets(9) == 9
+    assert resolve_cache_buckets(None) == 64
 
 
 # ------------------------------------------------- validate() ValueError

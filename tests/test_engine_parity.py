@@ -69,7 +69,9 @@ def test_fedsdd_parity_with_distillation(task):
 
 def test_scaffold_controls_parity(task):
     ss, sv = run_pair(task, "scaffold")
-    for a, b in zip(ss.scaffold_c_clients, sv.scaffold_c_clients):
+    cids = range(ss.store.num_clients)
+    for a, b in ((ss.store.get_control(c), sv.store.get_control(c))
+                 for c in cids):
         jax.tree.map(lambda x, y: np.testing.assert_allclose(
             np.asarray(x), np.asarray(y), rtol=RTOL, atol=ATOL), a, b)
 

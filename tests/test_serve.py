@@ -1,0 +1,264 @@
+"""Serving subsystem (src/repro/serve): paged KV cache + continuous
+batching vs the static oracle.
+
+Three layers of pinning:
+  * kernel — paged decode attention (shuffled block pool + block tables)
+    matches contiguous ``decode_attention`` on aligned, ragged, and
+    block-boundary sequence lengths, through BOTH dispatch paths
+    (gather fallback and forced-Pallas interpret);
+  * scheduler — admission control (slots, token budget, page
+    reservation), alloc/free accounting, mid-flight join/evict, chunked
+    multi-step decode, and fixed-trace determinism;
+  * e2e — a 2-round FedSDD checkpoint serves byte-identical greedy
+    tokens through ``generate_static`` and ``ContinuousEngine``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.synthetic import make_model_batch
+from repro.models import build_model
+from repro.serve import (
+    BlockAllocator, ContinuousEngine, Request, blocks_needed,
+    generate_static, pool_bytes,
+)
+
+ARCH = "qwen2.5-14b"        # GQA schedule — the paged path's requirement
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n, L, max_news, seed=0):
+    prompts = np.asarray(make_model_batch(cfg, n, L, seed=seed)["tokens"])
+    return [Request(rid=i, tokens=prompts[i], max_new_tokens=max_news[i])
+            for i in range(n)]
+
+
+def _static_tokens(model, params, requests):
+    """Per-rid greedy tokens through the static oracle (one batch, each
+    request trimmed to its own budget)."""
+    prompts = np.stack([r.tokens for r in requests])
+    n = max(r.max_new_tokens for r in requests)
+    out = np.asarray(generate_static(model, params, prompts, n))
+    return {r.rid: out[i, :r.max_new_tokens].tolist()
+            for i, r in enumerate(requests)}
+
+
+def _engine_tokens(model, params, requests, **kw):
+    eng = ContinuousEngine(model, params, **kw)
+    return {r.rid: r.tokens for r in eng.run(requests)}, eng
+
+
+# ======================================================== kernel parity
+@pytest.mark.parametrize("force_pallas", [False, True])
+def test_paged_decode_matches_contiguous(force_pallas, monkeypatch):
+    """Aligned (S), ragged (17), and block-boundary (8) lengths through a
+    shuffled pool must match contiguous decode attention."""
+    from repro.kernels.flash_attention import ops as fa
+    from repro.models import attention as xla_attn
+
+    B, S, Hkv, G, dh, bs = 3, 48, 2, 2, 16, 8
+    nbmax = S // bs
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hkv * G, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, dh), jnp.float32)
+    lens = jnp.asarray([S, 17, 8], jnp.int32)
+    ref = xla_attn.decode_attention(q, kc, vc, lens)
+
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(np.arange(1, 1 + B * nbmax)).reshape(B, nbmax)
+    pool_k = jnp.zeros((1 + B * nbmax, bs, Hkv, dh), jnp.float32)
+    pool_v = jnp.zeros_like(pool_k)
+    for b in range(B):
+        for j in range(nbmax):
+            pool_k = pool_k.at[perm[b, j]].set(kc[b, j * bs:(j + 1) * bs])
+            pool_v = pool_v.at[perm[b, j]].set(vc[b, j * bs:(j + 1) * bs])
+
+    if force_pallas:
+        monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    out = fa.paged_decode(q, pool_k, pool_v,
+                          jnp.asarray(perm, jnp.int32), lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_step_matches_full_forward(served):
+    """Model-level: prefill-scattered pool + one paged step == the logits
+    of a full forward over prompt+token."""
+    cfg, model, params = served
+    from repro.serve import scatter_prefill
+    from repro.serve.paged_cache import build_table
+
+    B, L, bs = 2, 8, 4
+    toks = jnp.asarray(make_model_batch(cfg, B, L + 1, seed=3)["tokens"])
+    full_logits, _ = model.logits(params, {"tokens": toks})
+
+    pool = model.init_paged_cache(num_blocks=2 * B * (L // bs) + 1, block_size=bs)
+    _, ctg = model.prefill(params, {"tokens": toks[:, :L]})
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(np.arange(1, 1 + B * (L // bs) + B))
+    bt = np.zeros((B, (L + bs) // bs), np.int32)
+    for b in range(B):
+        ids = perm[b * 3:(b + 1) * 3].tolist()   # L//bs + 1 spare block
+        one = jax.tree.map(                      # request b's B=1 caches
+            lambda x: x[:, b:b + 1] if x.ndim == 5 else x[b:b + 1], ctg)
+        pool = scatter_prefill(pool, one, ids[:L // bs])
+        bt[b] = build_table(ids, (L + bs) // bs)
+    logits, _ = model.paged_decode_step(
+        params, toks[:, L:], pool, jnp.asarray(bt),
+        jnp.asarray([L, L], jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, L]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_cache_requires_gqa():
+    cfg = get_config("jamba-1.5-large-398b").reduced()   # SSM mixers
+    with pytest.raises(ValueError, match="GQA"):
+        build_model(cfg).paged_cache_shapes(8, 4)
+
+
+# ==================================================== allocator / pages
+def test_blocks_needed_covers_prompt_padding():
+    # prompt pads to a block multiple for scatter_prefill; reservation
+    # must cover max(padded prompt, L + max_new)
+    assert blocks_needed(5, 1, 4) == 2     # pad(5)=8 > 5+1
+    assert blocks_needed(4, 9, 4) == 4     # 4+9=13 -> 4 blocks
+    assert blocks_needed(8, 8, 8) == 2
+
+
+def test_block_allocator_accounting():
+    a = BlockAllocator(9)                  # block 0 reserved null
+    assert a.free_blocks == 8
+    got = a.alloc(5)
+    assert len(got) == 5 and 0 not in got
+    assert a.alloc(4) is None              # all-or-nothing
+    assert a.free_blocks == 3
+    a.free(got)
+    assert a.free_blocks == 8 and a.used_blocks == 0
+
+
+def test_engine_frees_everything_after_drain(served):
+    cfg, model, params = served
+    reqs = _requests(cfg, 5, 8, [3, 9, 1, 6, 2])
+    _, eng = _engine_tokens(model, params, reqs, max_batch=2,
+                            num_blocks=12, block_size=4, max_seq_len=20,
+                            chunk_steps=2)
+    assert eng.idle
+    assert eng.alloc.used_blocks == 0
+    assert eng.reserved_tokens == 0
+    assert (eng.seq_lens == 0).all() and (eng.block_tables == 0).all()
+    assert 0.0 < eng.peak_utilization <= 1.0
+
+
+def test_submit_rejects_oversized_request(served):
+    cfg, model, params = served
+    eng = ContinuousEngine(model, params, max_batch=1, num_blocks=8,
+                           block_size=4, max_seq_len=16)
+    (req,) = _requests(cfg, 1, 8, [9])     # 8 + 9 > 16
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit(req)
+
+
+def test_token_budget_serializes_admission(served):
+    """A budget of one request's reservation forces strictly sequential
+    service — correctness must survive the queueing."""
+    cfg, model, params = served
+    reqs = _requests(cfg, 3, 8, [4, 4, 4])
+    budget = blocks_needed(8, 4, 4) * 4
+    toks, eng = _engine_tokens(model, params, reqs, max_batch=2,
+                               num_blocks=16, block_size=4,
+                               max_seq_len=16, token_budget=budget,
+                               chunk_steps=2)
+    assert toks == _static_tokens(model, params, reqs)
+    assert eng.peak_utilization <= (budget / 4) / (16 - 1) + 1e-9
+
+
+# =========================================== continuous vs static oracle
+def test_join_and_evict_mid_flight(served):
+    """max_batch=2 over 3 ragged requests: request 2 joins when request 0
+    or 1 evicts mid-decode; tokens must still match the static oracle."""
+    cfg, model, params = served
+    reqs = _requests(cfg, 3, 8, [3, 11, 7])
+    toks, eng = _engine_tokens(model, params, reqs, max_batch=2,
+                               num_blocks=16, block_size=4,
+                               max_seq_len=20, chunk_steps=2)
+    assert toks == _static_tokens(model, params, reqs)
+    assert all(len(toks[r.rid]) == r.max_new_tokens for r in reqs)
+
+
+@pytest.mark.parametrize("chunk_steps", [1, 3, 8])
+def test_chunked_decode_token_parity(served, chunk_steps):
+    """Multi-step chunks (frozen finished lanes included) change nothing
+    about the emitted tokens."""
+    cfg, model, params = served
+    reqs = _requests(cfg, 4, 8, [1, 7, 13, 5], seed=5)
+    toks, _ = _engine_tokens(model, params, reqs, max_batch=4,
+                             num_blocks=28, block_size=4,
+                             max_seq_len=24, chunk_steps=chunk_steps)
+    assert toks == _static_tokens(model, params, reqs)
+
+
+def test_fixed_trace_is_deterministic(served):
+    cfg, model, params = served
+    reqs = _requests(cfg, 4, 8, [2, 6, 4, 8], seed=7)
+    kw = dict(max_batch=2, num_blocks=16, block_size=4, max_seq_len=16,
+              chunk_steps=2)
+    a, ea = _engine_tokens(model, params, reqs, **kw)
+    b, eb = _engine_tokens(model, params, reqs, **kw)
+    assert a == b
+    assert ea.steps == eb.steps
+
+
+def test_static_stepped_matches_scan(served, monkeypatch):
+    cfg, model, params = served
+    prompts = np.asarray(make_model_batch(cfg, 2, 8, seed=9)["tokens"])
+    scan = np.asarray(generate_static(model, params, prompts, 6))
+    monkeypatch.setenv("REPRO_ENGINE_STEP_MODE", "stepped")
+    stepped = np.asarray(generate_static(model, params, prompts, 6))
+    np.testing.assert_array_equal(scan, stepped)
+
+
+def test_pool_is_smaller_than_static_caches(served):
+    """O(active tokens): a pool sized for the engine's working set beats
+    the static max_batch x max_seq_len preallocation."""
+    cfg, model, params = served
+    max_batch, max_seq_len, bs = 8, 64, 8
+    num_blocks = 1 + 4 * (max_seq_len // bs)      # ~half the lanes full
+    pb = pool_bytes(model.init_paged_cache(num_blocks, bs))
+    static = model.init_cache(max_batch, max_seq_len)
+    sb = sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+             for x in jax.tree.leaves(static))
+    assert pb < sb
+
+
+# ===================================================== e2e: FedSDD serve
+def test_fedsdd_checkpoint_serves_identically():
+    """Train 2 FedSDD rounds on the LM task, then serve the distilled
+    main model through both paths — greedy tokens must be identical."""
+    from repro.core.fedsdd import make_runner
+    from repro.core.tasks import lm_task
+
+    cfg = get_config(ARCH).reduced()
+    task = lm_task(cfg, num_clients=4, docs_per_client=2, seq=8)
+    r = make_runner("fedsdd", task, num_clients=4, participation=1.0,
+                    local_epochs=1, client_batch=2, K=2, distill_steps=2,
+                    server_lr=0.02)
+    st = r.run(rounds=2)
+    model = build_model(cfg)
+    params = st.global_models[0]
+
+    reqs = _requests(cfg, 3, 8, [4, 10, 7], seed=11)
+    toks, _ = _engine_tokens(model, params, reqs, max_batch=2,
+                             num_blocks=16, block_size=4,
+                             max_seq_len=20, chunk_steps=2)
+    assert toks == _static_tokens(model, params, reqs)

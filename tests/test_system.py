@@ -43,21 +43,16 @@ def test_fedsdd_on_assigned_architecture_lm():
 
 def test_serving_path_generates_tokens():
     from repro.data.synthetic import make_model_batch
-    from repro.launch.serve import pad_caches
     from repro.models import build_model
+    from repro.serve import generate_static
 
     cfg = get_config("gemma-2b").reduced()
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    prompt = {"tokens": jnp.asarray(make_model_batch(cfg, 2, 8)["tokens"])}
-    logits, caches = m.prefill(params, prompt)
-    caches = pad_caches(m, caches, 2, 16)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    for i in range(7):
-        logits, caches = m.decode_step(params, tok, caches, 8 + i)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        assert tok.shape == (2, 1)
-        assert bool(jnp.all((tok >= 0) & (tok < cfg.vocab_size)))
+    prompts = jnp.asarray(make_model_batch(cfg, 2, 8)["tokens"])
+    out = np.asarray(generate_static(m, params, prompts, 8))
+    assert out.shape == (2, 8)
+    assert ((out >= 0) & (out < cfg.vocab_size)).all()
 
 
 def test_checkpoint_resume_identical():

@@ -1,13 +1,11 @@
 """Temporal-ensembling ring semantics (§3.1.3, Eq. 5).
 
-``TemporalEnsemble`` is now the device-resident ``TeacherBank`` ring
-buffer; the legacy host-list surface must behave identically, and the
-bank-specific pieces (stacked view, spill round-trip, wraparound
-bookkeeping) are covered below.
+``TeacherBank`` is the device-resident temporal-ensemble ring buffer:
+the list-push surface, the bank-specific pieces (stacked view, spill
+round-trip, wraparound bookkeeping), and the storage-precision knob are
+all covered below.
 """
 import os
-import sys
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -17,17 +15,13 @@ import pytest
 from repro.distill import TeacherBank
 from repro.fedckpt.checkpointer import load_pytree
 
-with warnings.catch_warnings():
-    warnings.simplefilter("ignore", DeprecationWarning)
-    from repro.core.temporal import TemporalEnsemble
-
 
 def model(v):
     return {"w": jnp.full((2,), float(v))}
 
 
 def test_members_are_K_times_R():
-    te = TemporalEnsemble(K=3, R=2)
+    te = TeacherBank(K=3, R=2)
     te.push(1, [model(10), model(11), model(12)])
     assert te.num_members == 3          # first round: only K so far
     te.push(2, [model(20), model(21), model(22)])
@@ -38,7 +32,7 @@ def test_members_are_K_times_R():
 
 
 def test_newest_round_first_and_eviction():
-    te = TemporalEnsemble(K=1, R=3)
+    te = TeacherBank(K=1, R=3)
     for r in range(1, 6):
         te.push(r, [model(r)])
     vals = [float(m["w"][0]) for m in te.members()]
@@ -46,7 +40,7 @@ def test_newest_round_first_and_eviction():
 
 
 def test_r1_is_current_round_only():
-    te = TemporalEnsemble(K=2, R=1)
+    te = TeacherBank(K=2, R=1)
     te.push(1, [model(1), model(2)])
     te.push(2, [model(3), model(4)])
     vals = sorted(float(m["w"][0]) for m in te.members())
@@ -54,13 +48,13 @@ def test_r1_is_current_round_only():
 
 
 def test_wrong_k_rejected():
-    te = TemporalEnsemble(K=2, R=1)
+    te = TeacherBank(K=2, R=1)
     with pytest.raises(AssertionError):
         te.push(1, [model(0)])
 
 
 def test_spill_to_disk(tmp_path):
-    te = TemporalEnsemble(K=1, R=1, spill_dir=str(tmp_path))
+    te = TeacherBank(K=1, R=1, spill_dir=str(tmp_path))
     te.push(1, [model(1)])
     te.push(2, [model(2)])
     spilled = list(tmp_path.iterdir())
@@ -68,18 +62,6 @@ def test_spill_to_disk(tmp_path):
 
 
 # ------------------------------------------------- device-bank specifics
-def test_temporal_ensemble_is_teacher_bank():
-    """The compat alias and the bank are the same class."""
-    assert TemporalEnsemble is TeacherBank
-
-
-def test_temporal_shim_warns_on_import():
-    """The compat module announces its own removal."""
-    sys.modules.pop("repro.core.temporal", None)
-    with pytest.warns(DeprecationWarning, match="repro.core.temporal"):
-        import repro.core.temporal  # noqa: F401
-
-
 def test_spill_dir_round_trip(tmp_path):
     """Evicted members must restore bit-exact through fedckpt."""
     te = TeacherBank(K=2, R=1, spill_dir=str(tmp_path))
