@@ -1,0 +1,92 @@
+"""Chaos bench: federated rounds under deterministic fault injection.
+
+Drives the same tiny classification protocol as the other benches through
+``core/faults.FaultPlan`` at 30% client dropout and reports final accuracy
+for the two degradation policies Eq. 2 admits — survivor renormalization
+(the default: weights renormalize over the clients that reported) and the
+naive zero-fill ablation (dead clients keep their weight, the aggregate
+shrinks toward zero by the lost mass).  The gated claim row:
+
+  faults/claim_fault_tolerance  pass ⇔
+    survivor-renormalized accuracy >= zero-filled accuracy at 30% dropout
+    AND replaying the same FaultPlan seed on the sequential oracle and
+    the vectorized engine yields identical per-round fault records
+    (survivors / dropped / stragglers / rejected / degraded groups)
+    AND a rate-zero FaultPlan is bit-identical to running with no plan
+    at all (the chaos-off invariant)
+
+Timing is incidental here — the rows exist so CI fails loudly when the
+fault path diverges between engines or the renormalization regresses.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CSV, BenchScale, run_method
+
+# enough rounds for the zero-fill shrinkage to separate from renorm, but
+# still seconds on the CI core
+FSCALE = BenchScale(num_clients=6, rounds=4, local_epochs=1,
+                    distill_steps=2, num_train=512, num_server=128)
+
+_FAULT_KEYS = ("survivors", "dropped", "stragglers", "rejected",
+               "degraded_groups")
+
+
+def _fault_trace(state):
+    return [{k: rec.get(k) for k in _FAULT_KEYS} for rec in state.history]
+
+
+def run_faults_smoke(csv: CSV, prefix: str = "faults") -> None:
+    from repro.core.faults import FaultPlan
+
+    plan = FaultPlan(seed=3, dropout=0.3)
+
+    t0 = time.time()
+    acc_renorm, st_seq, _, _ = run_method(
+        "fedavg", 0.3, FSCALE, faults=plan, execution="sequential")
+    dropped = sum(len(r.get("dropped", ())) for r in st_seq.history)
+    csv.add(f"{prefix}/dropout30_renorm", (time.time() - t0) * 1e6,
+            f"acc={acc_renorm:.4f} dropped_total={dropped}")
+
+    t0 = time.time()
+    acc_zero, _, _, _ = run_method(
+        "fedavg", 0.3, FSCALE,
+        faults=FaultPlan(seed=3, dropout=0.3, zero_fill=True),
+        execution="sequential")
+    csv.add(f"{prefix}/dropout30_zerofill", (time.time() - t0) * 1e6,
+            f"acc={acc_zero:.4f}")
+
+    # deterministic replay: the vectorized engine under the SAME plan must
+    # reproduce the oracle's fault trace exactly
+    t0 = time.time()
+    acc_vec, st_vec, _, _ = run_method(
+        "fedavg", 0.3, FSCALE, faults=plan, execution="vectorized")
+    replay_ok = _fault_trace(st_seq) == _fault_trace(st_vec)
+    csv.add(f"{prefix}/replay_vectorized", (time.time() - t0) * 1e6,
+            f"acc={acc_vec:.4f} trace_identical={replay_ok}")
+
+    # chaos-off invariant: a rate-zero plan takes the legacy code paths
+    # bit-for-bit (one round is enough — divergence compounds, not hides)
+    off = BenchScale(num_clients=4, rounds=1, local_epochs=1,
+                     distill_steps=2, num_train=256, num_server=128)
+    _, st_plain, _, _ = run_method("fedavg", 0.3, off)
+    _, st_zero, _, _ = run_method("fedavg", 0.3, off,
+                                  faults=FaultPlan(seed=3))
+    off_ok = all(
+        bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        for a, b in zip(jax.tree.leaves(st_plain.global_models),
+                        jax.tree.leaves(st_zero.global_models)))
+    csv.add(f"{prefix}/chaos_off_bitident", 0, f"pass={off_ok}")
+
+    ok = bool(acc_renorm >= acc_zero) and replay_ok and off_ok
+    csv.add(f"{prefix}/claim_fault_tolerance", 0,
+            f"pass={ok} acc_renorm={acc_renorm:.4f} acc_zero={acc_zero:.4f} "
+            f"replay_identical={replay_ok} chaos_off={off_ok}")
+
+
+def run(scale, csv: CSV) -> None:
+    run_faults_smoke(csv)

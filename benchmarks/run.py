@@ -64,6 +64,10 @@ def run_smoke(csv: CSV) -> None:
     # (gated: >= 1.0x tokens/s, zero drops, O(active tokens) pool)
     from benchmarks.bench_serve import run_serve_smoke
     run_serve_smoke(csv)
+    # chaos: 30% dropout survivor-renorm vs zero-fill + cross-engine
+    # fault replay + the rate-zero bit-identity invariant
+    from benchmarks.bench_faults import run_faults_smoke
+    run_faults_smoke(csv)
     # the overlapped-executor measurement at its t3 operating point (~2
     # min): smaller configs give the min-over-window estimator too few
     # quiet windows on shared CI runners and the ratio row turns to noise

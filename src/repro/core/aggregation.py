@@ -59,6 +59,61 @@ def fedavg_aggregate_grouped(stacked: PyTree, num_samples, group_ids,
     return tree_group_weighted_mean(stacked, num_samples, gid, num_groups)
 
 
+def fedavg_aggregate_grouped_masked(
+        stacked: PyTree, num_samples, group_ids, num_groups: int,
+        survivor_mask, fallback_stacked: PyTree,
+        zero_fill: bool = False) -> tuple[PyTree, list[int]]:
+    """Eq. 2 under partial participation: non-survivors get zero weight.
+
+    Default (``zero_fill=False``) renormalizes within each group over the
+    surviving weight mass — the paper's Eq. 2 restricted to the clients
+    that actually reported.  ``zero_fill=True`` is the naive ablation:
+    dead clients still contribute zero VECTORS to the unrenormalized
+    group mean (the aggregate shrinks toward zero by the lost weight
+    fraction) — the baseline ``bench_faults`` gates against.
+
+    A group with no surviving weight cannot aggregate at all; its row is
+    substituted from ``fallback_stacked`` (the (K, ...)-stacked previous
+    global models — the carry-forward contract) and its index reported in
+    the returned ``degraded`` list.  An all-True mask without zero_fill
+    short-circuits to ``fedavg_aggregate_grouped`` verbatim, keeping the
+    zero-fault path bit-identical to the no-faults engine.
+    """
+    mask = np.asarray(survivor_mask, bool)
+    gid = np.asarray(group_ids)
+    if mask.all() and not zero_fill:
+        return fedavg_aggregate_grouped(stacked, num_samples, gid,
+                                        num_groups), []
+    w_full = np.asarray(num_samples, np.float64)
+    w = np.where(mask, w_full, 0.0)
+    live_w = np.bincount(gid, weights=w, minlength=num_groups)
+    empty = [k for k in range(num_groups) if live_w[k] == 0.0]
+    # zero weight alone cannot silence a poisoned row (0·NaN = NaN, and
+    # NaN sums into its group's segment) — dead rows are zeroed outright
+    maskj = jnp.asarray(mask)
+    stacked = jax.tree.map(
+        lambda x: jnp.where(maskj.reshape((-1,) + (1,) * (x.ndim - 1)),
+                            x, jnp.zeros((), x.dtype))
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, stacked)
+    # empty groups: the segment mean divides 0/0 into NaN rows, which are
+    # overwritten by the fallback below — NaN never escapes group k's row
+    agg = tree_group_weighted_mean(stacked, w, gid, num_groups)
+    if zero_fill:
+        total_w = np.bincount(gid, weights=w_full, minlength=num_groups)
+        frac = jnp.asarray((live_w / np.maximum(total_w, 1e-300)
+                            ).astype(np.float32))
+        agg = jax.tree.map(
+            lambda x: (x * frac.reshape((num_groups,) + (1,) * (x.ndim - 1)
+                                        ).astype(x.dtype))
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, agg)
+    if empty:
+        idx = jnp.asarray(empty, jnp.int32)
+        agg = jax.tree.map(
+            lambda a, f: a.at[idx].set(f[idx].astype(a.dtype)),
+            agg, fallback_stacked)
+    return agg, empty
+
+
 # ---------------------------------------------------------------- secure agg
 def pairwise_masks(models: Sequence[PyTree], seed: int) -> list[PyTree]:
     """Antisymmetric pairwise masks: client i adds Σ_{j>i} r_ij − Σ_{j<i} r_ji.

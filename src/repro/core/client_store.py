@@ -270,6 +270,24 @@ class ClientStore:
         clients count as zero)."""
         raise NotImplementedError
 
+    # ------------------------------------------- crash-safe resume hooks
+    def flush(self) -> None:
+        """Persist any volatile tiers so a fresh store over the same
+        backing can reconstruct this one (no-op for stores whose state
+        has nowhere durable to go)."""
+
+    @property
+    def control_sum(self) -> Optional[PyTree]:
+        """The running f32 Σ_i c_i when the store maintains one (the
+        spilling store's O(1) ``control_mean`` accumulator) — checkpointed
+        verbatim because an incrementally-maintained fp sum differs in
+        rounding from one rebuilt file-by-file at restart."""
+        return None
+
+    def set_control_sum(self, csum: PyTree) -> None:
+        """Adopt a checkpointed running control sum (no-op when the store
+        keeps no such accumulator)."""
+
     # ------------------------------------------------------- accounting
     def nbytes(self) -> int:
         """Resident client-state bytes: cached device rows/buckets plus
@@ -412,6 +430,23 @@ class SpillingStore(ClientStore):
         n = self.num_clients
         return jax.tree.map(lambda s, z: (s / n).astype(z.dtype),
                             self._ctrl_sum, self._zero)
+
+    # ------------------------------------------- crash-safe resume hooks
+    def flush(self) -> None:
+        """Spill every HOT control to disk without evicting it: after a
+        flush, a fresh ``SpillingStore`` over the same directory sees the
+        exact control set this one holds — what the full-state checkpoint
+        calls at a round boundary so a kill loses nothing."""
+        from repro.fedckpt.checkpointer import save_pytree
+        for key in self._ctrl_hot.keys():
+            save_pytree(self._ctrl_path(key[1]), self._ctrl_hot.get(key))
+
+    @property
+    def control_sum(self) -> Optional[PyTree]:
+        return self._ctrl_sum
+
+    def set_control_sum(self, csum: PyTree) -> None:
+        self._ctrl_sum = csum
 
     def _control_nbytes(self) -> int:
         total = sum(_tree_nbytes(v) for v in self._ctrl_hot.values())

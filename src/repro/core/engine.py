@@ -100,6 +100,10 @@ class ClientEntry:
     n: int                  # dataset size |X_i|
     bs: int                 # local batch size min(client_batch, n)
     idx: np.ndarray         # (S_c, bs) int32 minibatch index rows
+    # fault injection (core/faults.py): a dropped client keeps a 1-step
+    # schedule so bucket shapes stay fault-free (no retracing) but its
+    # update carries zero aggregation weight and its controls never commit
+    dropped: bool = False
 
 
 # The per-client device-row / bucket-stack LRU now lives in

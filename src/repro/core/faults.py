@@ -1,0 +1,220 @@
+"""Deterministic fault injection for federated rounds (chaos harness).
+
+A production federation never sees the clean world the engine assumes:
+clients drop out mid-round, stragglers miss the local-training deadline,
+updates arrive non-finite (fp overflow on-device, bit flips in transit),
+and spill/checkpoint I/O fails.  This module makes all of that a seeded,
+*replayable* input to the round loop:
+
+  * ``FaultPlan`` — a frozen config of per-round fault rates.  Every
+    per-client decision is a pure function of ``(plan.seed, round, cid)``
+    (its own ``np.random.default_rng`` stream), so the same plan replays
+    the identical fault trace on the sequential oracle, the vectorized
+    engine, and across a kill-and-restart — determinism is what turns
+    chaos testing into a parity test.
+  * ``apply_round_faults`` — folds the round's decisions into the
+    pre-drawn ``ClientEntry`` schedules as per-client step counts and
+    drop flags.  The vectorized path keeps its no-fault pad targets
+    (``entry_pad_hints`` is taken BEFORE truncation), so degraded rounds
+    reuse the already-compiled stacked programs — faults never retrace.
+  * ``poison_model`` / ``poison_rows`` — inject non-finite values into a
+    trained update (list form / stacked-row form), modelling corruption
+    *after* local training and *before* upload.
+  * ``finite_rows`` — the per-client ``isfinite`` guard over a stacked
+    update; anything it rejects must never reach Eq. 2 aggregation or a
+    SCAFFOLD control commit.
+  * ``FaultPlan.io_injector`` — a deterministic failure hook for
+    ``fedckpt``'s retry wrapper: selected paths fail their first write
+    attempt and succeed on retry, so bounded retry-with-backoff is
+    exercised without flaky tests.
+
+Injection sits at the phase boundaries of ``round_plan.RoundExecutor``
+(schedule build → train → finish_local → aggregate), never inside the
+jitted per-step math, so a zero-rate plan is bit-identical to running
+with no plan at all.
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Seeded per-round fault rates; all decisions replayable from seed.
+
+    ``dropout``     P(client silently vanishes for the round) — zero
+                    weight in Eq. 2, controls never committed.
+    ``straggler``   P(a surviving client misses the deadline) — its local
+                    schedule is cut to ``ceil(straggler_frac · S)`` steps
+                    (at least one), the partial update still aggregates.
+    ``corrupt``     P(a surviving client uploads a non-finite update) —
+                    must be caught by the ``finite_rows`` guard, never by
+                    luck.
+    ``spill_fail``  P(a spill/checkpoint path fails its first I/O
+                    attempt) — exercises fedckpt's bounded retry.
+    ``zero_fill``   ablation switch: aggregate dropped clients as zero
+                    weight WITHOUT renormalizing over survivors (the
+                    naive baseline the bench gates against); default
+                    False = survivor-renormalized Eq. 2.
+    """
+    seed: int = 0
+    dropout: float = 0.0
+    straggler: float = 0.0
+    straggler_frac: float = 0.5
+    corrupt: float = 0.0
+    spill_fail: float = 0.0
+    zero_fill: bool = False
+
+    def validate(self) -> None:
+        for name in ("dropout", "straggler", "straggler_frac", "corrupt",
+                     "spill_fail"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"invalid FaultPlan: {name}={v} must be a "
+                                 "probability in [0, 1]")
+
+    @property
+    def active(self) -> bool:
+        """True when any per-client fault can fire (spill_fail is I/O-side
+        only and does not perturb round math)."""
+        return (self.dropout > 0 or self.straggler > 0 or self.corrupt > 0)
+
+    # ---------------------------------------------------- per-client draw
+    def client_faults(self, round_idx: int, cid: int
+                      ) -> tuple[bool, bool, bool]:
+        """(dropped, straggled, corrupt) for one client in one round.
+
+        A dedicated rng stream per (seed, round, cid) makes the decision
+        independent of sampling order, engine, phase split, and restart
+        point — the whole determinism contract in one line.
+        """
+        u = np.random.default_rng(
+            (self.seed, int(round_idx), int(cid))).random(3)
+        dropped = bool(u[0] < self.dropout)
+        straggled = bool((not dropped) and u[1] < self.straggler)
+        corrupt = bool((not dropped) and u[2] < self.corrupt)
+        return dropped, straggled, corrupt
+
+    # ------------------------------------------------------- I/O failures
+    def io_injector(self) -> Callable[[str, int], None]:
+        """Deterministic injector for ``fedckpt.set_io_fault_injector``.
+
+        A path whose (seed, basename) hash falls under ``spill_fail``
+        raises ``OSError`` on attempt 0 and succeeds from attempt 1 on —
+        every injected failure is recoverable within fedckpt's retry
+        budget, so chaos runs exercise the backoff loop without ever
+        changing results.
+        """
+        import os
+        seed, rate = self.seed, self.spill_fail
+
+        def inject(path: str, attempt: int) -> None:
+            if attempt > 0 or rate <= 0:
+                return
+            h = zlib.crc32(f"{seed}:{os.path.basename(path)}".encode())
+            if h / 2 ** 32 < rate:
+                raise OSError(f"injected I/O failure (attempt 0): {path}")
+
+        return inject
+
+
+@dataclass
+class RoundFaults:
+    """One round's resolved fault trace (host-side, JSON-able ints)."""
+    plan: FaultPlan
+    round_idx: int
+    dropped: set = field(default_factory=set)       # cids
+    stragglers: dict = field(default_factory=dict)  # cid -> kept steps
+    corrupt: set = field(default_factory=set)       # cids poisoned at upload
+
+
+def apply_round_faults(plan: Optional[FaultPlan], round_idx: int,
+                       entries: Sequence[Any]) -> Optional[RoundFaults]:
+    """Fold the plan's round-t decisions into pre-drawn ``ClientEntry``s.
+
+    Mutates entries in place: dropped clients keep a 1-step schedule (the
+    vectorized path trains them as a wasted lane and discards the result;
+    the sequential path skips them outright) and get ``dropped=True``;
+    stragglers keep the FIRST ``ceil(frac·S)`` steps of their schedule —
+    a deadline cuts training short, it does not resample batches.
+    Returns None when the plan is absent or can't fire (the caller then
+    takes the exact unmodified code path).
+    """
+    if plan is None or not plan.active:
+        return None
+    rf = RoundFaults(plan=plan, round_idx=round_idx)
+    for e in entries:
+        dropped, straggled, corrupt = plan.client_faults(round_idx, e.cid)
+        if dropped:
+            e.dropped = True
+            e.idx = e.idx[:1]
+            rf.dropped.add(e.cid)
+            continue
+        if straggled:
+            keep = max(1, math.ceil(plan.straggler_frac * len(e.idx)))
+            if keep < len(e.idx):
+                e.idx = e.idx[:keep]
+                rf.stragglers[e.cid] = keep
+        if corrupt:
+            rf.corrupt.add(e.cid)
+    return rf
+
+
+# ---------------------------------------------------------------------
+# corruption + the isfinite guard
+# ---------------------------------------------------------------------
+def poison_model(model: PyTree) -> PyTree:
+    """A corrupted upload: every floating leaf becomes NaN (the worst
+    case — one NaN anywhere already poisons a weighted mean)."""
+    return jax.tree.map(
+        lambda x: jnp.full_like(x, jnp.nan)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, model)
+
+
+def poison_rows(stacked: PyTree, rows: Sequence[int]) -> PyTree:
+    """Poison client rows of a (C, ...)-stacked update in place."""
+    if not len(rows):
+        return stacked
+    idx = jnp.asarray(list(rows), jnp.int32)
+    return jax.tree.map(
+        lambda x: x.at[idx].set(jnp.nan)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, stacked)
+
+
+def finite_rows(stacked: PyTree) -> np.ndarray:
+    """(C,) host bool: row c is True iff every floating leaf of client c
+    is finite — the upload guard in front of Eq. 2 and control commits."""
+    leaves = [x for x in jax.tree.leaves(stacked)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        c = jax.tree.leaves(stacked)[0].shape[0]
+        return np.ones((c,), bool)
+    m = None
+    for x in leaves:
+        f = jnp.all(jnp.isfinite(x.reshape(x.shape[0], -1)), axis=1)
+        m = f if m is None else m & f
+    return np.asarray(m)
+
+
+def fault_record(rf: RoundFaults, survivors: Sequence[int],
+                 rejected: Sequence[int],
+                 degraded_groups: Sequence[int]) -> dict:
+    """The JSON-able history fields a degraded round carries — plain
+    Python ints only, so history survives a round-trip through the
+    checkpoint meta sidecar."""
+    return {
+        "survivors": sorted(int(c) for c in survivors),
+        "dropped": sorted(int(c) for c in rf.dropped),
+        "stragglers": sorted(int(c) for c in rf.stragglers),
+        "rejected": sorted(int(c) for c in rejected),
+        "degraded_groups": sorted(int(k) for k in degraded_groups),
+    }

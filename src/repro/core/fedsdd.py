@@ -19,6 +19,7 @@ transformer architectures.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
@@ -28,16 +29,22 @@ import numpy as np
 
 from repro.core import distillation as dist
 from repro.core import engine as vec_engine
+from repro.core import faults as faults_lib
 from repro.core import round_plan
-from repro.core.aggregation import fedavg_aggregate, secure_aggregate
+from repro.core.aggregation import (
+    fedavg_aggregate, fedavg_aggregate_grouped_masked, secure_aggregate,
+)
 from repro.core.client_store import ClientStore, make_client_store
+from repro.core.faults import FaultPlan
 from repro.core.grouping import assign_groups, sample_clients
 from repro.distill import KDPipeline, TeacherBank
 from repro.optim.optimizers import (
     Optimizer, apply_updates, scaffold_new_control, sgd, with_fedprox,
     with_scaffold,
 )
-from repro.utils.pytree import tree_concat, tree_stack, tree_zeros_like
+from repro.utils.pytree import (
+    tree_all_finite, tree_concat, tree_stack, tree_zeros_like,
+)
 
 PyTree = Any
 
@@ -99,6 +106,10 @@ class FedConfig:
     # LRU capacity of the store's device tier (rows + bucket stacks +
     # hot controls)
     client_cache_buckets: int = 64
+    # deterministic fault injection (core/faults.py): None = the clean
+    # world; a plan with all-zero rates is bit-identical to None on both
+    # execution paths (the chaos-off invariant tests pin)
+    faults: Optional[FaultPlan] = None
     # misc
     secure_aggregation: bool = False
     seed: int = 0
@@ -167,6 +178,13 @@ class FedConfig:
                      "client_store_dir names the spill directory, which "
                      "only the spilling store uses; set "
                      "client_store='spilling' or drop the directory")
+        if self.faults is not None:
+            self.faults.validate()
+            _require(not (self.faults.active and self.secure_aggregation),
+                     "client faults under secure aggregation need mask "
+                     "recovery for the dropped clients' pairwise shares "
+                     "(Bonawitz et al. §7) — not simulated here; disable "
+                     "secure_aggregation or zero the client fault rates")
 
 
 PRESETS: dict[str, dict] = {
@@ -242,6 +260,11 @@ class FederatedRunner:
         self._engine = None
         self._kd_pipe = None
         self._exec = None
+        if cfg.faults is not None and cfg.faults.spill_fail > 0:
+            # chaos I/O: route every fedckpt write/read through the
+            # plan's deterministic first-attempt failure injector
+            from repro.fedckpt import checkpointer as _fedckpt
+            _fedckpt.set_io_fault_injector(cfg.faults.io_injector())
 
     # ---- init ----------------------------------------------------------
     def init_state(self) -> FedState:
@@ -293,7 +316,8 @@ class FederatedRunner:
         return state.store
 
     def _local_train_scheduled(self, params: PyTree, client_id: int,
-                               state: FedState, idx_rows) -> PyTree:
+                               state: FedState, idx_rows,
+                               control_out: Optional[dict] = None) -> PyTree:
         """One client's local training over a PRE-DRAWN minibatch schedule.
 
         The schedule (one index row per optimization step) comes from
@@ -301,6 +325,11 @@ class FederatedRunner:
         sequential-oracle order — pre-drawing is what lets the overlap
         executor train group 0 *after* groups k>0 without perturbing the
         rng stream.
+
+        ``control_out``: when given, the SCAFFOLD control update is
+        STASHED there instead of committed to the store — fault-injected
+        rounds must hold commits back until the isfinite guard has ruled
+        on the client's upload (a rejected client's control never lands).
         """
         cfg = self.cfg
         store = self._store(state)
@@ -318,8 +347,12 @@ class FederatedRunner:
             batch = self.task.make_batch(ds, row)
             params, opt_state, _ = step(params, opt_state, batch)
         if cfg.local_algo == "scaffold":
-            store.put_control(client_id, scaffold_new_control(
-                opt_state, w_start, params, cfg.client_lr))
+            new_c = scaffold_new_control(opt_state, w_start, params,
+                                         cfg.client_lr)
+            if control_out is None:
+                store.put_control(client_id, new_c)
+            else:
+                control_out[int(client_id)] = new_c
         return params
 
     def local_train(self, params: PyTree, client_id: int, state: FedState,
@@ -449,6 +482,110 @@ class FederatedRunner:
         state.pending_kd = pending
         return pending
 
+    # ---- crash-safe full-state checkpoints --------------------------------
+    def save_state(self, ckpt, state: FedState) -> str:
+        """One atomic full-state checkpoint at a round boundary.
+
+        Captures everything round t+1 reads: the K global models, the
+        teacher-bank ring (+ slot map/cursor/degraded log), SCAFFOLD's
+        server control, the spilling store's running control sum
+        (checkpointed verbatim — an incrementally-maintained fp sum
+        differs in rounding from one rebuilt file-by-file), the history,
+        and the in-flight deferred-KD job spilled as its INPUTS.  Hot
+        store state is flushed to the spill directory in the same
+        breath.  ``restore_state`` + continuing the round loop then
+        reproduces the uninterrupted run bit-for-bit (with
+        client_store='spilling' over a persistent directory when
+        per-client SCAFFOLD controls are in play — the in-memory store
+        has nowhere durable to keep them).
+        """
+        store = self._store(state)
+        tree: dict = {"models": tree_stack(state.global_models)}
+        bank_tree, bank_meta = state.ensemble.export_state()
+        if bank_tree is not None:
+            tree["bank"] = bank_tree
+        if state.scaffold_c_global is not None:
+            tree["c_global"] = state.scaffold_c_global
+        if store.control_sum is not None:
+            tree["ctrl_sum"] = store.control_sum
+        store.flush()
+        pend_path = self.spill_pending(state, ckpt.dir)
+        # a resolved job's stale spill must not outlive it: a restore
+        # would re-run KD over a model that already consumed it
+        import glob
+        for p in sorted(glob.glob(os.path.join(ckpt.dir,
+                                               "pending_kd_r*.npz"))):
+            if p != pend_path:
+                for q in (p, p.replace(".npz", ".json")):
+                    if os.path.exists(q):
+                        os.remove(q)
+        meta = {
+            "round": int(state.round),
+            "keys": sorted(tree),
+            "bank": bank_meta,
+            "history": state.history,
+            "pending": (os.path.basename(pend_path) if pend_path else None),
+        }
+        return ckpt.save(state.round, tree, meta=meta)
+
+    def _state_like(self, meta: dict) -> dict:
+        """Shape/dtype template for one full-state checkpoint (which
+        optional sections exist comes from the meta's ``keys``)."""
+        cfg = self.cfg
+        template = self.task.init_fn(jax.random.PRNGKey(cfg.seed))
+        keys = set(meta.get("keys", ()))
+        like: dict = {"models": jax.tree.map(
+            lambda x: jnp.zeros((cfg.K,) + x.shape, x.dtype), template)}
+        if "bank" in keys:
+            like["bank"] = TeacherBank(
+                cfg.K, cfg.R, dtype=cfg.teacher_dtype).bank_like(template)
+        if "c_global" in keys:
+            like["c_global"] = tree_zeros_like(template)
+        if "ctrl_sum" in keys:
+            like["ctrl_sum"] = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), template)
+        return like
+
+    def restore_state(self, ckpt) -> Optional[FedState]:
+        """Rebuild a ``FedState`` from the newest LOADABLE full-state
+        checkpoint in ``ckpt`` — corrupt/truncated steps are skipped
+        backwards exactly like ``Checkpointer.restore_latest``.  Returns
+        None when the directory holds no restorable state (callers fall
+        back to ``init_state``)."""
+        cfg = self.cfg
+        for step in reversed(ckpt.steps()):
+            meta = ckpt.load_meta(step)
+            if meta is None or "keys" not in meta:
+                continue
+            try:
+                if not ckpt.verify(step):
+                    continue
+                tree = ckpt.restore(step, self._state_like(meta))
+            except Exception:
+                continue
+            state = FedState(
+                round=int(meta["round"]),
+                global_models=vec_engine.unstack_models(tree["models"]),
+                ensemble=TeacherBank(cfg.K, cfg.R, dtype=cfg.teacher_dtype),
+                store=make_client_store(cfg, self.task),
+                history=[dict(r) for r in meta.get("history", [])])
+            state.ensemble.import_state(tree.get("bank"), meta["bank"])
+            if cfg.local_algo == "scaffold":
+                # init_controls re-ingests the directory's spilled
+                # controls; the checkpointed running sum then replaces
+                # the rebuilt one so resumed fp state is exact
+                state.store.init_controls(state.global_models[0])
+                state.scaffold_c_global = tree.get(
+                    "c_global", tree_zeros_like(state.global_models[0]))
+            if "ctrl_sum" in tree:
+                state.store.set_control_sum(tree["ctrl_sum"])
+            if meta.get("pending"):
+                p = os.path.join(ckpt.dir, meta["pending"])
+                if os.path.exists(p):
+                    self.restore_pending(state, p)
+            return state
+        return None
+
     # ---- vectorized engine ----------------------------------------------
     def _make_engine(self) -> vec_engine.VectorizedClientEngine:
         if self._engine is None:
@@ -519,6 +656,18 @@ class _SequentialRoundOps:
             runner.task, runner.cfg, groups, rng,
             store=runner._store(state))
         self.models: list = [None] * len(self.entries)   # by round position
+        # fault injection: None (the exact legacy code paths run) or the
+        # round's resolved trace folded into the entries' schedules
+        self.faults = faults_lib.apply_round_faults(
+            runner.cfg.faults, t, self.entries)
+        self.fault_info: dict = {}
+        self.degraded: list = []
+        self._surv = None
+        # scaffold + faults: stash control updates instead of committing —
+        # finish_local commits survivors only, after the isfinite ruling
+        self._ctrl_out = ({} if (self.faults is not None
+                                 and runner.cfg.local_algo == "scaffold")
+                          else None)
 
     def fused_capable(self) -> bool:
         return False    # a Python loop has no scan subgraph to fuse
@@ -531,45 +680,108 @@ class _SequentialRoundOps:
         return [e for e in self.entries if e.group == 0]
 
     def train(self, which: str, run_buckets=None) -> None:
-        state = self.state
+        state, rf = self.state, self.faults
         for e in self._subset(which):
-            self.models[e.pos] = self.runner._local_train_scheduled(
-                state.global_models[e.group], e.cid, state, e.idx)
+            if e.dropped:
+                continue                 # a dropped client never reports
+            model = self.runner._local_train_scheduled(
+                state.global_models[e.group], e.cid, state, e.idx,
+                control_out=self._ctrl_out)
+            if rf is not None and e.cid in rf.corrupt:
+                model = faults_lib.poison_model(model)
+            self.models[e.pos] = model
+
+    def _survivors(self) -> set:
+        """Plan-dropped clients excluded a priori; every reported upload
+        then passes the value-level isfinite guard or is rejected."""
+        if self._surv is None:
+            surv, rejected = set(), []
+            for e in self.entries:
+                if e.dropped:
+                    continue
+                if bool(tree_all_finite(self.models[e.pos])):
+                    surv.add(e.cid)
+                else:
+                    rejected.append(e.cid)
+            self._surv, self._rejected = surv, rejected
+        return self._surv
 
     def finish_local(self) -> None:
         state, cfg = self.state, self.runner.cfg
         if cfg.local_algo == "scaffold":
+            if self._ctrl_out is not None:
+                surv = self._survivors()
+                for e in self.entries:
+                    if e.cid in surv and e.cid in self._ctrl_out:
+                        state.store.put_control(e.cid, self._ctrl_out[e.cid])
             # server control: c += |S|/N * mean_i (c_i' − c_i)  (we use the
             # simpler running-average form: c = mean of client controls)
             state.scaffold_c_global = state.store.control_mean()
 
     def aggregate(self) -> list[PyTree]:
         """Per-group Eq. 1-2 over the trained client models."""
-        cfg = self.runner.cfg
-        new_globals: list[PyTree] = []
+        cfg, rf = self.runner.cfg, self.faults
+        if rf is None:
+            new_globals: list[PyTree] = []
+            for k in range(len(self.groups)):
+                ents = [e for e in self.entries if e.group == k]
+                client_models = [self.models[e.pos] for e in ents]
+                sizes = [e.n for e in ents]
+                if cfg.secure_aggregation:
+                    agg, _uploads = secure_aggregate(client_models, sizes,
+                                                     seed=self.t)
+                else:
+                    agg = fedavg_aggregate(client_models, sizes)
+                new_globals.append(agg)
+            self.new_globals = new_globals
+            return new_globals
+        # degraded round: Eq. 2 over survivors only.  zero_fill keeps the
+        # full-round denominator (the naive ablation); an emptied group
+        # carries its previous global model forward.
+        surv = self._survivors()
+        new_globals, degraded = [], []
         for k in range(len(self.groups)):
             ents = [e for e in self.entries if e.group == k]
-            client_models = [self.models[e.pos] for e in ents]
-            sizes = [e.n for e in ents]
-            if cfg.secure_aggregation:
-                agg, _uploads = secure_aggregate(client_models, sizes,
-                                                 seed=self.t)
-            else:
-                agg = fedavg_aggregate(client_models, sizes)
+            live = [e for e in ents if e.cid in surv]
+            if not live:
+                new_globals.append(self.state.global_models[k])
+                degraded.append(k)
+                continue
+            agg = fedavg_aggregate([self.models[e.pos] for e in live],
+                                   [e.n for e in live])
+            if rf.plan.zero_fill:
+                frac = sum(e.n for e in live) / sum(e.n for e in ents)
+                agg = jax.tree.map(
+                    lambda x: (x * frac).astype(x.dtype)
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x, agg)
             new_globals.append(agg)
+        self.degraded = degraded
         self.new_globals = new_globals
+        self.fault_info = faults_lib.fault_record(
+            rf, surv, self._rejected, degraded)
         return new_globals
 
     def push(self, t: int, state) -> None:
-        state.ensemble.push(t, self.new_globals)
+        state.ensemble.push(t, self.new_globals, degraded=self.degraded)
 
     def _client_teachers_list(self, new_globals) -> list[PyTree]:
         cfg, runner = self.runner.cfg, self.runner
-        teachers = list(self.models)
+        if self.faults is None:
+            teachers = list(self.models)
+            sizes = [e.n for e in self.entries]
+        else:
+            # FedDF/FedBE ensembles only ever see surviving uploads —
+            # one poisoned teacher would NaN the whole ensemble mean
+            surv = self._survivors()
+            live = [e for e in self.entries if e.cid in surv]
+            teachers = [self.models[e.pos] for e in live]
+            sizes = [e.n for e in live]
+            if not teachers:
+                teachers = list(new_globals)    # carry-forwards still teach
+                sizes = [1] * len(teachers)
         if cfg.ensemble_extra_sampled:
             teachers += runner._sample_posterior(
-                self.models, [e.n for e in self.entries],
-                cfg.ensemble_extra_sampled, self.t)
+                list(teachers), sizes, cfg.ensemble_extra_sampled, self.t)
             teachers.append(new_globals[0])
         return teachers
 
@@ -615,9 +827,18 @@ class _VectorizedRoundOps:
         self.entries = vec_engine.build_round_entries(
             runner.task, runner.cfg, groups, rng, store=self.store)
         # round-stable pad targets: subset buckets (the overlap phase
-        # split) compile once instead of retracing per group shuffle
+        # split) compile once instead of retracing per group shuffle.
+        # Taken BEFORE fault truncation on purpose: degraded schedules
+        # pad back up to the fault-free maxima, so a chaotic round reuses
+        # the exact compiled programs of a clean one — faults never
+        # retrace (truncated steps become masked no-ops).
         self.pad_hints = vec_engine.entry_pad_hints(self.entries)
-        self.results: list = []     # (stacked, gids, sizes, orders) / subset
+        self.faults = faults_lib.apply_round_faults(
+            runner.cfg.faults, t, self.entries)
+        self.fault_info: dict = {}
+        self.degraded: list = []
+        self._surv = None
+        self.results: list = []     # (stacked, gids, sizes, orders, cids)
         self.buckets: list = []     # scaffold bookkeeping across subsets
 
     def fused_capable(self) -> bool:
@@ -663,18 +884,48 @@ class _VectorizedRoundOps:
             stacked, gids, sizes, buckets = self.eng.train_round(
                 rplan, init_params_for, init_opt_state_for,
                 run_buckets=run_buckets)
+        if self.faults is not None and self.faults.corrupt:
+            # corruption strikes the upload, after training: poison the
+            # stacked rows of this subset's corrupt clients (rows are in
+            # ascending-pos order, i.e. `ents` order, post-reassembly)
+            rows = [i for i, e in enumerate(ents)
+                    if e.cid in self.faults.corrupt]
+            stacked = faults_lib.poison_rows(stacked, rows)
         orders = np.sort(np.concatenate([p.order for p in rplan.plans]))
-        self.results.append((stacked, gids, sizes, orders))
+        cids = np.asarray([e.cid for e in ents])
+        self.results.append((stacked, gids, sizes, orders, cids))
         self.buckets.extend(buckets)
+
+    def _survivors(self) -> set:
+        """Same contract as the sequential ops: plan-dropped excluded,
+        then the stacked isfinite guard rules on every reported row."""
+        if self._surv is None:
+            rf = self.faults
+            surv, rejected = set(), []
+            for stacked, _, _, _, cids in self.results:
+                fin = faults_lib.finite_rows(stacked)
+                for c, ok in zip(cids, fin):
+                    c = int(c)
+                    if c in rf.dropped:
+                        continue
+                    if ok:
+                        surv.add(c)
+                    else:
+                        rejected.append(c)
+            self._surv, self._rejected = surv, sorted(rejected)
+        return self._surv
 
     def finish_local(self) -> None:
         state, cfg = self.state, self.runner.cfg
         if cfg.local_algo == "scaffold":
+            surv = (self._survivors() if self.faults is not None else None)
             for plan, p, s, w0 in self.buckets:
                 new_c = jax.vmap(
                     lambda st, a, b: scaffold_new_control(
                         st, a, b, cfg.client_lr))(s, w0, p)
                 for i, cid in enumerate(plan.cids):
+                    if surv is not None and int(cid) not in surv:
+                        continue    # dropped/rejected: control never lands
                     self.store.put_control(int(cid), jax.tree.map(
                         lambda x, i=i: x[i], new_c))
             state.scaffold_c_global = self.store.control_mean()
@@ -683,7 +934,7 @@ class _VectorizedRoundOps:
         """Eq. 2 for every group at once — one fused segment reduction
         over the round-ordered client stack."""
         if len(self.results) == 1:
-            stacked, gids, sizes, _ = self.results[0]
+            stacked, gids, sizes, _, cids = self.results[0]
         else:
             orders = np.concatenate([r[3] for r in self.results])
             inv = np.argsort(orders)
@@ -693,23 +944,48 @@ class _VectorizedRoundOps:
                 *[r[0] for r in self.results])
             gids = np.concatenate([r[1] for r in self.results])[inv]
             sizes = np.concatenate([r[2] for r in self.results])[inv]
+            cids = np.concatenate([r[4] for r in self.results])[inv]
         self.stacked_clients, self.sizes = stacked, sizes
-        self.stacked_globals = vec_engine.aggregate_groups(
-            stacked, sizes, gids, self.runner.cfg.K)
+        self.cids_round = cids
+        rf = self.faults
+        if rf is None:
+            self.stacked_globals = vec_engine.aggregate_groups(
+                stacked, sizes, gids, self.runner.cfg.K)
+        else:
+            surv = self._survivors()
+            mask = np.asarray([int(c) in surv for c in cids])
+            self.stacked_globals, self.degraded = \
+                fedavg_aggregate_grouped_masked(
+                    stacked, sizes, gids, self.runner.cfg.K, mask,
+                    tree_stack(self.state.global_models),
+                    zero_fill=rf.plan.zero_fill)
+            self.fault_info = faults_lib.fault_record(
+                rf, surv, self._rejected, self.degraded)
         self.new_globals = vec_engine.unstack_models(self.stacked_globals)
         return self.new_globals
 
     def push(self, t: int, state) -> None:
         # the (K, ...) stack goes into the device bank as-is (Eq. 5)
-        state.ensemble.push(t, self.stacked_globals)
+        state.ensemble.push(t, self.stacked_globals, degraded=self.degraded)
 
     def _client_teacher_stack(self, new_globals) -> PyTree:
         cfg, runner = self.runner.cfg, self.runner
-        teacher_stack = self.stacked_clients
+        teacher_stack, sizes = self.stacked_clients, list(self.sizes)
+        if self.faults is not None:
+            surv = self._survivors()
+            keep = [i for i, c in enumerate(self.cids_round)
+                    if int(c) in surv]
+            if keep:
+                ki = jnp.asarray(keep, jnp.int32)
+                teacher_stack = jax.tree.map(lambda x: x[ki], teacher_stack)
+                sizes = [sizes[i] for i in keep]
+            else:
+                teacher_stack = self.stacked_globals  # carry-forwards teach
+                sizes = [1] * self.runner.cfg.K
         if cfg.ensemble_extra_sampled:
             extras = runner._sample_posterior(
-                vec_engine.unstack_models(self.stacked_clients),
-                list(self.sizes), cfg.ensemble_extra_sampled, self.t)
+                vec_engine.unstack_models(teacher_stack),
+                sizes, cfg.ensemble_extra_sampled, self.t)
             extras.append(new_globals[0])
             teacher_stack = tree_concat([teacher_stack, tree_stack(extras)])
         return teacher_stack

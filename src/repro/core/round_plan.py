@@ -102,7 +102,7 @@ def spill_pending_kd(directory: str, pending: PendingKD) -> str:
     the student + the (M, ...) teacher snapshot, plus a ``.json`` sidecar
     (round_idx, the partially-filled history record, M).  Returns the npz
     path ``pending_kd_r{round:05d}.npz``."""
-    from repro.fedckpt.checkpointer import save_pytree
+    from repro.fedckpt.checkpointer import save_json, save_pytree
     path = os.path.join(directory,
                         f"pending_kd_r{pending.round_idx:05d}.npz")
     save_pytree(path, {"student": pending.student,
@@ -113,8 +113,7 @@ def spill_pending_kd(directory: str, pending: PendingKD) -> str:
         "num_teachers": int(
             jax.tree.leaves(pending.teachers)[0].shape[0]),
     }
-    with open(path.replace(".npz", ".json"), "w") as f:
-        json.dump(meta, f, default=float)
+    save_json(path.replace(".npz", ".json"), meta)
     return path
 
 
@@ -262,6 +261,7 @@ class RoundExecutor:
             ops.train("all")
             ops.finish_local()
             new_globals = ops.aggregate()
+            rec.update(getattr(ops, "fault_info", {}))
             ops.push(t, state)
             jax.block_until_ready(jax.tree.leaves(new_globals[0])[0])
             rec["t_local"] = time.perf_counter() - t_start
@@ -303,6 +303,7 @@ class RoundExecutor:
         ops.train("main")                # group 0 starts from KD output
         ops.finish_local()
         new_globals = ops.aggregate()
+        rec.update(getattr(ops, "fault_info", {}))
         ops.push(t, state)
         state.global_models = new_globals
         state.round = t

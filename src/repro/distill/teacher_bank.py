@@ -91,6 +91,10 @@ class TeacherBank:
         self._bank: PyTree | None = None           # leaves (R, K, ...)
         self._slot_rounds: list[int | None] = [None] * R
         self._cursor = 0
+        # fault bookkeeping: round -> tuple of group indices whose slot-k
+        # snapshot is a carry-forward (group emptied by dropouts/rejects),
+        # kept for the run's lifetime so degraded teachers are auditable
+        self._degraded: dict[int, tuple] = {}
 
     def _store_dtype(self, leaf):
         if self.dtype is not None and jnp.issubdtype(leaf.dtype,
@@ -100,13 +104,18 @@ class TeacherBank:
 
     # ------------------------------------------------------------- write
     def push(self, round_idx: int, global_models: Sequence[PyTree] | PyTree,
-             ) -> None:
+             degraded: Sequence[int] = ()) -> None:
         """Insert one round's K models, evicting (and spilling) the oldest.
 
         ``global_models``: list of K pytrees, or one pytree whose leaves
         already carry the leading (K, ...) model axis (the vectorized
-        engine's representation — no re-stacking).
+        engine's representation — no re-stacking).  ``degraded`` names the
+        groups whose model is a carry-forward this round (emptied by
+        faults) — recorded so the ensemble's provenance stays auditable.
         """
+        if degraded:
+            self._degraded[int(round_idx)] = tuple(
+                sorted(int(k) for k in degraded))
         if isinstance(global_models, (list, tuple)):
             assert len(global_models) == self.K, (len(global_models), self.K)
             member_stack = tree_stack(list(global_models))
@@ -167,3 +176,36 @@ class TeacherBank:
 
     def rounds_held(self) -> list[int]:
         return sorted(r for r in self._slot_rounds if r is not None)
+
+    def degraded_rounds(self) -> dict[int, tuple]:
+        """round -> groups that carried forward that round (see ``push``)."""
+        return dict(self._degraded)
+
+    # -------------------------------------------- crash-safe resume hooks
+    def bank_like(self, member_like: PyTree) -> PyTree:
+        """A zeros pytree with the bank's (R, K, ...) leaf shapes and
+        STORAGE dtypes — the ``like`` a checkpoint restore loads into."""
+        return jax.tree.map(
+            lambda m: jnp.zeros((self.R, self.K) + m.shape,
+                                self._store_dtype(m)), member_like)
+
+    def export_state(self) -> tuple[PyTree | None, dict]:
+        """(device ring, JSON-able meta) — everything a fresh bank needs
+        to resume this one exactly (slot->round map, cursor, degraded
+        log).  Empty slots encode as round −1 in the meta."""
+        meta = {
+            "slot_rounds": [-1 if r is None else int(r)
+                            for r in self._slot_rounds],
+            "cursor": int(self._cursor),
+            "degraded": {str(r): list(v) for r, v in self._degraded.items()},
+        }
+        return self._bank, meta
+
+    def import_state(self, bank: PyTree | None, meta: dict) -> None:
+        """Adopt a checkpointed ring + meta (inverse of ``export_state``)."""
+        self._bank = bank
+        self._slot_rounds = [None if int(r) < 0 else int(r)
+                             for r in meta["slot_rounds"]]
+        self._cursor = int(meta["cursor"])
+        self._degraded = {int(r): tuple(int(k) for k in v)
+                          for r, v in meta.get("degraded", {}).items()}

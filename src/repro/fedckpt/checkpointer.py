@@ -5,13 +5,30 @@ per step; structure round-trips exactly (dtypes included).  ``Checkpointer``
 adds step management + retention, and is what the temporal-ensembling ring
 persists through when checkpoints must survive the process
 (``distill.TeacherBank`` keeps the hot ring on device).
+
+Durability contract (the fault-tolerance PR):
+
+  * every npz/json write is ATOMIC — bytes land in ``path + ".tmp"`` and
+    are published with ``os.replace``, so a crash mid-write leaves the
+    previous file intact and at worst a stale ``.tmp`` (ignored and
+    cleaned up by readers), never a truncated npz;
+  * writes and reads go through a bounded retry-with-backoff loop
+    (transient ``OSError``s — full disks clearing, NFS hiccups — get
+    ``_IO_ATTEMPTS`` tries; ``set_io_fault_injector`` lets the chaos
+    harness exercise the loop deterministically);
+  * ``Checkpointer.save`` records a crc32 of the published npz in the
+    ``.json`` meta; ``restore_latest`` verifies it and falls back to the
+    newest retained step that loads clean instead of raising on the
+    first corrupt file.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any
+import time
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +36,36 @@ import numpy as np
 
 PyTree = Any
 _SEP = "§"   # unlikely in key names
+
+# ---------------------------------------------------------------------
+# bounded retry-with-backoff around every fedckpt I/O operation
+# ---------------------------------------------------------------------
+_IO_ATTEMPTS = 4
+_IO_BACKOFF_S = 0.01        # 10ms, 20ms, 40ms between attempts
+
+_io_fault_injector: Optional[Callable[[str, int], None]] = None
+
+
+def set_io_fault_injector(fn: Optional[Callable[[str, int], None]]) -> None:
+    """Install (or clear, with None) a deterministic I/O failure hook:
+    called as ``fn(path, attempt)`` before each attempt and free to raise
+    ``OSError`` — how ``FaultPlan.io_injector`` drives chaos tests
+    through the retry loop below."""
+    global _io_fault_injector
+    _io_fault_injector = fn
+
+
+def _io_call(op: Callable[[], Any], path: str):
+    """Run one I/O operation with bounded retry + exponential backoff."""
+    for attempt in range(_IO_ATTEMPTS):
+        try:
+            if _io_fault_injector is not None:
+                _io_fault_injector(path, attempt)
+            return op()
+        except OSError:
+            if attempt == _IO_ATTEMPTS - 1:
+                raise
+            time.sleep(_IO_BACKOFF_S * (2 ** attempt))
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -36,8 +83,60 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
 
 
 def save_pytree(path: str, tree: PyTree) -> None:
+    """Atomic npz write: tmp file + ``os.replace``, under the retry loop.
+
+    ``np.savez`` appends ``.npz`` to string paths, so the tmp bytes go
+    through an open file object — the published name is exactly ``path``.
+    """
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    flat = _flatten(tree)
+    tmp = path + ".tmp"
+
+    def write():
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+
+    _io_call(write, path)
+
+
+def save_json(path: str, obj: dict) -> None:
+    """Atomic json sidecar write (same tmp + replace + retry contract)."""
+    tmp = path + ".tmp"
+
+    def write():
+        try:
+            with open(tmp, "w") as f:
+                json.dump(obj, f, default=float)
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+
+    _io_call(write, path)
+
+
+def file_crc32(path: str) -> int:
+    """crc32 of a file's bytes — the cheap integrity stamp ``Checkpointer``
+    stores in the meta sidecar and verifies before restore."""
+    def read():
+        crc = 0
+        with open(path, "rb") as f:
+            for chunk in iter(lambda: f.read(1 << 20), b""):
+                crc = zlib.crc32(chunk, crc)
+        return crc & 0xFFFFFFFF
+
+    return _io_call(read, path)
 
 
 def spill_members(directory: str, round_idx: int, stacked: PyTree,
@@ -74,11 +173,19 @@ def client_state_path(directory: str, kind: str, cid: int,
 def spilled_client_ids(directory: str, kind: str) -> list[int]:
     """Client ids with a spilled ``kind`` file in ``directory`` — how a
     restarted ``SpillingStore`` discovers which clients were ever
-    touched (O(touched), never O(C))."""
+    touched (O(touched), never O(C)).  Stale ``.tmp`` leftovers from a
+    crashed writer are removed on the way past — they were never
+    published, so they carry no state."""
     out = []
     if not os.path.isdir(directory):
         return out
     for fn in os.listdir(directory):
+        if fn.endswith(".tmp"):
+            try:
+                os.remove(os.path.join(directory, fn))
+            except OSError:
+                pass
+            continue
         m = _CLIENT_RE.match(fn)
         if m and m.group("kind") == kind:
             out.append(int(m.group("cid")))
@@ -87,7 +194,8 @@ def spilled_client_ids(directory: str, kind: str) -> list[int]:
 
 def load_pytree(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (shapes/dtypes must match)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    p = path if path.endswith(".npz") else path + ".npz"
+    data = _io_call(lambda: np.load(p), p)
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path_keys, leaf in flat:
@@ -100,24 +208,57 @@ def load_pytree(path: str, like: PyTree) -> PyTree:
 
 
 class Checkpointer:
-    """Step-indexed checkpoints with retention: ckpt_000042.npz + meta."""
+    """Step-indexed checkpoints with retention: ckpt_000042.npz + meta.
 
-    def __init__(self, directory: str, keep: int = 4):
+    ``prefix`` namespaces independent checkpoint families in one
+    directory (the training driver keeps serving-format ``ckpt_*`` model
+    snapshots next to full-state ``state_*`` resume checkpoints)."""
+
+    def __init__(self, directory: str, keep: int = 4, prefix: str = "ckpt"):
         self.dir = directory
         self.keep = keep
+        self.prefix = prefix
         os.makedirs(directory, exist_ok=True)
+        # a crash mid-write leaves `.tmp` orphans: never published, so
+        # safe (and correct) to discard on the next process's startup
+        for fn in os.listdir(directory):
+            if fn.endswith(".tmp"):
+                try:
+                    os.remove(os.path.join(directory, fn))
+                except OSError:
+                    pass
 
     def _path(self, step: int) -> str:
-        return os.path.join(self.dir, f"ckpt_{step:06d}.npz")
+        return os.path.join(self.dir, f"{self.prefix}_{step:06d}.npz")
 
     def save(self, step: int, tree: PyTree, meta: dict | None = None) -> str:
         p = self._path(step)
         save_pytree(p, tree)
-        if meta is not None:
-            with open(p.replace(".npz", ".json"), "w") as f:
-                json.dump(meta, f)
+        # meta always exists now: it carries the npz checksum that lets
+        # restore_latest reject a corrupt file instead of crashing on it
+        meta = dict(meta or {})
+        meta["crc32"] = file_crc32(p)
+        save_json(p.replace(".npz", ".json"), meta)
         self._gc()
         return p
+
+    def load_meta(self, step: int) -> dict | None:
+        mp = self._path(step).replace(".npz", ".json")
+        if not os.path.exists(mp):
+            return None
+        with open(mp) as f:
+            return json.load(f)
+
+    def verify(self, step: int) -> bool:
+        """True iff the step's npz matches its recorded checksum (steps
+        from before checksumming — no meta/crc — pass unverified)."""
+        p = self._path(step)
+        if not os.path.exists(p):
+            return False
+        meta = self.load_meta(step)
+        if meta is None or "crc32" not in meta:
+            return True
+        return file_crc32(p) == int(meta["crc32"])
 
     def restore(self, step: int, like: PyTree) -> PyTree:
         return load_pytree(self._path(step), like)
@@ -125,7 +266,7 @@ class Checkpointer:
     def steps(self) -> list[int]:
         out = []
         for fn in os.listdir(self.dir):
-            m = re.fullmatch(r"ckpt_(\d+)\.npz", fn)
+            m = re.fullmatch(rf"{re.escape(self.prefix)}_(\d+)\.npz", fn)
             if m:
                 out.append(int(m.group(1)))
         return sorted(out)
@@ -135,10 +276,17 @@ class Checkpointer:
         return s[-1] if s else None
 
     def restore_latest(self, like: PyTree) -> tuple[int, PyTree] | None:
-        s = self.latest()
-        if s is None:
-            return None
-        return s, self.restore(s, like)
+        """Newest LOADABLE retained step: a truncated/corrupt latest file
+        (checksum mismatch or load failure) falls back to the next-newest
+        instead of raising — the crash-safe restart contract."""
+        for s in reversed(self.steps()):
+            try:
+                if not self.verify(s):
+                    continue
+                return s, self.restore(s, like)
+            except Exception:
+                continue
+        return None
 
     def _gc(self) -> None:
         steps = self.steps()

@@ -19,6 +19,7 @@ import os
 import time
 
 from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.faults import FaultPlan
 from repro.core.fedsdd import PRESETS, make_runner
 from repro.core.tasks import classification_task, lm_task
 from repro.fedckpt.checkpointer import Checkpointer
@@ -94,6 +95,36 @@ def main() -> None:
                          "bucket stacks + hot controls)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest loadable full-state "
+                         "checkpoint in --ckpt-dir (crash-safe restart); "
+                         "falls back to a fresh run when none exists")
+    # deterministic fault injection (core/faults.py): any nonzero rate
+    # builds a FaultPlan; --faults alone enables the harness at rate 0
+    # (bit-identical to no faults — the chaos-off invariant)
+    ap.add_argument("--faults", action="store_true",
+                    help="enable the deterministic fault-injection "
+                         "harness (seeded by --fault-seed)")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="per-round P(client drops out): zero Eq. 2 "
+                         "weight, controls never committed")
+    ap.add_argument("--straggler-rate", type=float, default=0.0,
+                    help="per-round P(client misses the deadline): local "
+                         "schedule cut to --straggler-frac of its steps")
+    ap.add_argument("--straggler-frac", type=float, default=0.5)
+    ap.add_argument("--corrupt-rate", type=float, default=0.0,
+                    help="per-round P(client uploads non-finite): caught "
+                         "by the isfinite guard, rejected pre-aggregation")
+    ap.add_argument("--spill-fail-rate", type=float, default=0.0,
+                    help="P(a spill/checkpoint path fails its first I/O "
+                         "attempt): exercises fedckpt's bounded retry")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="fault-plan seed (default: --seed); replaying "
+                         "the same seed replays the identical fault trace")
+    ap.add_argument("--zero-fill", action="store_true",
+                    help="ablation: aggregate dropouts as zero weight "
+                         "WITHOUT survivor renormalization (the naive "
+                         "baseline bench_faults gates against)")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args()
 
@@ -106,8 +137,18 @@ def main() -> None:
                                    alpha=args.alpha, seed=args.seed)
         overrides = dict(client_lr=args.client_lr, server_lr=args.server_lr)
 
+    plan = None
+    if args.faults or any(r > 0 for r in (
+            args.dropout_rate, args.straggler_rate, args.corrupt_rate,
+            args.spill_fail_rate)):
+        plan = FaultPlan(
+            seed=args.seed if args.fault_seed is None else args.fault_seed,
+            dropout=args.dropout_rate, straggler=args.straggler_rate,
+            straggler_frac=args.straggler_frac, corrupt=args.corrupt_rate,
+            spill_fail=args.spill_fail_rate, zero_fill=args.zero_fill)
+
     runner = make_runner(
-        args.preset, task,
+        args.preset, task, faults=plan,
         num_clients=args.clients, participation=args.participation,
         rounds=args.rounds, local_epochs=args.local_epochs,
         distill_steps=args.distill_steps, seed=args.seed,
@@ -123,11 +164,22 @@ def main() -> None:
            if PRESETS[args.preset].get("K", 1) > 1 else {}),
         **overrides)
 
+    # two checkpoint families share --ckpt-dir: serving-format model
+    # snapshots (ckpt_*, what serve/ loads) and crash-safe full-state
+    # resume checkpoints (state_*, written/read by save_state/
+    # restore_state — models + teacher bank + controls + history + any
+    # in-flight deferred-KD job, all atomic with checksummed meta)
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    last_spill = None
+    state_ckpt = (Checkpointer(args.ckpt_dir, prefix="state")
+                  if args.ckpt_dir else None)
     t0 = time.time()
-    state = runner.init_state()
-    for _ in range(args.rounds):
+    state = (runner.restore_state(state_ckpt)
+             if (args.resume and state_ckpt) else None)
+    if state is not None:
+        print(f"resumed from round {state.round}", flush=True)
+    else:
+        state = runner.init_state()
+    for _ in range(state.round, args.rounds):
         state = runner.run_round(state)
         rec = state.history[-1]
         msg = f"[{args.preset}] round {state.round}/{args.rounds}"
@@ -135,38 +187,32 @@ def main() -> None:
             msg += f" acc={rec['acc_main']:.4f}"
         if rec.get("kd_loss_last") is not None:
             msg += f" kd={rec['kd_loss_last']:.4f}"
+        if rec.get("dropped") or rec.get("rejected"):
+            msg += (f" dropped={len(rec.get('dropped', []))}"
+                    f" rejected={len(rec.get('rejected', []))}")
         print(msg, flush=True)
         if ckpt:
             if state.pending_kd is None:
                 ckpt.save(state.round, state.global_models[0],
                           meta={"round": state.round})
-            else:
-                # overlap modes: round t's KD is still in flight — spill
-                # the deferred JOB itself (runner.restore_pending +
-                # finalize reproduce the drained model exactly); only the
-                # newest spill can ever be resumed, so drop the previous
-                # one instead of accreting M+1 models per round
-                path = runner.spill_pending(state, args.ckpt_dir)
-                if last_spill and last_spill != path:
-                    for p in (last_spill, last_spill.replace(".npz", ".json")):
-                        if os.path.exists(p):
-                            os.remove(p)
-                last_spill = path
-                if state.last_distilled is not None:
-                    # ... and checkpoint the newest resolved round too
-                    # (one behind, identical to the off-mode checkpoint)
-                    r_done, model = state.last_distilled
-                    ckpt.save(r_done, model, meta={"round": r_done})
+            elif state.last_distilled is not None:
+                # overlap modes: round t's KD is in flight — checkpoint
+                # the newest RESOLVED round (one behind, identical to the
+                # off-mode checkpoint); the job itself is persisted by
+                # save_state below
+                r_done, model = state.last_distilled
+                ckpt.save(r_done, model, meta={"round": r_done})
+        if state_ckpt:
+            runner.save_state(state_ckpt, state)
     # overlap modes defer the last round's KD — drain it so the final
     # model/checkpoint equals the overlap="off" result
     state = runner.finalize(state)
     if ckpt and args.overlap != "off":
         ckpt.save(state.round, state.global_models[0],
                   meta={"round": state.round, "drained": True})
-        if last_spill:   # drained — a leftover spill would imply a job
-            for p in (last_spill, last_spill.replace(".npz", ".json")):
-                if os.path.exists(p):
-                    os.remove(p)
+    if state_ckpt:
+        # drained state: save_state clears the now-stale pending spill
+        runner.save_state(state_ckpt, state)
     print(f"done in {time.time() - t0:.1f}s")
     if args.out:
         os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)

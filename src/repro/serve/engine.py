@@ -87,6 +87,10 @@ class Request:
     tokens: np.ndarray          # (L,) int32 prompt
     max_new_tokens: int
     t_submit: float = 0.0       # stamped by ContinuousEngine.submit
+    # decode deadline in seconds after submit (None = no deadline): a
+    # request still unfinished past it is expired at the next chunk
+    # boundary and frees its pool blocks like a cancellation
+    deadline_s: float | None = None
 
 
 @dataclass
@@ -98,6 +102,8 @@ class RequestResult:
     t_admit: float = 0.0
     t_first: float = 0.0        # first generated token (end of prefill)
     t_finish: float = 0.0
+    cancelled: bool = False     # cancel()ed or deadline-expired; ``tokens``
+    #                             holds whatever was generated before
 
     @property
     def latency(self) -> float:
@@ -109,7 +115,8 @@ class RequestResult:
 
 
 class _Slot:
-    __slots__ = ("req", "result", "blocks", "remaining", "start_step")
+    __slots__ = ("req", "result", "blocks", "remaining", "start_step",
+                 "cancelled", "deadline")
 
     def __init__(self, req, result, blocks, remaining, start_step):
         self.req = req
@@ -117,6 +124,9 @@ class _Slot:
         self.blocks = blocks
         self.remaining = remaining
         self.start_step = start_step    # index into the step-token buffer
+        self.cancelled = False
+        self.deadline = (None if req.deadline_s is None
+                         else req.t_submit + req.deadline_s)
 
 
 class ContinuousEngine:
@@ -160,6 +170,7 @@ class ContinuousEngine:
         self.seq_lens = np.zeros((max_batch,), np.int32)
         self.slots: list[_Slot | None] = [None] * max_batch
         self.queue: deque[Request] = deque()
+        self._done_buf: list[RequestResult] = []  # cancelled-in-queue etc.
         self.reserved_tokens = 0
         self.steps = 0
         self.peak_utilization = 0.0
@@ -176,13 +187,35 @@ class ContinuousEngine:
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or in-flight request.  Queued: removed now,
+        its (empty) result is returned by the next ``step``.  In-flight:
+        flagged — the slot is evicted and its pool blocks freed at the
+        next chunk boundary (the jitted decode program is never shrunk or
+        interrupted; the lane just stops being read).  False if the rid
+        is unknown (already finished or never submitted)."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                del self.queue[i]
+                res = RequestResult(rid=r.rid, prompt_len=len(r.tokens),
+                                    t_submit=r.t_submit, cancelled=True)
+                res.t_finish = time.perf_counter()
+                self._done_buf.append(res)
+                return True
+        for s in self.slots:
+            if s is not None and s.req.rid == rid and not s.cancelled:
+                s.cancelled = True
+                return True
+        return False
+
     @property
     def num_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
     @property
     def idle(self) -> bool:
-        return self.num_active == 0 and not self.queue
+        return (self.num_active == 0 and not self.queue
+                and not self._done_buf)
 
     @property
     def pool_utilization(self) -> float:
@@ -243,9 +276,11 @@ class ContinuousEngine:
 
     def _evict(self, slot: int) -> RequestResult:
         s = self.slots[slot]
+        # finished lanes have remaining == 0 (the full budget); cancelled/
+        # expired lanes keep whatever they generated before the boundary
         s.result.tokens.extend(
             self._lane_tokens(slot, s.start_step,
-                              s.req.max_new_tokens - 1))
+                              (s.req.max_new_tokens - 1) - s.remaining))
         s.result.t_finish = time.perf_counter()
         self.alloc.free(s.blocks)
         self.reserved_tokens -= len(s.blocks) * self.block_size
@@ -259,7 +294,25 @@ class ContinuousEngine:
     def step(self) -> list[RequestResult]:
         """Admit what fits, decode one token for every active slot, evict
         what finished.  Returns the results finished this step."""
-        finished = []
+        finished, self._done_buf = self._done_buf, []
+        now = time.perf_counter()
+        # cancellation/deadline sweep (the chunk boundary): cancelled or
+        # expired lanes free their blocks BEFORE admission so the queue
+        # head can take the reclaimed slot this very step
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            if s.cancelled or (s.deadline is not None and now > s.deadline):
+                s.result.cancelled = True
+                finished.append(self._evict(i))
+        expired = [r for r in self.queue if r.deadline_s is not None
+                   and now > r.t_submit + r.deadline_s]
+        for r in expired:
+            self.queue.remove(r)
+            res = RequestResult(rid=r.rid, prompt_len=len(r.tokens),
+                                t_submit=r.t_submit, cancelled=True)
+            res.t_finish = now
+            finished.append(res)
         while self.queue:
             grant = self._can_admit(self.queue[0])
             if grant is None:

@@ -44,3 +44,74 @@ def test_retention_and_latest(tmp_path):
         np.asarray(a, np.float32), np.asarray(b, np.float32)), tree(4), got)
     step, _ = ck.restore_latest(jax.tree.map(jnp.zeros_like, tree(4)))
     assert step == 4
+
+
+# =========================================== durability (fault-tolerance)
+def test_save_pytree_publishes_exact_path_no_tmp(tmp_path):
+    """Atomic write contract: bytes land at exactly `path` (np.savez's
+    .npz-appending is bypassed) and no .tmp survives success."""
+    import os
+
+    p = str(tmp_path / "exact.npz")
+    save_pytree(p, {"w": jnp.arange(3.0)})
+    assert os.path.exists(p)
+    assert list(tmp_path.iterdir()) == [tmp_path / "exact.npz"]
+
+
+def test_checkpointer_cleans_stale_tmp_on_startup(tmp_path):
+    (tmp_path / "ckpt_000007.npz.tmp").write_bytes(b"crashed mid-write")
+    ck = Checkpointer(str(tmp_path))
+    assert not list(tmp_path.glob("*.tmp"))
+    assert ck.steps() == []
+
+
+def test_spilled_client_ids_ignores_and_cleans_tmp(tmp_path):
+    from repro.fedckpt.checkpointer import (
+        client_state_path, spilled_client_ids,
+    )
+
+    save_pytree(client_state_path(str(tmp_path), "ctrl", 3),
+                {"w": jnp.zeros(2)})
+    (tmp_path / "ctrl_c00000009.npz.tmp").write_bytes(b"junk")
+    assert spilled_client_ids(str(tmp_path), "ctrl") == [3]
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_meta_always_carries_checksum(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree(1))                      # no meta passed
+    meta = ck.load_meta(1)
+    assert meta is not None and "crc32" in meta
+    assert ck.verify(1)
+
+
+def test_verify_detects_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree(1), meta={"round": 1})
+    with open(tmp_path / "ckpt_000001.npz", "r+b") as f:
+        f.write(b"\xff" * 32)
+    assert not ck.verify(1)
+
+
+def test_restore_latest_falls_back_past_corrupt_steps(tmp_path):
+    """Corrupting the newest checkpoint (and truncating the one before)
+    falls back to the newest step that loads clean."""
+    ck = Checkpointer(str(tmp_path), keep=4)
+    for s in (1, 2, 3):
+        ck.save(s, tree(s), meta={"round": s})
+    with open(tmp_path / "ckpt_000003.npz", "r+b") as f:
+        f.write(b"\x00" * 48)                # checksum mismatch
+    (tmp_path / "ckpt_000002.npz").write_bytes(b"")   # truncated to nothing
+    like = jax.tree.map(jnp.zeros_like, tree(1))
+    step, got = ck.restore_latest(like)
+    assert step == 1
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)), tree(1), got)
+
+
+def test_restore_latest_none_when_all_corrupt(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree(1))
+    with open(tmp_path / "ckpt_000001.npz", "r+b") as f:
+        f.write(b"\x00" * 48)
+    assert ck.restore_latest(jax.tree.map(jnp.zeros_like, tree(1))) is None

@@ -1,0 +1,325 @@
+"""Deterministic fault injection + graceful degradation + crash-safe resume.
+
+The chaos contract (core/faults.py):
+  * a FaultPlan is a pure function of (seed, round, client) — replaying a
+    seed replays the identical fault trace on EITHER execution engine;
+  * a rate-zero plan is bit-identical to running with no plan at all;
+  * dropouts/rejections renormalize Eq. 2 over survivors, an emptied
+    group carries the previous global model forward and the teacher bank
+    records the degraded round;
+  * corrupted (non-finite) uploads are rejected before aggregation AND
+    before their SCAFFOLD control commits;
+  * fedckpt I/O failures retry with backoff; a kill + restart over the
+    same checkpoint directory reproduces the uninterrupted run.
+"""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.faults import (
+    FaultPlan, apply_round_faults, finite_rows, poison_rows,
+)
+from repro.core.fedsdd import make_runner
+from repro.core.tasks import classification_task
+from repro.fedckpt import checkpointer as fedckpt
+from repro.fedckpt.checkpointer import Checkpointer, save_pytree, load_pytree
+
+FAULT_KEYS = ("survivors", "dropped", "stragglers", "rejected",
+              "degraded_groups")
+
+
+def _task(n=6, seed=0):
+    return classification_task(model="cnn", num_clients=n, num_train=384,
+                               num_server=128, seed=seed)
+
+
+def _trace(state):
+    return [{k: r.get(k) for k in FAULT_KEYS} for r in state.history]
+
+
+def _assert_trees_equal(a, b, exact=True):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x, np.float32), np.asarray(y, np.float32)
+        if exact:
+            np.testing.assert_array_equal(x, y)
+        else:
+            np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- plan
+def test_plan_is_pure_function_of_seed_round_client():
+    p1 = FaultPlan(seed=11, dropout=0.3, straggler=0.4, corrupt=0.2)
+    p2 = FaultPlan(seed=11, dropout=0.3, straggler=0.4, corrupt=0.2)
+    trace1 = {(t, c): p1.client_faults(t, c)
+              for t in range(1, 5) for c in range(16)}
+    trace2 = {(t, c): p2.client_faults(t, c)
+              for t in range(1, 5) for c in range(16)}
+    assert trace1 == trace2
+    # rates bite: some of each fault kind appears in 64 draws
+    assert any(v[0] for v in trace1.values())
+    assert any(v[1] for v in trace1.values())
+    assert any(v[2] for v in trace1.values())
+    # a different seed yields a different trace
+    p3 = FaultPlan(seed=12, dropout=0.3, straggler=0.4, corrupt=0.2)
+    assert trace1 != {(t, c): p3.client_faults(t, c)
+                      for t in range(1, 5) for c in range(16)}
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(seed=0, dropout=1.5).validate()
+    assert not FaultPlan(seed=0).active
+    assert FaultPlan(seed=0, dropout=0.1).active
+    # an inactive plan produces no per-round fault object at all
+    assert apply_round_faults(FaultPlan(seed=0), 1, []) is None
+    assert apply_round_faults(None, 1, []) is None
+
+
+def test_finite_rows_flags_poisoned_clients():
+    stacked = {"w": jnp.ones((4, 3, 2)), "step": jnp.zeros((4,), jnp.int32)}
+    bad = poison_rows(stacked, [1, 3])
+    np.testing.assert_array_equal(finite_rows(bad),
+                                  np.array([True, False, True, False]))
+    # integer leaves are ignored by the guard
+    np.testing.assert_array_equal(finite_rows(stacked), np.ones(4, bool))
+
+
+# ----------------------------------------------------- chaos-off invariant
+@pytest.mark.parametrize("execution", ["sequential", "vectorized"])
+def test_zero_rate_plan_bit_identical(execution):
+    kw = dict(num_clients=4, rounds=2, local_epochs=1, distill_steps=2,
+              seed=0, execution=execution)
+    task = _task(n=4)
+    plain = make_runner("fedavg", task, **kw).run()
+    chaos_off = make_runner("fedavg", _task(n=4), faults=FaultPlan(seed=0),
+                            **kw).run()
+    _assert_trees_equal(plain.global_models, chaos_off.global_models,
+                        exact=True)
+    assert _trace(chaos_off) == [{k: None for k in FAULT_KEYS}] * 2
+
+
+# ----------------------------------------------------- cross-engine parity
+def test_fault_trace_and_models_match_across_engines():
+    plan = FaultPlan(seed=7, dropout=0.3, straggler=0.3, corrupt=0.2)
+    kw = dict(num_clients=6, rounds=3, local_epochs=1, distill_steps=2,
+              seed=0, faults=plan)
+    seq = make_runner("fedavg", _task(), execution="sequential", **kw).run()
+    vec = make_runner("fedavg", _task(), execution="vectorized", **kw).run()
+    assert _trace(seq) == _trace(vec)
+    # at least one round actually exercised a fault
+    assert any(r["dropped"] or r["rejected"] or r["stragglers"]
+               for r in _trace(seq))
+    _assert_trees_equal(seq.global_models, vec.global_models, exact=False)
+
+
+# ------------------------------------------------- rejection + degradation
+@pytest.mark.parametrize("execution", ["sequential", "vectorized"])
+def test_corrupt_everyone_carries_model_forward(execution):
+    """corrupt=1.0: every upload is NaN → every client rejected → the
+    group is degraded, the previous global model carries forward
+    unpoisoned, and no SCAFFOLD control ever commits."""
+    task = _task(n=4)
+    r = make_runner("scaffold", task, num_clients=4, rounds=1,
+                    local_epochs=1, seed=0, execution=execution,
+                    faults=FaultPlan(seed=5, corrupt=1.0))
+    s0 = r.init_state()
+    init_model = jax.tree.map(lambda x: np.asarray(x),
+                              s0.global_models[0])
+    s1 = r.run_round(s0)
+    rec = s1.history[-1]
+    assert rec["survivors"] == []
+    assert sorted(rec["rejected"]) == rec["rejected"] and rec["rejected"]
+    assert rec["degraded_groups"] == [0]
+    _assert_trees_equal(s1.global_models[0], init_model, exact=True)
+    assert 1 in s1.ensemble.degraded_rounds()
+    # rejected clients' controls stay at their init (zeros)
+    for cid in rec["rejected"]:
+        ctrl = s1.store.get_control(cid)
+        assert all(float(np.abs(np.asarray(x)).max()) == 0.0
+                   for x in jax.tree.leaves(ctrl))
+
+
+@pytest.mark.parametrize("execution", ["sequential", "vectorized"])
+def test_all_dropout_carries_model_forward(execution):
+    r = make_runner("fedavg", _task(n=4), num_clients=4, rounds=1,
+                    local_epochs=1, seed=0, execution=execution,
+                    faults=FaultPlan(seed=5, dropout=1.0))
+    s0 = r.init_state()
+    init_model = jax.tree.map(lambda x: np.asarray(x), s0.global_models[0])
+    s1 = r.run_round(s0)
+    rec = s1.history[-1]
+    assert rec["survivors"] == [] and rec["dropped"]
+    assert rec["degraded_groups"] == [0]
+    _assert_trees_equal(s1.global_models[0], init_model, exact=True)
+
+
+def test_renorm_beats_zero_fill_under_dropout():
+    """The Eq. 2 degradation policy: zero-filling dropouts shrinks the
+    aggregate toward zero; survivor renormalization does not."""
+    kw = dict(num_clients=6, rounds=2, local_epochs=1, distill_steps=2,
+              seed=0, execution="sequential")
+    ren = make_runner("fedavg", _task(),
+                      faults=FaultPlan(seed=3, dropout=0.4), **kw).run()
+    zf = make_runner("fedavg", _task(),
+                     faults=FaultPlan(seed=3, dropout=0.4, zero_fill=True),
+                     **kw).run()
+    # identical fault trace, different aggregates
+    assert _trace(ren) == _trace(zf)
+    norm_r = sum(float(np.square(np.asarray(x, np.float32)).sum())
+                 for x in jax.tree.leaves(ren.global_models[0]))
+    norm_z = sum(float(np.square(np.asarray(x, np.float32)).sum())
+                 for x in jax.tree.leaves(zf.global_models[0]))
+    assert norm_z < norm_r  # the shrinkage is real and detectable
+
+
+# ------------------------------------------------------------- I/O retry
+def test_io_retry_recovers_from_transient_failures(tmp_path):
+    calls = []
+
+    def flaky(path, attempt):
+        calls.append((os.path.basename(path), attempt))
+        if attempt < 2:
+            raise OSError("transient")
+
+    p = str(tmp_path / "x.npz")
+    fedckpt.set_io_fault_injector(flaky)
+    try:
+        save_pytree(p, {"w": jnp.arange(4.0)})
+    finally:
+        fedckpt.set_io_fault_injector(None)
+    got = load_pytree(p, {"w": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(4.0))
+    assert max(a for _, a in calls) == 2  # third attempt succeeded
+    assert not glob.glob(str(tmp_path / "*.tmp"))
+
+
+def test_io_retry_exhaustion_raises(tmp_path):
+    fedckpt.set_io_fault_injector(
+        lambda path, attempt: (_ for _ in ()).throw(OSError("disk gone")))
+    try:
+        with pytest.raises(OSError):
+            save_pytree(str(tmp_path / "x.npz"), {"w": jnp.zeros(2)})
+    finally:
+        fedckpt.set_io_fault_injector(None)
+
+
+def test_fault_plan_spill_injector_always_recoverable(tmp_path):
+    """spill_fail=1.0 fails only a path's FIRST attempt — every write
+    still lands within the retry budget (chaos, not data loss)."""
+    fedckpt.set_io_fault_injector(
+        FaultPlan(seed=9, spill_fail=1.0).io_injector())
+    try:
+        for i in range(5):
+            p = str(tmp_path / f"f{i}.npz")
+            save_pytree(p, {"w": jnp.full((3,), float(i))})
+            got = load_pytree(p, {"w": jnp.zeros(3)})
+            np.testing.assert_array_equal(np.asarray(got["w"]),
+                                          np.full(3, float(i)))
+    finally:
+        fedckpt.set_io_fault_injector(None)
+
+
+def test_spill_fail_end_to_end(tmp_path):
+    """A whole run with chaos I/O on the spilling store completes and
+    matches the clean run exactly."""
+    kw = dict(num_clients=4, rounds=2, local_epochs=1, seed=0,
+              execution="sequential", client_store="spilling",
+              client_cache_buckets=2)
+    try:
+        clean = make_runner(
+            "scaffold", _task(n=4),
+            client_store_dir=str(tmp_path / "clean"), **kw).run()
+        chaos = make_runner(
+            "scaffold", _task(n=4),
+            client_store_dir=str(tmp_path / "chaos"),
+            faults=FaultPlan(seed=1, spill_fail=0.7), **kw).run()
+    finally:
+        fedckpt.set_io_fault_injector(None)
+    _assert_trees_equal(clean.global_models, chaos.global_models,
+                        exact=True)
+
+
+# ------------------------------------------------- kill-and-restart resume
+def _resume_task():
+    # server set must cover >= one cfg.server_batch (256) KD batch
+    return classification_task(model="mlp", num_clients=4, num_train=256,
+                               num_server=256, seed=0)
+
+
+def _resume_cfg(store_dir):
+    return dict(num_clients=4, K=2, R=1, rounds=3, local_epochs=1,
+                distill_steps=2, seed=0, execution="sequential",
+                overlap="async", local_algo="scaffold",
+                client_store="spilling", client_store_dir=store_dir,
+                client_cache_buckets=2)
+
+
+def test_kill_and_restart_reproduces_uninterrupted_run(tmp_path):
+    """Kill after round 2 (pending deferred-KD job in flight, spilled
+    SCAFFOLD controls on disk), restart a FRESH runner over the same
+    --ckpt-dir, finish the schedule: the final state must equal the
+    never-interrupted run."""
+    # uninterrupted reference
+    ra = make_runner("fedsdd", _resume_task(),
+                     **_resume_cfg(str(tmp_path / "store_a")))
+    sa = ra.init_state()
+    for _ in range(3):
+        sa = ra.run_round(sa)
+    sa = ra.finalize(sa)
+
+    # interrupted run: 2 rounds, checkpoint, then the process "dies"
+    ckpt_dir = str(tmp_path / "ckpt")
+    cfg_b = _resume_cfg(str(tmp_path / "store_b"))
+    rb = make_runner("fedsdd", _resume_task(), **cfg_b)
+    sb = rb.init_state()
+    for _ in range(2):
+        sb = rb.run_round(sb)
+    state_ckpt = Checkpointer(ckpt_dir, prefix="state")
+    rb.save_state(state_ckpt, sb)
+    assert sb.pending_kd is not None  # the crash catches a deferred job
+    del rb, sb
+
+    # restart: fresh runner + store over the same directories
+    rc = make_runner("fedsdd", _resume_task(), **cfg_b)
+    sc = rc.restore_state(Checkpointer(ckpt_dir, prefix="state"))
+    assert sc is not None and sc.round == 2
+    assert sc.pending_kd is not None
+    sc = rc.run_round(sc)
+    sc = rc.finalize(sc)
+
+    assert len(sc.history) == len(sa.history)
+    _assert_trees_equal(sa.global_models, sc.global_models, exact=True)
+    _assert_trees_equal(sa.scaffold_c_global, sc.scaffold_c_global,
+                        exact=True)
+
+
+def test_restore_state_skips_corrupt_latest(tmp_path):
+    """Truncating the newest full-state checkpoint falls back to the
+    previous one instead of raising (or returning garbage)."""
+    r = make_runner("fedavg", _task(n=4), num_clients=4, rounds=2,
+                    local_epochs=1, seed=0, execution="sequential")
+    s = r.init_state()
+    ck = Checkpointer(str(tmp_path), prefix="state")
+    s = r.run_round(s)
+    r.save_state(ck, s)
+    s = r.run_round(s)
+    r.save_state(ck, s)
+    # corrupt the newest npz in place (checksum now mismatches)
+    newest = os.path.join(str(tmp_path), "state_000002.npz")
+    with open(newest, "r+b") as f:
+        f.write(b"\x00" * 64)
+    got = r.restore_state(Checkpointer(str(tmp_path), prefix="state"))
+    assert got is not None and got.round == 1
+
+
+def test_restore_state_empty_dir_returns_none(tmp_path):
+    r = make_runner("fedavg", _task(n=4), num_clients=4, rounds=1,
+                    local_epochs=1, seed=0)
+    assert r.restore_state(Checkpointer(str(tmp_path), prefix="state")) \
+        is None

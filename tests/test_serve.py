@@ -262,3 +262,94 @@ def test_fedsdd_checkpoint_serves_identically():
                              num_blocks=16, block_size=4,
                              max_seq_len=20, chunk_steps=2)
     assert toks == _static_tokens(model, params, reqs)
+
+
+# ==================================================== cancel / deadlines
+def test_cancel_in_flight_frees_pool_and_keeps_neighbors(served):
+    """Cancel one of two in-flight requests mid-decode: its pages free at
+    the next chunk boundary, the survivor's tokens are untouched, and the
+    allocator returns to empty after drain."""
+    cfg, model, params = served
+    reqs = _requests(cfg, 2, 8, [20, 20], seed=13)
+    eng = ContinuousEngine(model, params, max_batch=2, num_blocks=24,
+                           block_size=4, max_seq_len=32, chunk_steps=2)
+    for r in reqs:
+        eng.submit(r)
+    assert eng.step() == []            # both admitted, nothing finished
+    assert eng.num_active == 2
+    used_before = eng.alloc.used_blocks
+    assert eng.cancel(0) is True
+    assert eng.cancel(0) is False      # already flagged
+    results = []
+    while not eng.idle:
+        results.extend(eng.step())
+    res = {r.rid: r for r in results}
+    static = _static_tokens(model, params, reqs)
+    assert res[0].cancelled and 0 < len(res[0].tokens) < 20
+    # what it DID generate is still the greedy prefix
+    assert res[0].tokens == static[0][:len(res[0].tokens)]
+    assert not res[1].cancelled and res[1].tokens == static[1]
+    assert eng.alloc.used_blocks == 0 < used_before
+    assert eng.reserved_tokens == 0
+    assert (eng.block_tables == 0).all() and (eng.seq_lens == 0).all()
+
+
+def test_cancel_queued_request(served):
+    """A queued (never-admitted) request cancels instantly: empty result,
+    no pages ever reserved; an unknown rid reports False."""
+    cfg, model, params = served
+    reqs = _requests(cfg, 2, 8, [6, 6], seed=14)
+    reqs[0].deadline_s = 60.0          # generous deadline: must NOT fire
+    eng = ContinuousEngine(model, params, max_batch=1, num_blocks=12,
+                           block_size=4, max_seq_len=16, chunk_steps=2)
+    for r in reqs:
+        eng.submit(r)
+    assert eng.cancel(1) is True
+    assert eng.cancel(99) is False
+    results = []
+    while not eng.idle:
+        results.extend(eng.step())
+    res = {r.rid: r for r in results}
+    assert res[1].cancelled and res[1].tokens == []
+    assert not res[0].cancelled
+    assert res[0].tokens == _static_tokens(model, params, [reqs[0]])[0]
+    assert eng.alloc.used_blocks == 0 and eng.reserved_tokens == 0
+
+
+def test_deadline_expires_mid_flight(served):
+    """A too-tight decode deadline evicts the lane at the next chunk
+    boundary: partial greedy-prefix tokens, cancelled=True, pages freed."""
+    import time as _time
+
+    cfg, model, params = served
+    (req,) = _requests(cfg, 1, 8, [24], seed=15)
+    req.deadline_s = 0.05
+    eng = ContinuousEngine(model, params, max_batch=1, num_blocks=16,
+                           block_size=4, max_seq_len=40, chunk_steps=2)
+    eng.submit(req)
+    assert eng.step() == []            # admitted within the deadline
+    assert eng.num_active == 1
+    _time.sleep(0.06)                  # let the deadline pass
+    results = []
+    while not eng.idle:
+        results.extend(eng.step())
+    (res,) = results
+    assert res.cancelled and 0 < len(res.tokens) < 24
+    assert eng.alloc.used_blocks == 0 and eng.reserved_tokens == 0
+
+
+def test_deadline_expires_in_queue(served):
+    """deadline_s=0: the request expires while queued — returned
+    cancelled with zero tokens, never admitted."""
+    cfg, model, params = served
+    (req,) = _requests(cfg, 1, 8, [4], seed=16)
+    req.deadline_s = 0.0
+    eng = ContinuousEngine(model, params, max_batch=1, num_blocks=8,
+                           block_size=4, max_seq_len=16, chunk_steps=2)
+    eng.submit(req)
+    results = []
+    while not eng.idle:
+        results.extend(eng.step())
+    (res,) = results
+    assert res.cancelled and res.tokens == []
+    assert eng.peak_utilization == 0.0
