@@ -66,8 +66,11 @@ def run_smoke(csv: CSV) -> None:
     run_serve_smoke(csv)
     # chaos: 30% dropout survivor-renorm vs zero-fill + cross-engine
     # fault replay + the rate-zero bit-identity invariant
-    from benchmarks.bench_faults import run_faults_smoke
+    from benchmarks.bench_faults import run_byzantine_smoke, run_faults_smoke
     run_faults_smoke(csv)
+    # byzantine: 20% sign-flip poisoning, robust Eq. 2 estimators vs the
+    # plain mean + attack-trace replay + rate-zero attack bit-identity
+    run_byzantine_smoke(csv)
     # the overlapped-executor measurement at its t3 operating point (~2
     # min): smaller configs give the min-over-window estimator too few
     # quiet windows on shared CI runners and the ratio row turns to noise

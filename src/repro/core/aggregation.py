@@ -59,6 +59,24 @@ def fedavg_aggregate_grouped(stacked: PyTree, num_samples, group_ids,
     return tree_group_weighted_mean(stacked, num_samples, gid, num_groups)
 
 
+def survivor_group_weights(num_samples, group_ids, num_groups: int,
+                           survivor_mask) -> tuple:
+    """(masked per-client weights, per-group live weight, empty groups).
+
+    The shared bookkeeping between masked Eq. 2 (here) and the robust
+    statistics (``core/robust_agg``): non-survivors get weight zero, and
+    a group whose surviving weight mass is zero is ``empty`` — its
+    aggregate must come from the carry-forward fallback.
+    """
+    mask = np.asarray(survivor_mask, bool)
+    gid = np.asarray(group_ids)
+    w_full = np.asarray(num_samples, np.float64)
+    w = np.where(mask, w_full, 0.0)
+    live_w = np.bincount(gid, weights=w, minlength=num_groups)
+    empty = [k for k in range(num_groups) if live_w[k] == 0.0]
+    return w, live_w, empty
+
+
 def fedavg_aggregate_grouped_masked(
         stacked: PyTree, num_samples, group_ids, num_groups: int,
         survivor_mask, fallback_stacked: PyTree,
@@ -85,9 +103,8 @@ def fedavg_aggregate_grouped_masked(
         return fedavg_aggregate_grouped(stacked, num_samples, gid,
                                         num_groups), []
     w_full = np.asarray(num_samples, np.float64)
-    w = np.where(mask, w_full, 0.0)
-    live_w = np.bincount(gid, weights=w, minlength=num_groups)
-    empty = [k for k in range(num_groups) if live_w[k] == 0.0]
+    w, live_w, empty = survivor_group_weights(num_samples, gid, num_groups,
+                                              mask)
     # zero weight alone cannot silence a poisoned row (0·NaN = NaN, and
     # NaN sums into its group's segment) — dead rows are zeroed outright
     maskj = jnp.asarray(mask)

@@ -455,10 +455,26 @@ class VectorizedClientEngine:
 
 
 def aggregate_groups(stacked_params: PyTree, sizes, group_ids,
-                     num_groups: int) -> PyTree:
+                     num_groups: int, aggregator: str = "mean",
+                     trim_frac: float = 0.2,
+                     clip_norm=None, fallback_stacked=None) -> PyTree:
     """Eq. 2 for every group at once over the client axis: the batched
     multi-model weight_avg kernel on TPU, a fused segment reduction on
-    CPU — never a per-group Python loop."""
+    CPU — never a per-group Python loop.
+
+    ``aggregator``/``trim_frac``/``clip_norm`` route through the
+    Byzantine-robust statistics (core/robust_agg) instead; the "mean"
+    default keeps this the bit-identical Eq. 2 path.  ``clip_norm``
+    needs ``fallback_stacked`` (the (K, ...) round-start globals) as the
+    update reference point.
+    """
+    if aggregator != "mean" or clip_norm is not None:
+        from repro.core.robust_agg import robust_aggregate_grouped
+        agg, _degraded = robust_aggregate_grouped(
+            stacked_params, sizes, group_ids, num_groups,
+            aggregator=aggregator, trim_frac=trim_frac,
+            clip_norm=clip_norm, fallback_stacked=fallback_stacked)
+        return agg
     from repro.core.aggregation import fedavg_aggregate_grouped
     return fedavg_aggregate_grouped(stacked_params, sizes, group_ids,
                                     num_groups)

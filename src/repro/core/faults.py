@@ -20,6 +20,12 @@ and spill/checkpoint I/O fails.  This module makes all of that a seeded,
   * ``poison_model`` / ``poison_rows`` — inject non-finite values into a
     trained update (list form / stacked-row form), modelling corruption
     *after* local training and *before* upload.
+  * ``attack_model`` / ``attack_rows`` — Byzantine adversaries: FINITE
+    malicious perturbations of a trained update (sign-flipped, rescaled,
+    or Gaussian-noised around the round's start model).  Unlike
+    corruption these pass the ``isfinite`` guard by construction — they
+    exist to exercise the robust Eq. 2 statistics (``core/robust_agg``)
+    and the trust-weighted teacher filter, not the guard.
   * ``finite_rows`` — the per-client ``isfinite`` guard over a stacked
     update; anything it rejects must never reach Eq. 2 aggregation or a
     SCAFFOLD control commit.
@@ -46,6 +52,8 @@ import numpy as np
 
 PyTree = Any
 
+ATTACK_MODES = ("none", "sign_flip", "scale", "gauss")
+
 
 @dataclass(frozen=True)
 class FaultPlan:
@@ -54,11 +62,25 @@ class FaultPlan:
     ``dropout``     P(client silently vanishes for the round) — zero
                     weight in Eq. 2, controls never committed.
     ``straggler``   P(a surviving client misses the deadline) — its local
-                    schedule is cut to ``ceil(straggler_frac · S)`` steps
-                    (at least one), the partial update still aggregates.
+                    schedule is cut short; the kept fraction is drawn PER
+                    CLIENT from ``[straggler_frac, 1)`` (heterogeneous
+                    severities; ``straggler_frac`` is the worst case, at
+                    least one step survives), the partial update still
+                    aggregates.
     ``corrupt``     P(a surviving client uploads a non-finite update) —
                     must be caught by the ``finite_rows`` guard, never by
                     luck.
+    ``attack``      Byzantine mode for adversarial (FINITE) uploads:
+                    ``"none"`` | ``"sign_flip"`` (upload the NEGATED
+                    update, ``ref − attack_scale·Δ``) | ``"scale"``
+                    (rescale the update, ``ref + attack_scale·Δ``) |
+                    ``"gauss"`` (add ``attack_scale``-std Gaussian noise,
+                    drawn deterministically per (seed, round, cid)).
+    ``attack_rate`` P(a surviving, uncorrupted client is adversarial this
+                    round).  Adversarial uploads PASS the isfinite guard
+                    — only robust aggregation (``FedConfig.aggregator``)
+                    or teacher trust weighting defends against them.
+    ``attack_scale``magnitude knob shared by the three attack modes.
     ``spill_fail``  P(a spill/checkpoint path fails its first I/O
                     attempt) — exercises fedckpt's bounded retry.
     ``zero_fill``   ablation switch: aggregate dropped clients as zero
@@ -71,38 +93,67 @@ class FaultPlan:
     straggler: float = 0.0
     straggler_frac: float = 0.5
     corrupt: float = 0.0
+    attack: str = "none"
+    attack_rate: float = 0.0
+    attack_scale: float = 10.0
     spill_fail: float = 0.0
     zero_fill: bool = False
 
     def validate(self) -> None:
         for name in ("dropout", "straggler", "straggler_frac", "corrupt",
-                     "spill_fail"):
+                     "attack_rate", "spill_fail"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"invalid FaultPlan: {name}={v} must be a "
                                  "probability in [0, 1]")
+        if self.attack not in ATTACK_MODES:
+            raise ValueError(f"invalid FaultPlan: attack={self.attack!r} "
+                             f"not in {ATTACK_MODES}")
+        if self.attack_rate > 0 and self.attack == "none":
+            raise ValueError(
+                "invalid FaultPlan: attack_rate="
+                f"{self.attack_rate} with attack='none' would silently do "
+                "nothing — pick an attack mode (sign_flip|scale|gauss) or "
+                "zero the rate")
+        if not self.attack_scale > 0:
+            raise ValueError(f"invalid FaultPlan: attack_scale="
+                             f"{self.attack_scale} must be > 0")
 
     @property
     def active(self) -> bool:
         """True when any per-client fault can fire (spill_fail is I/O-side
         only and does not perturb round math)."""
-        return (self.dropout > 0 or self.straggler > 0 or self.corrupt > 0)
+        return (self.dropout > 0 or self.straggler > 0 or self.corrupt > 0
+                or (self.attack != "none" and self.attack_rate > 0))
 
     # ---------------------------------------------------- per-client draw
     def client_faults(self, round_idx: int, cid: int
-                      ) -> tuple[bool, bool, bool]:
-        """(dropped, straggled, corrupt) for one client in one round.
+                      ) -> tuple[bool, bool, bool, bool, float]:
+        """(dropped, straggled, corrupt, attacked, straggler_severity) for
+        one client in one round.
 
         A dedicated rng stream per (seed, round, cid) makes the decision
         independent of sampling order, engine, phase split, and restart
-        point — the whole determinism contract in one line.
+        point — the whole determinism contract in one line.  The draw
+        order extends PR 8's three uniforms (dropout, straggler, corrupt)
+        in place, so pre-attack traces replay unchanged.
+        ``straggler_severity`` is the kept schedule FRACTION, uniform in
+        ``[straggler_frac, 1)`` — stragglers are heterogeneous, with the
+        configured frac as the worst case.  ``attacked`` excludes corrupt
+        clients (a NaN upload is rejected before any aggregate; layering
+        an attack under it would be unobservable).
         """
         u = np.random.default_rng(
-            (self.seed, int(round_idx), int(cid))).random(3)
+            (self.seed, int(round_idx), int(cid))).random(5)
         dropped = bool(u[0] < self.dropout)
         straggled = bool((not dropped) and u[1] < self.straggler)
         corrupt = bool((not dropped) and u[2] < self.corrupt)
-        return dropped, straggled, corrupt
+        attacked = bool((not dropped) and (not corrupt)
+                        and self.attack != "none"
+                        and u[3] < self.attack_rate)
+        severity = float(self.straggler_frac
+                         + (1.0 - self.straggler_frac) * u[4])
+        return dropped, straggled, corrupt, attacked, severity
 
     # ------------------------------------------------------- I/O failures
     def io_injector(self) -> Callable[[str, int], None]:
@@ -135,6 +186,7 @@ class RoundFaults:
     dropped: set = field(default_factory=set)       # cids
     stragglers: dict = field(default_factory=dict)  # cid -> kept steps
     corrupt: set = field(default_factory=set)       # cids poisoned at upload
+    attacked: set = field(default_factory=set)      # cids uploading attacks
 
 
 def apply_round_faults(plan: Optional[FaultPlan], round_idx: int,
@@ -144,8 +196,9 @@ def apply_round_faults(plan: Optional[FaultPlan], round_idx: int,
     Mutates entries in place: dropped clients keep a 1-step schedule (the
     vectorized path trains them as a wasted lane and discards the result;
     the sequential path skips them outright) and get ``dropped=True``;
-    stragglers keep the FIRST ``ceil(frac·S)`` steps of their schedule —
-    a deadline cuts training short, it does not resample batches.
+    stragglers keep the FIRST ``ceil(severity·S)`` steps of their
+    schedule, with a per-(seed, round, cid) severity draw — a deadline
+    cuts training short, it does not resample batches.
     Returns None when the plan is absent or can't fire (the caller then
     takes the exact unmodified code path).
     """
@@ -153,19 +206,22 @@ def apply_round_faults(plan: Optional[FaultPlan], round_idx: int,
         return None
     rf = RoundFaults(plan=plan, round_idx=round_idx)
     for e in entries:
-        dropped, straggled, corrupt = plan.client_faults(round_idx, e.cid)
+        dropped, straggled, corrupt, attacked, severity = \
+            plan.client_faults(round_idx, e.cid)
         if dropped:
             e.dropped = True
             e.idx = e.idx[:1]
             rf.dropped.add(e.cid)
             continue
         if straggled:
-            keep = max(1, math.ceil(plan.straggler_frac * len(e.idx)))
+            keep = max(1, math.ceil(severity * len(e.idx)))
             if keep < len(e.idx):
                 e.idx = e.idx[:keep]
                 rf.stragglers[e.cid] = keep
         if corrupt:
             rf.corrupt.add(e.cid)
+        if attacked:
+            rf.attacked.add(e.cid)
     return rf
 
 
@@ -188,6 +244,69 @@ def poison_rows(stacked: PyTree, rows: Sequence[int]) -> PyTree:
     return jax.tree.map(
         lambda x: x.at[idx].set(jnp.nan)
         if jnp.issubdtype(x.dtype, jnp.floating) else x, stacked)
+
+
+# ---------------------------------------------------------------------
+# Byzantine attacks (finite, guard-passing adversarial uploads)
+# ---------------------------------------------------------------------
+def _attack_leaf(mode: str, scale: float, x: jnp.ndarray, ref: jnp.ndarray,
+                 key) -> jnp.ndarray:
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    xf, rf = x.astype(jnp.float32), ref.astype(jnp.float32)
+    if mode == "sign_flip":
+        out = rf - scale * (xf - rf)
+    elif mode == "scale":
+        out = rf + scale * (xf - rf)
+    else:  # gauss
+        out = xf + scale * jax.random.normal(key, x.shape, jnp.float32)
+    return out.astype(x.dtype)
+
+
+def attack_model(plan: FaultPlan, round_idx: int, cid: int, model: PyTree,
+                 ref: PyTree) -> PyTree:
+    """The adversarial upload for one attacked client.
+
+    ``ref`` is the round's START model for the client's group — the
+    attacker perturbs its honest update Δ = model − ref around it:
+    sign_flip uploads ``ref − scale·Δ`` (gradient ascent for everyone
+    else), scale uploads ``ref + scale·Δ`` (a boosted/poisoned step), and
+    gauss adds ``scale``-std noise to the trained model.  Gauss noise is
+    keyed on ``fold_in(fold_in(fold_in(seed, round), cid), leaf)`` so
+    both engines — and a replay after restart — draw the identical
+    perturbation.  All outputs are finite: these MUST pass the isfinite
+    guard and be caught (or not) by aggregation statistics.
+    """
+    base = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(plan.seed), int(round_idx) & 0x7fffffff),
+        int(cid) & 0x7fffffff)
+    leaves_m, treedef = jax.tree.flatten(model)
+    leaves_r = treedef.flatten_up_to(ref)
+    out = [_attack_leaf(plan.attack, plan.attack_scale, x, r,
+                        jax.random.fold_in(base, i))
+           for i, (x, r) in enumerate(zip(leaves_m, leaves_r))]
+    return jax.tree.unflatten(treedef, out)
+
+
+def attack_rows(plan: FaultPlan, round_idx: int, stacked: PyTree,
+                rows: Sequence[tuple], ref_models: Sequence[PyTree]
+                ) -> PyTree:
+    """Apply ``attack_model`` to rows of a (C, ...)-stacked update.
+
+    ``rows`` is ``[(row_index, cid, group), ...]``; ``ref_models`` is the
+    per-group list of round-start globals.  Gather/perturb/scatter per
+    attacked row — O(attacked) host dispatches against the same traced
+    perturbation math as the sequential engine, so cross-engine traces
+    match bit-for-bit in the deterministic modes and draw-for-draw in
+    gauss mode.
+    """
+    for row, cid, gid in rows:
+        m = jax.tree.map(lambda x: x[row], stacked)
+        m = attack_model(plan, round_idx, cid, m, ref_models[gid])
+        stacked = jax.tree.map(
+            lambda s, v: s.at[row].set(v.astype(s.dtype))
+            if jnp.issubdtype(s.dtype, jnp.floating) else s, stacked, m)
+    return stacked
 
 
 def finite_rows(stacked: PyTree) -> np.ndarray:
@@ -216,5 +335,6 @@ def fault_record(rf: RoundFaults, survivors: Sequence[int],
         "dropped": sorted(int(c) for c in rf.dropped),
         "stragglers": sorted(int(c) for c in rf.stragglers),
         "rejected": sorted(int(c) for c in rejected),
+        "attacked": sorted(int(c) for c in rf.attacked),
         "degraded_groups": sorted(int(k) for k in degraded_groups),
     }

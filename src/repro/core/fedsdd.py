@@ -37,6 +37,7 @@ from repro.core.aggregation import (
 from repro.core.client_store import ClientStore, make_client_store
 from repro.core.faults import FaultPlan
 from repro.core.grouping import assign_groups, sample_clients
+from repro.core.robust_agg import AGGREGATORS, robust_aggregate_grouped
 from repro.distill import KDPipeline, TeacherBank
 from repro.optim.optimizers import (
     Optimizer, apply_updates, scaffold_new_control, sgd, with_fedprox,
@@ -110,6 +111,20 @@ class FedConfig:
     # world; a plan with all-zero rates is bit-identical to None on both
     # execution paths (the chaos-off invariant tests pin)
     faults: Optional[FaultPlan] = None
+    # Byzantine-robust Eq. 2 (core/robust_agg.py): "mean" is the paper's
+    # weighted mean and the bit-identical oracle; the order statistics
+    # defend finite adversarial uploads that pass the isfinite guard.
+    # clip_norm (optional) clips every survivor's update onto
+    # clip_norm × the group's median update norm BEFORE the statistic —
+    # it composes with any aggregator, including mean.
+    aggregator: str = "mean"  # mean | trimmed_mean | median | krum | multi_krum
+    trim_frac: float = 0.2          # assumed adversary fraction per group
+    clip_norm: Optional[float] = None
+    # trust-weighted teacher filtering (distill/pipeline.trust_weights):
+    # weight the KD ensemble by cross-teacher agreement on the probe
+    # batch + the bank's degraded-round bookkeeping, so a poisoned or
+    # carried-forward teacher is down-weighted out of Eq. 3's mean logit
+    teacher_trust: bool = False
     # misc
     secure_aggregation: bool = False
     seed: int = 0
@@ -185,6 +200,39 @@ class FedConfig:
                      "recovery for the dropped clients' pairwise shares "
                      "(Bonawitz et al. §7) — not simulated here; disable "
                      "secure_aggregation or zero the client fault rates")
+        _choice("aggregator", AGGREGATORS)
+        _require(0.0 <= self.trim_frac < 0.5,
+                 f"trim_frac={self.trim_frac} must be in [0, 0.5) — "
+                 "trimming half or more from each end leaves no clients "
+                 "(use aggregator='median' for the 50% limit)")
+        if self.clip_norm is not None:
+            _require(self.clip_norm > 0,
+                     f"clip_norm={self.clip_norm} must be > 0 — it is the "
+                     "clip radius as a multiple of the group's median "
+                     "update norm (None disables clipping)")
+        if self.aggregator != "mean" or self.clip_norm is not None:
+            _require(not self.secure_aggregation,
+                     "robust aggregation needs the individual client "
+                     "updates, but secure aggregation makes every single "
+                     "upload indistinguishable from noise by design "
+                     "(Bonawitz et al.) — order statistics over masked "
+                     "uploads are meaningless; use aggregator='mean' "
+                     "without clip_norm, or disable secure_aggregation")
+            _require(self.faults is None or not self.faults.zero_fill,
+                     "zero_fill is an ablation of the WEIGHTED mean "
+                     "(unrenormalized Eq. 2); robust order statistics "
+                     "have no weight mass to zero-fill — drop zero_fill "
+                     "or use aggregator='mean'")
+        if self.teacher_trust:
+            _require(self.kd_pipeline == "fused",
+                     "teacher_trust computes agreement weights over the "
+                     "stacked teacher bank inside the fused KD cache "
+                     "build; the legacy host loop has no weighted cache — "
+                     "set kd_pipeline='fused'")
+            _require(self.distill_target != "none",
+                     "teacher_trust weights the KD ensemble, but "
+                     "distill_target='none' never distills — enable KD or "
+                     "drop teacher_trust")
 
 
 PRESETS: dict[str, dict] = {
@@ -389,9 +437,23 @@ class FederatedRunner:
             self._exec = round_plan.RoundExecutor(self)
         return self._exec
 
+    def _teacher_trust_weights(self, state, teacher_stack):
+        """(M,) trust weights for this round's KD ensemble, or None when
+        ``teacher_trust`` is off.  Cross-teacher agreement on the probe
+        batch (``KDPipeline.trust_weights``) plus the bank's degraded-slot
+        bookkeeping — a poisoned or carried-forward teacher is weighted
+        (down to exactly) zero out of the Eq. 3 mean."""
+        if not self.cfg.teacher_trust or teacher_stack is None:
+            return None
+        degraded = (state.ensemble.degraded_mask_stacked()
+                    if self.cfg.ensemble_source == "aggregated" else None)
+        return self._kd_pipeline().trust_weights(
+            teacher_stack, self.task.server_batches, degraded_mask=degraded)
+
     def _distill_models(self, new_globals: list[PyTree], teachers,
                         *, stacked: bool,
-                        stacked_students: PyTree | None = None) -> dict:
+                        stacked_students: PyTree | None = None,
+                        teacher_weights=None) -> dict:
         """Distill the round's targets in place; returns the kd record.
 
         ``teachers``: a list of member pytrees (``stacked=False``) or one
@@ -401,6 +463,8 @@ class FederatedRunner:
         ``stacked_students``: the (K, ...) stack of ``new_globals`` when
         the caller already has one (the vectorized engine) — skips a
         re-stack on the ``distill_target='all'`` path.
+        ``teacher_weights``: optional (M,) trust weights (fused only —
+        validate() pins teacher_trust to the fused pipeline).
         """
         cfg = self.cfg
         if cfg.kd_pipeline == "fused":
@@ -410,11 +474,17 @@ class FederatedRunner:
                 if stacked_students is None:
                     stacked_students = tree_stack(new_globals)
                 out, kd_info = pipe.distill_all(
-                    stacked_students, tstack, self.task.server_batches)
+                    stacked_students, tstack, self.task.server_batches,
+                    teacher_weights=teacher_weights)
                 new_globals[:] = vec_engine.unstack_models(out)
             else:
                 new_globals[0], kd_info = pipe.distill(
-                    new_globals[0], tstack, self.task.server_batches)
+                    new_globals[0], tstack, self.task.server_batches,
+                    teacher_weights=teacher_weights)
+            if teacher_weights is not None:
+                kd_info = dict(kd_info)
+                kd_info["teacher_trust"] = [
+                    round(float(w), 4) for w in np.asarray(teacher_weights)]
             return kd_info
         kd_info = {}
         targets = range(cfg.K) if cfg.distill_target == "all" else (0,)
@@ -687,6 +757,12 @@ class _SequentialRoundOps:
             model = self.runner._local_train_scheduled(
                 state.global_models[e.group], e.cid, state, e.idx,
                 control_out=self._ctrl_out)
+            if rf is not None and e.cid in rf.attacked:
+                # Byzantine upload: finite, guard-passing perturbation of
+                # the honest update around the group's round-start model
+                model = faults_lib.attack_model(
+                    rf.plan, self.t, e.cid, model,
+                    state.global_models[e.group])
             if rf is not None and e.cid in rf.corrupt:
                 model = faults_lib.poison_model(model)
             self.models[e.pos] = model
@@ -721,6 +797,8 @@ class _SequentialRoundOps:
     def aggregate(self) -> list[PyTree]:
         """Per-group Eq. 1-2 over the trained client models."""
         cfg, rf = self.runner.cfg, self.faults
+        if cfg.aggregator != "mean" or cfg.clip_norm is not None:
+            return self._aggregate_robust()
         if rf is None:
             new_globals: list[PyTree] = []
             for k in range(len(self.groups)):
@@ -761,6 +839,35 @@ class _SequentialRoundOps:
             rf, surv, self._rejected, degraded)
         return new_globals
 
+    def _aggregate_robust(self) -> list[PyTree]:
+        """Robust Eq. 2: stack the round's models client-major (dropped
+        clients carry a placeholder row under a False mask) and call the
+        SAME grouped entry point as the vectorized engine — one robust
+        code path, exercised identically by both engines."""
+        cfg, rf = self.runner.cfg, self.faults
+        if rf is None:
+            surv, mask = None, np.ones((len(self.entries),), bool)
+        else:
+            surv = self._survivors()
+            mask = np.asarray([(not e.dropped) and e.cid in surv
+                               for e in self.entries])
+        stacked = tree_stack([
+            self.models[e.pos] if self.models[e.pos] is not None
+            else self.state.global_models[e.group] for e in self.entries])
+        gids = np.asarray([e.group for e in self.entries])
+        sizes = [e.n for e in self.entries]
+        agg, degraded = robust_aggregate_grouped(
+            stacked, sizes, gids, len(self.groups),
+            aggregator=cfg.aggregator, trim_frac=cfg.trim_frac,
+            clip_norm=cfg.clip_norm, survivor_mask=mask,
+            fallback_stacked=tree_stack(self.state.global_models))
+        self.new_globals = vec_engine.unstack_models(agg)
+        self.degraded = degraded
+        if rf is not None:
+            self.fault_info = faults_lib.fault_record(
+                rf, surv, self._rejected, degraded)
+        return self.new_globals
+
     def push(self, t: int, state) -> None:
         state.ensemble.push(t, self.new_globals, degraded=self.degraded)
 
@@ -789,13 +896,21 @@ class _SequentialRoundOps:
         """The engine-native back-to-back KD block (the off-mode oracle)."""
         cfg, runner, state = self.runner.cfg, self.runner, self.state
         if cfg.ensemble_source == "clients":
-            return runner._distill_models(
-                new_globals, self._client_teachers_list(new_globals),
-                stacked=False)
+            teachers = self._client_teachers_list(new_globals)
+            if cfg.teacher_trust:
+                tstack = tree_stack(teachers)
+                return runner._distill_models(
+                    new_globals, tstack, stacked=True,
+                    teacher_weights=runner._teacher_trust_weights(
+                        state, tstack))
+            return runner._distill_models(new_globals, teachers,
+                                          stacked=False)
         if cfg.kd_pipeline == "fused":
             # fused path reads the (M, ...) stack straight off the bank
+            tstack = state.ensemble.members_stacked()
             return runner._distill_models(
-                new_globals, state.ensemble.members_stacked(), stacked=True)
+                new_globals, tstack, stacked=True,
+                teacher_weights=runner._teacher_trust_weights(state, tstack))
         return runner._distill_models(
             new_globals, state.ensemble.members(), stacked=False)
 
@@ -884,6 +999,16 @@ class _VectorizedRoundOps:
             stacked, gids, sizes, buckets = self.eng.train_round(
                 rplan, init_params_for, init_opt_state_for,
                 run_buckets=run_buckets)
+        if self.faults is not None and self.faults.attacked:
+            # Byzantine rows: same perturbation math as the sequential
+            # engine's attack_model, scattered into this subset's stack
+            # (rows are in `ents` order, post-reassembly)
+            atk = [(i, int(e.cid), e.group) for i, e in enumerate(ents)
+                   if e.cid in self.faults.attacked]
+            if atk:
+                stacked = faults_lib.attack_rows(
+                    self.faults.plan, self.t, stacked, atk,
+                    state.global_models)
         if self.faults is not None and self.faults.corrupt:
             # corruption strikes the upload, after training: poison the
             # stacked rows of this subset's corrupt clients (rows are in
@@ -947,20 +1072,35 @@ class _VectorizedRoundOps:
             cids = np.concatenate([r[4] for r in self.results])[inv]
         self.stacked_clients, self.sizes = stacked, sizes
         self.cids_round = cids
-        rf = self.faults
-        if rf is None:
+        rf, cfg = self.faults, self.runner.cfg
+        robust = cfg.aggregator != "mean" or cfg.clip_norm is not None
+        if rf is None and not robust:
             self.stacked_globals = vec_engine.aggregate_groups(
-                stacked, sizes, gids, self.runner.cfg.K)
-        else:
+                stacked, sizes, gids, cfg.K)
+        elif not robust:
             surv = self._survivors()
             mask = np.asarray([int(c) in surv for c in cids])
             self.stacked_globals, self.degraded = \
                 fedavg_aggregate_grouped_masked(
-                    stacked, sizes, gids, self.runner.cfg.K, mask,
+                    stacked, sizes, gids, cfg.K, mask,
                     tree_stack(self.state.global_models),
                     zero_fill=rf.plan.zero_fill)
             self.fault_info = faults_lib.fault_record(
                 rf, surv, self._rejected, self.degraded)
+        else:
+            if rf is None:
+                surv, mask = None, np.ones((len(cids),), bool)
+            else:
+                surv = self._survivors()
+                mask = np.asarray([int(c) in surv for c in cids])
+            self.stacked_globals, self.degraded = robust_aggregate_grouped(
+                stacked, sizes, gids, cfg.K, aggregator=cfg.aggregator,
+                trim_frac=cfg.trim_frac, clip_norm=cfg.clip_norm,
+                survivor_mask=mask,
+                fallback_stacked=tree_stack(self.state.global_models))
+            if rf is not None:
+                self.fault_info = faults_lib.fault_record(
+                    rf, surv, self._rejected, self.degraded)
         self.new_globals = vec_engine.unstack_models(self.stacked_globals)
         return self.new_globals
 
@@ -996,9 +1136,11 @@ class _VectorizedRoundOps:
             teacher_stack = self._client_teacher_stack(new_globals)
         else:
             teacher_stack = state.ensemble.members_stacked()
-        return runner._distill_models(new_globals, teacher_stack,
-                                      stacked=True,
-                                      stacked_students=self.stacked_globals)
+        return runner._distill_models(
+            new_globals, teacher_stack, stacked=True,
+            stacked_students=self.stacked_globals,
+            teacher_weights=runner._teacher_trust_weights(
+                state, teacher_stack))
 
     def kd_teachers(self, new_globals) -> PyTree:
         if self.runner.cfg.ensemble_source == "clients":

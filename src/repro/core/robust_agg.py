@@ -1,0 +1,236 @@
+"""Byzantine-robust Eq. 2 — order statistics over the client-stacked axis.
+
+PR 8's isfinite guard rejects NaN/Inf uploads, but a FINITE adversarial
+update (``faults.attack_model``) sails through a weighted mean: one
+sign-flipped client at ``attack_scale=10`` dominates a 6-client group
+aggregate.  This module replaces the per-group mean with statistics whose
+breakdown point is a constant fraction of the group, all computed over
+the same ``(C, ...)``-stacked pytree the vectorized engine already holds:
+
+  ``trimmed_mean``  coordinate-wise: sort the client axis, drop the
+                    ``ceil(trim_frac·n)`` lowest AND highest values per
+                    coordinate, mean the rest.  Defends ≤ trim_frac
+                    adversaries per group against any attack that moves
+                    coordinates toward an extreme (sign_flip, scale).
+  ``median``        coordinate-wise median — trimmed_mean's limit, ~50%
+                    breakdown, highest bias on clean heterogeneous data.
+  ``krum``          select the single update whose summed squared
+                    distance to its ``n − f − 2`` nearest peers is
+                    smallest (Blanchard et al.) — geometric, defends
+                    colluding/noise attacks that keep coordinates
+                    in-range (gauss), at the cost of discarding all but
+                    one client's work.
+  ``multi_krum``    average of the ``n − f`` best-scored updates — Krum's
+                    selection with most of the mean's variance reduction.
+  clip_norm         median-norm-ball clipping (optional, composes with
+                    every statistic INCLUDING mean): each survivor's
+                    update Δ vs the group's round-start model is scaled
+                    down to at most ``clip_norm × median survivor norm``
+                    before the statistic — bounds what any single client
+                    can move the aggregate, whatever direction it picks.
+
+Contracts shared with ``aggregation.fedavg_aggregate_grouped_masked``:
+robust statistics compose with the PR 8 survivor mask (order statistics
+over SURVIVORS only — rejected rows can't re-enter through a sort), an
+emptied group carries the previous global forward and is reported
+``degraded``, and ``aggregator="mean"`` delegates to the masked Eq. 2
+path verbatim so mean stays the bit-identical oracle (and mean+clip
+keeps |X_i| weighting).  The robust statistics themselves are UNWEIGHTED
+over clients: Eq. 2's |X_i| weights are client-reported numbers an
+adversary can lie about, so order statistics deliberately ignore them.
+
+Everything is a host loop over K groups dispatching vectorized jnp ops —
+aggregation happens once per round; no Pallas and no retracing concerns.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (
+    fedavg_aggregate_grouped_masked, survivor_group_weights,
+)
+
+PyTree = Any
+
+AGGREGATORS = ("mean", "trimmed_mean", "median", "krum", "multi_krum")
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def _byzantine_f(trim_frac: float, n: int) -> int:
+    """Assumed adversary count in a group of n: ceil(trim_frac·n), kept
+    below n so at least one client always survives the trim."""
+    return min(max(0, math.ceil(trim_frac * n)), n - 1)
+
+
+# ---------------------------------------------------------------------
+# per-group statistics over a (n, ...)-stacked pytree
+# ---------------------------------------------------------------------
+def _trimmed_mean(sub: PyTree, t: int) -> PyTree:
+    def stat(x):
+        if not _is_float(x):
+            return x[0]
+        n = x.shape[0]
+        xs = jnp.sort(x.astype(jnp.float32), axis=0)
+        if 2 * t >= n:  # nothing left after the trim — degrade to median
+            return jnp.median(xs, axis=0).astype(x.dtype)
+        lo, hi = t, n - t
+        return jnp.mean(xs[lo:hi], axis=0).astype(x.dtype)
+    return jax.tree.map(stat, sub)
+
+
+def _median(sub: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x: jnp.median(x.astype(jnp.float32), axis=0).astype(x.dtype)
+        if _is_float(x) else x[0], sub)
+
+
+def _flatten_rows(sub: PyTree) -> jnp.ndarray:
+    """(n, P) f32 — all floating leaves of each client flattened."""
+    rows = [x.reshape(x.shape[0], -1).astype(jnp.float32)
+            for x in jax.tree.leaves(sub) if _is_float(x)]
+    return jnp.concatenate(rows, axis=1)
+
+
+def _krum_scores(flat: jnp.ndarray, f: int) -> jnp.ndarray:
+    """(n,) Krum scores: sum of each row's n−f−2 smallest squared
+    distances to the other rows (smaller = better-supported update)."""
+    n = flat.shape[0]
+    sq = jnp.sum(flat * flat, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
+    d2 = jnp.maximum(d2, 0.0)
+    d2 = d2.at[jnp.arange(n), jnp.arange(n)].set(jnp.inf)
+    m = max(1, n - f - 2)
+    return jnp.sort(d2, axis=1)[:, :m].sum(axis=1)
+
+
+def _krum(sub: PyTree, f: int, multi: bool) -> PyTree:
+    leaves = jax.tree.leaves(sub)
+    n = leaves[0].shape[0]
+    if n == 1:
+        return jax.tree.map(lambda x: x[0], sub)
+    scores = _krum_scores(_flatten_rows(sub), f)
+    if not multi:
+        sel = int(np.asarray(jnp.argmin(scores)))
+        return jax.tree.map(lambda x: x[sel], sub)
+    keep = max(1, n - f)
+    best = jnp.argsort(scores)[:keep]
+    return jax.tree.map(
+        lambda x: jnp.mean(x[best].astype(jnp.float32), axis=0
+                           ).astype(x.dtype) if _is_float(x) else x[0], sub)
+
+
+# ---------------------------------------------------------------------
+# median-norm-ball clipping (pre-statistic, composes with all of them)
+# ---------------------------------------------------------------------
+def clip_to_median_norm(stacked: PyTree, group_ids, num_groups: int,
+                        survivor_mask, ref_stacked: PyTree,
+                        clip_norm: float) -> PyTree:
+    """Clip each survivor's update onto its group's median-norm ball.
+
+    Row c's update is Δ_c = w_c − ref[group(c)]; any Δ with
+    ‖Δ‖ > clip_norm · median_{survivors in group}(‖Δ‖) is scaled down onto
+    that radius.  With every survivor honest the median norm tracks the
+    honest update scale and (for clip_norm ≥ 1) nothing moves; a blown-up
+    adversarial update gets its influence capped at clip_norm× a typical
+    honest client before the aggregation statistic ever sees it.
+    """
+    gid = np.asarray(group_ids)
+    mask = np.asarray(survivor_mask, bool)
+    gidj = jnp.asarray(gid, jnp.int32)
+    refrows = jax.tree.map(lambda r: r[gidj], ref_stacked)
+    n2 = None
+    for x, r in zip(jax.tree.leaves(stacked), jax.tree.leaves(refrows)):
+        if not _is_float(x):
+            continue
+        d = (x.astype(jnp.float32) - r.astype(jnp.float32)
+             ).reshape(x.shape[0], -1)
+        s = jnp.sum(d * d, axis=1)
+        n2 = s if n2 is None else n2 + s
+    if n2 is None:
+        return stacked
+    norms = np.asarray(jnp.sqrt(n2), np.float64)
+    factor = np.ones_like(norms)
+    for k in range(num_groups):
+        rows = np.nonzero((gid == k) & mask)[0]
+        if not len(rows):
+            continue
+        radius = clip_norm * float(np.median(norms[rows]))
+        nz = rows[norms[rows] > max(radius, 1e-12)]
+        factor[nz] = radius / norms[nz]
+    if (factor >= 1.0).all():
+        return stacked
+    fj = jnp.asarray(factor, jnp.float32)
+    return jax.tree.map(
+        lambda x, r: (r.astype(jnp.float32)
+                      + (x.astype(jnp.float32) - r.astype(jnp.float32))
+                      * fj.reshape((-1,) + (1,) * (x.ndim - 1))
+                      ).astype(x.dtype) if _is_float(x) else x,
+        stacked, refrows)
+
+
+# ---------------------------------------------------------------------
+# the grouped entry point (mirror of fedavg_aggregate_grouped_masked)
+# ---------------------------------------------------------------------
+def robust_aggregate_grouped(
+        stacked: PyTree, num_samples, group_ids, num_groups: int, *,
+        aggregator: str = "mean", trim_frac: float = 0.2,
+        clip_norm: Optional[float] = None, survivor_mask=None,
+        fallback_stacked: Optional[PyTree] = None,
+        ) -> tuple[PyTree, list[int]]:
+    """Robust Eq. 2 for all K groups; returns (aggregate, degraded).
+
+    Same contract as ``fedavg_aggregate_grouped_masked``: ``stacked``
+    leaves are (C, ...), ``group_ids`` maps rows to groups, non-survivor
+    rows are excluded from every statistic, and a group left with no
+    survivors takes its row from ``fallback_stacked`` and lands in the
+    returned ``degraded`` list.  ``aggregator="mean"`` (with or without
+    ``clip_norm``) delegates to the masked weighted-mean path, keeping
+    mean the bit-identical oracle; the order statistics are unweighted.
+    """
+    if aggregator not in AGGREGATORS:
+        raise ValueError(f"unknown aggregator {aggregator!r}; "
+                         f"pick one of {AGGREGATORS}")
+    gid = np.asarray(group_ids)
+    if survivor_mask is None:
+        survivor_mask = np.ones((len(gid),), bool)
+    mask = np.asarray(survivor_mask, bool)
+    _, _, empty = survivor_group_weights(num_samples, gid, num_groups, mask)
+    if empty and fallback_stacked is None:
+        raise ValueError(f"groups {empty} have no surviving clients and no "
+                         "fallback_stacked was provided to carry forward")
+    if clip_norm is not None:
+        ref = fallback_stacked
+        if ref is None:
+            raise ValueError("clip_norm needs fallback_stacked (the round-"
+                             "start globals) as the update reference point")
+        stacked = clip_to_median_norm(stacked, gid, num_groups, mask, ref,
+                                      clip_norm)
+    if aggregator == "mean":
+        return fedavg_aggregate_grouped_masked(
+            stacked, num_samples, gid, num_groups, mask, fallback_stacked)
+
+    per_group = []
+    for k in range(num_groups):
+        if k in empty:
+            per_group.append(jax.tree.map(lambda x: x[k], fallback_stacked))
+            continue
+        rows = jnp.asarray(np.nonzero((gid == k) & mask)[0], jnp.int32)
+        sub = jax.tree.map(lambda x: jnp.take(x, rows, axis=0), stacked)
+        n = int(rows.shape[0])
+        f = _byzantine_f(trim_frac, n)
+        if aggregator == "trimmed_mean":
+            per_group.append(_trimmed_mean(sub, f))
+        elif aggregator == "median":
+            per_group.append(_median(sub))
+        else:
+            per_group.append(_krum(sub, f, multi=aggregator == "multi_krum"))
+    agg = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+    return agg, empty

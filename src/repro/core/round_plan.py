@@ -83,6 +83,7 @@ class PendingKD:
     #                                 safe across later in-place bank pushes)
     record: dict                    # round t's history record, patched late
     dispatched: Optional[Any] = None
+    teacher_weights: Optional[Any] = None   # (M,) trust weights or None
 
     def result(self) -> tuple:
         if isinstance(self.dispatched, cf.Future):
@@ -105,13 +106,17 @@ def spill_pending_kd(directory: str, pending: PendingKD) -> str:
     from repro.fedckpt.checkpointer import save_json, save_pytree
     path = os.path.join(directory,
                         f"pending_kd_r{pending.round_idx:05d}.npz")
-    save_pytree(path, {"student": pending.student,
-                       "teachers": pending.teachers})
+    tree = {"student": pending.student, "teachers": pending.teachers}
+    if pending.teacher_weights is not None:
+        tree["teacher_weights"] = jnp.asarray(pending.teacher_weights,
+                                              jnp.float32)
+    save_pytree(path, tree)
     meta = {
         "round_idx": pending.round_idx,
         "record": {k: v for k, v in pending.record.items()},
         "num_teachers": int(
             jax.tree.leaves(pending.teachers)[0].shape[0]),
+        "has_teacher_weights": pending.teacher_weights is not None,
     }
     save_json(path.replace(".npz", ".json"), meta)
     return path
@@ -132,10 +137,15 @@ def restore_pending_kd(path: str, student_like: PyTree) -> PendingKD:
         "teachers": jax.tree.map(
             lambda x: jnp.zeros((m,) + x.shape, jnp.float32), student_like),
     }
+    # sidecars from before trust weighting have no flag — restore as None
+    has_w = bool(meta.get("has_teacher_weights", False))
+    if has_w:
+        like["teacher_weights"] = jnp.zeros((m,), jnp.float32)
     tree = load_pytree(path, like)
     return PendingKD(round_idx=int(meta["round_idx"]),
                      student=tree["student"], teachers=tree["teachers"],
-                     record=dict(meta["record"]))
+                     record=dict(meta["record"]),
+                     teacher_weights=tree.get("teacher_weights"))
 
 
 class FusedKDLocalProgram:
@@ -153,19 +163,36 @@ class FusedKDLocalProgram:
         self.engine = engine
         self._fns: dict[int, Any] = {}
 
-    def __call__(self, student, teachers, batches, bucket_args):
-        n = len(bucket_args)
+    def __call__(self, student, teachers, batches, bucket_args,
+                 weights=None):
+        # trust-weighted and uniform cache builds are distinct compiled
+        # programs (jnp.mean vs weighted einsum are not bit-identical) —
+        # key the cache on both the bucket count and the weights' presence
+        n = (len(bucket_args), weights is not None)
         if n not in self._fns:
             pipe, engine = self.pipe, self.engine
 
-            def prog(student, teachers, batches, bargs):
-                cache = pipe.precompute_cache(teachers, batches)
-                st, losses = pipe._scan_fn(False)(student, batches, cache)
-                outs = [engine.scan_fn()(*a) for a in bargs]
-                return st, losses, outs
+            if weights is None:
+                def prog(student, teachers, batches, bargs):
+                    cache = pipe.precompute_cache(teachers, batches)
+                    st, losses = pipe._scan_fn(False)(student, batches,
+                                                      cache)
+                    outs = [engine.scan_fn()(*a) for a in bargs]
+                    return st, losses, outs
+            else:
+                def prog(student, teachers, batches, bargs, w):
+                    cache = pipe.precompute_cache(teachers, batches,
+                                                  weights=w)
+                    st, losses = pipe._scan_fn(False)(student, batches,
+                                                      cache)
+                    outs = [engine.scan_fn()(*a) for a in bargs]
+                    return st, losses, outs
 
             self._fns[n] = jax.jit(prog)
-        return self._fns[n](student, teachers, batches, list(bucket_args))
+        args = (student, teachers, batches, list(bucket_args))
+        if weights is not None:
+            args += (jnp.asarray(weights, jnp.float32),)
+        return self._fns[n](*args)
 
 
 class RoundExecutor:
@@ -213,7 +240,7 @@ class RoundExecutor:
             pipe, batches = self._pipe(), self.runner.task.server_batches
             pending.dispatched = self._worker.submit(
                 pipe.distill_async, pending.student, pending.teachers,
-                batches)
+                batches, teacher_weights=pending.teacher_weights)
 
     def resolve_pending(self, state) -> None:
         """Block on the deferred KD and install its output as the main
@@ -224,6 +251,11 @@ class RoundExecutor:
         self.dispatch(pending)
         student, losses = pending.result()
         pending.record.update(self._pipe().losses_info(losses))
+        if pending.teacher_weights is not None:
+            import numpy as _np
+            pending.record["teacher_trust"] = [
+                round(float(w), 4)
+                for w in _np.asarray(pending.teacher_weights)]
         state.global_models[0] = student
         state.last_distilled = (pending.round_idx, student)
         if self.runner.task.eval_fn is not None:
@@ -288,7 +320,8 @@ class RoundExecutor:
 
             def run_buckets(bucket_args):
                 st, losses, outs = fused(pending.student, pending.teachers,
-                                         batches, bucket_args)
+                                         batches, bucket_args,
+                                         weights=pending.teacher_weights)
                 pending.dispatched = (st, losses)
                 return outs
 
@@ -310,9 +343,12 @@ class RoundExecutor:
         if self.kd_active(t):
             # emit round t's KD as a pending job; async dispatches NOW so
             # the program overlaps the host-side planning of round t+1 too
+            teachers = ops.kd_teachers(new_globals)
             state.pending_kd = PendingKD(
                 round_idx=t, student=new_globals[0],
-                teachers=ops.kd_teachers(new_globals), record=rec)
+                teachers=teachers, record=rec,
+                teacher_weights=self.runner._teacher_trust_weights(
+                    state, teachers))
             if cfg.overlap == "async":
                 self.dispatch(state.pending_kd)
         elif task.eval_fn is not None:

@@ -81,6 +81,14 @@ from repro.utils.pytree import tree_cast, tree_stack
 PyTree = Any
 LogitsFn = Callable[[PyTree, Any], jnp.ndarray]
 
+# trust-weight policy knobs (``KDPipeline.trust_weights``): a teacher
+# whose normalized agreement weight falls below TRUST_FLOOR × uniform is
+# cut to exactly zero (a Byzantine teacher must contribute NOTHING, not
+# merely little); bank slots flagged degraded (carried-forward groups)
+# are discounted before normalization.
+TRUST_FLOOR = 0.1
+TRUST_DEGRADED_DISCOUNT = 0.5
+
 
 def stack_server_batches(batches: Sequence[Any]) -> PyTree:
     """Server batch list -> one device pytree with leaves (n_batches, B, ...).
@@ -150,6 +158,8 @@ class KDPipeline:
         self.tile_v = tile_v
         self._probs_fn = None
         self._cache_fn = None
+        self._cache_fn_w = None     # trust-weighted cache build
+        self._trust_fn = None       # cross-teacher agreement weights
         self._scan_fns: dict[bool, Callable] = {}
         self._step_fns: dict[bool, Callable] = {}
         self._batches: PyTree | None = None
@@ -182,12 +192,19 @@ class KDPipeline:
         from repro.launch.mesh import use_shard_map
         return use_shard_map(self.mesh, self.teacher_sharding)
 
-    def _build_precompute(self, kind: str):
+    def _build_precompute(self, kind: str, weighted: bool = False):
         """Jitted per-round teacher pass.  ``kind="probs"`` is the dense
         oracle view (unpadded f32 ensemble probs); ``kind="cache"`` is the
         tensor the step bodies consume — identical for dense (plus the
         build-time lane pad on the Pallas path), the compressed
-        ``cache_dtype`` mean-logit tensor for flash."""
+        ``cache_dtype`` mean-logit tensor for flash.
+
+        ``weighted=True`` compiles the trust-weighted variant: Eq. 3's
+        uniform mean logit becomes a convex combination Σ_m w_m·z_m
+        (weights normalized inside the program), so a zero-weight teacher
+        drops out of the KD target exactly.  A SEPARATE compiled program
+        on purpose: ``jnp.mean`` and a uniform-weight einsum are not
+        bit-identical, and trust-off must stay byte-equal to PR 8."""
         assert kind in ("probs", "cache")
         logits_fn, tau = self.logits_fn, self.temperature
         as_logits = kind == "cache" and self.kd_kernel == "flash"
@@ -198,7 +215,7 @@ class KDPipeline:
         cache_dtype = self.cache_dtype
         if not self._shard_teachers():
             @jax.jit
-            def pre(ts, bs):
+            def pre(ts, bs, w=None):
                 # f32 compute regardless of bank storage dtype: bf16-held
                 # members upcast at the forward boundary (XLA fuses the
                 # cast; only the ring stays half-width)
@@ -206,6 +223,15 @@ class KDPipeline:
                 lg = jax.vmap(lambda p: jax.vmap(
                     lambda b: logits_fn(p, b))(bs))(ts)        # (M, nB, B, V)
                 lg = lg.astype(jnp.float32)
+                if w is not None:
+                    wn = w.astype(jnp.float32)
+                    wn = wn / jnp.maximum(wn.sum(), 1e-12)
+                    mean = jnp.einsum("m,mnbv->nbv", wn, lg)
+                    if as_logits:
+                        data = mean.astype(cache_dtype)
+                        return data, kd_ops.teacher_cache_lse(data, tau)
+                    return kd_ops.ensemble_softmax_many(mean[None], tau,
+                                                        keep_pad=keep_pad)
                 if as_logits:
                     data = jnp.mean(lg, axis=0).astype(cache_dtype)
                     # the f32 normalizer residual rides with the cache:
@@ -215,6 +241,8 @@ class KDPipeline:
                 return kd_ops.ensemble_softmax_many(lg, tau,
                                                     keep_pad=keep_pad)
 
+            if weighted:
+                return jax.jit(lambda ts, bs, w: pre(ts, bs, w))
             return pre
 
         from repro.launch.mesh import mesh_size
@@ -236,16 +264,26 @@ class KDPipeline:
                             out_specs=P(), check_rep=False)
 
         @jax.jit
-        def pre(ts, bs):
+        def pre(ts, bs, w=None):
             M = jax.tree.leaves(ts)[0].shape[0]
             pad = (-M) % n_dev
-            mask = (jnp.arange(M + pad) < M).astype(jnp.float32)
+            if w is None:
+                mask = (jnp.arange(M + pad) < M).astype(jnp.float32)
+            else:
+                # normalized trust weights ride the per-member mask lane:
+                # the psum'd weighted sum IS the weighted mean (Σw = 1),
+                # so the /M renormalization is skipped below
+                wn = w.astype(jnp.float32)
+                wn = wn / jnp.maximum(wn.sum(), 1e-12)
+                mask = jnp.concatenate([wn, jnp.zeros((pad,), jnp.float32)])
             if pad:  # replicate row 0, zero-masked: exact no-op members
                 ts = jax.tree.map(
                     lambda x: jnp.concatenate(
                         [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]),
                     ts)
-            mean = sharded(ts, mask, bs) / M                   # (nB, B, V)
+            mean = sharded(ts, mask, bs)                       # (nB, B, V)
+            if w is None:
+                mean = mean / M
             if as_logits:
                 # the psum'd logit-sum/M IS the flash cache representation
                 data = mean.astype(cache_dtype)
@@ -254,6 +292,8 @@ class KDPipeline:
             return kd_ops.ensemble_softmax_many(mean[None], tau,
                                                 keep_pad=keep_pad)
 
+        if weighted:
+            return jax.jit(lambda ts, bs, w: pre(ts, bs, w))
         return pre
 
     def precompute_teacher_probs(self, teacher_stack: PyTree,
@@ -271,8 +311,8 @@ class KDPipeline:
             self._probs_fn = self._build_precompute("probs")
         return self._probs_fn(teacher_stack, batches)
 
-    def precompute_cache(self, teacher_stack: PyTree,
-                         batches: PyTree) -> PyTree:
+    def precompute_cache(self, teacher_stack: PyTree, batches: PyTree,
+                         weights=None) -> PyTree:
         """The per-round teacher tensor the KD step bodies consume:
         the ``(n_batches, B, Vc)`` f32 prob tensor for
         ``kd_kernel="dense"`` (lane-padded on the Pallas path); for
@@ -281,8 +321,18 @@ class KDPipeline:
         dense cache bytes) plus its tiny ``(n_batches, B)`` f32
         normalizer residual — at the TRUE vocab width on every path
         (ragged tails are masked inside the flash kernels, never
-        padded)."""
-        return self._ensure_cache_fn()(teacher_stack, batches)
+        padded).
+
+        ``weights`` (optional, (M,) per-teacher trust weights) swaps
+        Eq. 3's uniform mean logit for the weighted combination — the
+        trust-filtered ensemble target.  ``weights=None`` keeps the
+        bit-identical uniform program."""
+        if weights is None:
+            return self._ensure_cache_fn()(teacher_stack, batches)
+        if self._cache_fn_w is None:
+            self._cache_fn_w = self._build_precompute("cache", weighted=True)
+        return self._cache_fn_w(teacher_stack, batches,
+                                jnp.asarray(weights, jnp.float32))
 
     def _ensure_cache_fn(self):
         if self._cache_fn is None:
@@ -295,6 +345,67 @@ class KDPipeline:
             else:
                 self._cache_fn = self._build_precompute("cache")
         return self._cache_fn
+
+    # ------------------------------------------------- teacher trust weights
+    def trust_weights(self, teacher_stack: PyTree,
+                      server_batches: Sequence[Any],
+                      degraded_mask=None) -> jnp.ndarray:
+        """(M,) per-teacher trust weights from cross-teacher agreement.
+
+        Each teacher's τ-softmax on the probe batch (the first server
+        batch — unlabeled, already resident) is compared to the ensemble
+        CONSENSUS, the coordinate-wise median over teachers: a poisoned
+        or stale member disagrees with the majority everywhere, an honest
+        member tracks it.  Disagreement d_m = mean KL(p_m ‖ consensus) is
+        self-normalized by the median disagreement (honest heterogeneity
+        sets the scale, so clean rounds keep near-uniform weights), mapped
+        through w = min(exp(1 − d/median(d)), 1), discounted ×
+        ``TRUST_DEGRADED_DISCOUNT`` for bank slots flagged degraded
+        (``degraded_mask``), normalized, and hard-floored: anything below
+        ``TRUST_FLOOR``× uniform is cut to exactly 0 so a Byzantine
+        teacher contributes NOTHING to Eq. 3, not merely little.
+
+        Majority logic: the median consensus needs M ≥ 3 to identify a
+        minority liar; at M ≤ 2 agreement is symmetric and only the
+        degraded discount can break the tie.
+        """
+        batches = self.batches_for(server_batches)
+        if self._trust_fn is None:
+            logits_fn, tau = self.logits_fn, self.temperature
+
+            @jax.jit
+            def tw(ts, bs, discount):
+                ts = tree_cast(ts, jnp.float32)
+                probe = jax.tree.map(lambda x: x[0], bs)
+                lg = jax.vmap(lambda p: logits_fn(p, probe))(ts)  # (M, B, V)
+                p = jax.nn.softmax(lg.astype(jnp.float32) / tau, axis=-1)
+                cons = jnp.median(p, axis=0)
+                cons = cons / jnp.maximum(
+                    cons.sum(-1, keepdims=True), 1e-12)
+                eps = 1e-12
+                kl = jnp.sum(p * (jnp.log(p + eps) - jnp.log(cons + eps)),
+                             axis=-1)                             # (M, B)
+                d = kl.mean(axis=-1)                              # (M,)
+                scale = jnp.median(d) + 1e-12
+                w = jnp.minimum(jnp.exp(1.0 - d / scale), 1.0) * discount
+                m = w.shape[0]
+                s = w.sum()
+                w = jnp.where(s > 0, w / jnp.maximum(s, 1e-12),
+                              jnp.full_like(w, 1.0 / m))
+                w = jnp.where(w < TRUST_FLOOR / m, 0.0, w)
+                s2 = w.sum()
+                return jnp.where(s2 > 0, w / jnp.maximum(s2, 1e-12),
+                                 jnp.full_like(w, 1.0 / m))
+
+            self._trust_fn = tw
+        m = jax.tree.leaves(teacher_stack)[0].shape[0]
+        discount = np.ones((m,), np.float32)
+        if degraded_mask is not None:
+            discount = np.where(np.asarray(degraded_mask, bool),
+                                TRUST_DEGRADED_DISCOUNT, 1.0
+                                ).astype(np.float32)
+        return self._trust_fn(teacher_stack, batches,
+                              jnp.asarray(discount))
 
     def cache_nbytes(self, teacher_stack: PyTree, batches: PyTree) -> int:
         """Device bytes of the round's teacher cache (the quantity the
@@ -426,15 +537,19 @@ class KDPipeline:
 
     def distill_async(self, student: PyTree, teacher_stack: PyTree,
                       server_batches: Sequence[Any],
-                      multi: bool = False) -> tuple[PyTree, jnp.ndarray]:
+                      multi: bool = False,
+                      teacher_weights=None) -> tuple[PyTree, jnp.ndarray]:
         """Dispatch the whole KD phase; NO host sync — returns device
         ``(student, losses)``.  Convert losses with ``losses_info`` when
         the result is actually needed (the overlap executor's resolve
         phase).  The device program starts immediately, so local training
         dispatched afterwards runs concurrently with it.
+        ``teacher_weights`` (optional (M,)) builds the trust-weighted
+        teacher cache instead of the uniform Eq. 3 mean.
         """
         batches = self.batches_for(server_batches)
-        cache = self.precompute_cache(teacher_stack, batches)
+        cache = self.precompute_cache(teacher_stack, batches,
+                                      weights=teacher_weights)
         if self.scan_capable():
             return self._scan_fn(multi)(student, batches, cache)
         return self._run_stepped(student, batches, cache, multi)
@@ -443,23 +558,28 @@ class KDPipeline:
         """The per-round kd record (ONE host sync) for async losses."""
         return self._info(losses)
 
-    def _dispatch(self, student, teacher_stack, server_batches, multi: bool):
+    def _dispatch(self, student, teacher_stack, server_batches, multi: bool,
+                  teacher_weights=None):
         student, losses = self.distill_async(student, teacher_stack,
-                                             server_batches, multi)
+                                             server_batches, multi,
+                                             teacher_weights=teacher_weights)
         return student, self._info(losses)
 
     def distill(self, student: PyTree, teacher_stack: PyTree,
-                server_batches: Sequence[Any]) -> tuple[PyTree, dict]:
+                server_batches: Sequence[Any],
+                teacher_weights=None) -> tuple[PyTree, dict]:
         """Single-student fused KD; the drop-in for ``distill_target='main'``."""
         return self._dispatch(student, teacher_stack, server_batches,
-                              multi=False)
+                              multi=False, teacher_weights=teacher_weights)
 
     def distill_all(self, students_stacked: PyTree, teacher_stack: PyTree,
-                    server_batches: Sequence[Any]) -> tuple[PyTree, dict]:
+                    server_batches: Sequence[Any],
+                    teacher_weights=None) -> tuple[PyTree, dict]:
         """All K students as one vmapped program (``distill_target='all'``);
         reported losses are the main model's (row 0)."""
         return self._dispatch(students_stacked, teacher_stack,
-                              server_batches, multi=True)
+                              server_batches, multi=True,
+                              teacher_weights=teacher_weights)
 
     def _info(self, losses) -> dict:
         losses = np.asarray(losses)             # ONE host sync per round

@@ -20,6 +20,7 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fedckpt.checkpointer import spill_members
 from repro.utils.pytree import tree_bytes, tree_stack, tree_unstack
@@ -180,6 +181,22 @@ class TeacherBank:
     def degraded_rounds(self) -> dict[int, tuple]:
         """round -> groups that carried forward that round (see ``push``)."""
         return dict(self._degraded)
+
+    def degraded_mask_stacked(self) -> np.ndarray | None:
+        """(M,) bool aligned with ``members_stacked`` rows: True where
+        member m is a group model that carried forward (degraded) in its
+        slot's round — the bank-side input to KD trust weighting (a
+        carried-forward teacher restates a STALE global; agreement alone
+        cannot always tell it from a fresh one).  Row order mirrors the
+        gather: slots newest-first, K group models contiguous per slot."""
+        order = self._slots_newest_first()
+        if not order:
+            return None
+        mask = []
+        for s in order:
+            bad = set(self._degraded.get(int(self._slot_rounds[s]), ()))
+            mask.extend(k in bad for k in range(self.K))
+        return np.asarray(mask, bool)
 
     # -------------------------------------------- crash-safe resume hooks
     def bank_like(self, member_like: PyTree) -> PyTree:

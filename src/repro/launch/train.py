@@ -125,6 +125,34 @@ def main() -> None:
                     help="ablation: aggregate dropouts as zero weight "
                          "WITHOUT survivor renormalization (the naive "
                          "baseline bench_faults gates against)")
+    # Byzantine layer: finite adversarial uploads + robust Eq. 2 defense
+    ap.add_argument("--attack", default="none",
+                    choices=["none", "sign_flip", "scale", "gauss"],
+                    help="Byzantine attack mode for adversarial clients "
+                         "(finite uploads that PASS the isfinite guard; "
+                         "defend with --aggregator / --clip-norm)")
+    ap.add_argument("--attack-rate", type=float, default=0.0,
+                    help="per-round P(surviving client is adversarial)")
+    ap.add_argument("--attack-scale", type=float, default=10.0,
+                    help="attack magnitude (update multiplier / noise std)")
+    ap.add_argument("--aggregator", default="mean",
+                    choices=["mean", "trimmed_mean", "median", "krum",
+                             "multi_krum"],
+                    help="group aggregation statistic (core/robust_agg): "
+                         "mean = paper Eq. 2 (the oracle); the others are "
+                         "Byzantine-robust order statistics")
+    ap.add_argument("--trim-frac", type=float, default=0.2,
+                    help="assumed per-group adversary fraction for "
+                         "trimmed_mean/krum (trim depth / Krum's f)")
+    ap.add_argument("--clip-norm", type=float, default=None,
+                    help="clip client updates onto this multiple of the "
+                         "group's median update norm before aggregating "
+                         "(composes with any --aggregator)")
+    ap.add_argument("--teacher-trust", action="store_true",
+                    help="weight the KD teacher ensemble by cross-teacher "
+                         "agreement + degraded-slot bookkeeping, zeroing "
+                         "poisoned/stale teachers out of Eq. 3 (fused "
+                         "pipeline only)")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args()
 
@@ -140,15 +168,19 @@ def main() -> None:
     plan = None
     if args.faults or any(r > 0 for r in (
             args.dropout_rate, args.straggler_rate, args.corrupt_rate,
-            args.spill_fail_rate)):
+            args.spill_fail_rate, args.attack_rate)):
         plan = FaultPlan(
             seed=args.seed if args.fault_seed is None else args.fault_seed,
             dropout=args.dropout_rate, straggler=args.straggler_rate,
             straggler_frac=args.straggler_frac, corrupt=args.corrupt_rate,
+            attack=args.attack, attack_rate=args.attack_rate,
+            attack_scale=args.attack_scale,
             spill_fail=args.spill_fail_rate, zero_fill=args.zero_fill)
 
     runner = make_runner(
         args.preset, task, faults=plan,
+        aggregator=args.aggregator, trim_frac=args.trim_frac,
+        clip_norm=args.clip_norm, teacher_trust=args.teacher_trust,
         num_clients=args.clients, participation=args.participation,
         rounds=args.rounds, local_epochs=args.local_epochs,
         distill_steps=args.distill_steps, seed=args.seed,
@@ -187,9 +219,21 @@ def main() -> None:
             msg += f" acc={rec['acc_main']:.4f}"
         if rec.get("kd_loss_last") is not None:
             msg += f" kd={rec['kd_loss_last']:.4f}"
+        # fault/attack/degradation telemetry: every defense layer's
+        # round-level ruling surfaces here, not only in history rows
+        if rec.get("survivors") is not None:
+            msg += f" survivors={len(rec['survivors'])}"
         if rec.get("dropped") or rec.get("rejected"):
             msg += (f" dropped={len(rec.get('dropped', []))}"
                     f" rejected={len(rec.get('rejected', []))}")
+        if rec.get("attacked"):
+            msg += f" attacked={len(rec['attacked'])}"
+        if rec.get("degraded_groups"):
+            msg += f" degraded_groups={rec['degraded_groups']}"
+        if rec.get("teacher_trust") is not None:
+            tw = rec["teacher_trust"]
+            msg += (f" trust=[{', '.join(f'{w:.2f}' for w in tw)}]"
+                    f" filtered={sum(1 for w in tw if w == 0.0)}")
         print(msg, flush=True)
         if ckpt:
             if state.pending_kd is None:

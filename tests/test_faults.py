@@ -9,6 +9,12 @@ The chaos contract (core/faults.py):
     records the degraded round;
   * corrupted (non-finite) uploads are rejected before aggregation AND
     before their SCAFFOLD control commits;
+  * Byzantine attack modes (sign_flip / scale / gauss) poison uploads
+    with FINITE values — past the isfinite guard, countered only by the
+    robust aggregators — and the attack draws extend the per-client rng
+    stream as a PREFIX, so pre-attack traces replay unchanged;
+  * trust-weighted KD down-weights teachers that disagree with the
+    ensemble consensus (a poisoned teacher slot gets weight ~0);
   * fedckpt I/O failures retry with backoff; a kill + restart over the
     same checkpoint directory reproduces the uninterrupted run.
 """
@@ -21,7 +27,7 @@ import numpy as np
 import pytest
 
 from repro.core.faults import (
-    FaultPlan, apply_round_faults, finite_rows, poison_rows,
+    FaultPlan, apply_round_faults, attack_model, finite_rows, poison_rows,
 )
 from repro.core.fedsdd import make_runner
 from repro.core.tasks import classification_task
@@ -29,7 +35,7 @@ from repro.fedckpt import checkpointer as fedckpt
 from repro.fedckpt.checkpointer import Checkpointer, save_pytree, load_pytree
 
 FAULT_KEYS = ("survivors", "dropped", "stragglers", "rejected",
-              "degraded_groups")
+              "attacked", "degraded_groups")
 
 
 def _task(n=6, seed=0):
@@ -90,6 +96,89 @@ def test_finite_rows_flags_poisoned_clients():
     np.testing.assert_array_equal(finite_rows(stacked), np.ones(4, bool))
 
 
+# ------------------------------------------------------------ attack modes
+def test_attack_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(seed=0, attack="evil", attack_rate=0.1).validate()
+    with pytest.raises(ValueError):
+        FaultPlan(seed=0, attack="none", attack_rate=0.1).validate()
+    with pytest.raises(ValueError):
+        FaultPlan(seed=0, attack="sign_flip", attack_rate=1.5).validate()
+    with pytest.raises(ValueError):
+        FaultPlan(seed=0, attack="sign_flip", attack_rate=0.1,
+                  attack_scale=0.0).validate()
+    FaultPlan(seed=0, attack="sign_flip", attack_rate=0.2).validate()
+    # a mode with rate zero is inert, not invalid (CLI sets mode first)
+    FaultPlan(seed=0, attack="sign_flip", attack_rate=0.0).validate()
+    assert not FaultPlan(seed=0, attack="sign_flip",
+                         attack_rate=0.0).active
+    assert FaultPlan(seed=0, attack="gauss", attack_rate=0.1).active
+
+
+def test_attack_draws_extend_rng_stream_as_prefix():
+    """Adding attack fields to a plan must not perturb the PR 8 draws:
+    the per-client uniforms are one PCG64 stream read in order, so the
+    dropout/straggler/corrupt coins are a stable prefix."""
+    base = FaultPlan(seed=6, dropout=0.3, straggler=0.4, corrupt=0.2)
+    ext = FaultPlan(seed=6, dropout=0.3, straggler=0.4, corrupt=0.2,
+                    attack="sign_flip", attack_rate=0.0)
+    for t in range(1, 4):
+        for c in range(16):
+            a, b = base.client_faults(t, c), ext.client_faults(t, c)
+            assert a == b  # rate-zero attack: identical tuple, attacked False
+            assert not b[3]
+
+
+def test_attacked_excludes_dropped_and_corrupt():
+    plan = FaultPlan(seed=2, dropout=0.4, corrupt=0.4,
+                     attack="sign_flip", attack_rate=1.0)
+    seen_attack = False
+    for t in range(1, 5):
+        for c in range(16):
+            dropped, _, corrupt, attacked, _ = plan.client_faults(t, c)
+            if dropped or corrupt:
+                assert not attacked
+            else:
+                assert attacked  # rate 1.0: every eligible client attacks
+                seen_attack = True
+    assert seen_attack
+
+
+def test_straggler_severity_heterogeneous_and_bounded():
+    plan = FaultPlan(seed=3, straggler=1.0, straggler_frac=0.2)
+    sev = [plan.client_faults(1, c)[4] for c in range(32)]
+    assert all(0.2 <= s < 1.0 for s in sev)
+    assert len(set(round(s, 6) for s in sev)) > 8  # genuinely per-client
+    # deterministic: same (seed, round, cid) -> same severity
+    assert sev == [plan.client_faults(1, c)[4] for c in range(32)]
+
+
+def test_attack_model_semantics_finite_and_exact():
+    plan = FaultPlan(seed=0, attack="sign_flip", attack_rate=1.0,
+                     attack_scale=10.0)
+    ref = {"w": jnp.asarray([1.0, -2.0, 0.5]), "b": jnp.zeros(2)}
+    model = {"w": jnp.asarray([1.5, -1.0, 0.5]), "b": jnp.ones(2)}
+    out = attack_model(plan, 3, 7, model, ref)
+    # sign_flip reflects the update through the round-start global:
+    # ref - scale * (model - ref), exactly, leaf by leaf
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray([-4.0, -12.0, 0.5]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]), -10.0 * np.ones(2),
+                               rtol=1e-6)
+    assert finite_rows(jax.tree.map(lambda x: x[None], out))[0]
+
+    # gauss is deterministic per (seed, round, cid) and finite
+    gplan = FaultPlan(seed=0, attack="gauss", attack_rate=1.0,
+                      attack_scale=2.0)
+    g1 = attack_model(gplan, 3, 7, model, ref)
+    g2 = attack_model(gplan, 3, 7, model, ref)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    g3 = attack_model(gplan, 3, 8, model, ref)
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g3)))
+
+
 # ----------------------------------------------------- chaos-off invariant
 @pytest.mark.parametrize("execution", ["sequential", "vectorized"])
 def test_zero_rate_plan_bit_identical(execution):
@@ -116,6 +205,62 @@ def test_fault_trace_and_models_match_across_engines():
     assert any(r["dropped"] or r["rejected"] or r["stragglers"]
                for r in _trace(seq))
     _assert_trees_equal(seq.global_models, vec.global_models, exact=False)
+
+
+def test_attack_trace_and_models_match_across_engines():
+    """Both engines apply the SAME attacks to the SAME clients and the
+    robust aggregate agrees — the chaos determinism contract extended to
+    Byzantine rounds."""
+    plan = FaultPlan(seed=1, attack="sign_flip", attack_rate=0.4,
+                     attack_scale=5.0)
+    kw = dict(num_clients=6, rounds=2, local_epochs=1, distill_steps=2,
+              seed=0, faults=plan, aggregator="trimmed_mean",
+              trim_frac=0.34)
+    seq = make_runner("fedavg", _task(), execution="sequential", **kw).run()
+    vec = make_runner("fedavg", _task(), execution="vectorized", **kw).run()
+    assert _trace(seq) == _trace(vec)
+    assert any(r["attacked"] for r in _trace(seq))
+    _assert_trees_equal(seq.global_models, vec.global_models, exact=False)
+
+
+@pytest.mark.parametrize("execution", ["sequential", "vectorized"])
+def test_mean_with_attack_off_bit_identical_to_pr8(execution):
+    """aggregator="mean" + attack="none" must take the PR 8 code paths
+    bit-for-bit: the robust/attack machinery is pay-for-what-you-use."""
+    plan8 = FaultPlan(seed=3, dropout=0.3)
+    plan9 = FaultPlan(seed=3, dropout=0.3, attack="sign_flip",
+                      attack_rate=0.0)
+    kw = dict(num_clients=4, rounds=2, local_epochs=1, distill_steps=2,
+              seed=0, execution=execution)
+    a = make_runner("fedavg", _task(n=4), faults=plan8,
+                    aggregator="mean", **kw).run()
+    b = make_runner("fedavg", _task(n=4), faults=plan9, **kw).run()
+    assert _trace(a) == _trace(b)
+    _assert_trees_equal(a.global_models, b.global_models, exact=True)
+
+
+@pytest.mark.parametrize("aggregator", ["trimmed_mean", "median", "krum",
+                                        "multi_krum"])
+def test_robust_aggregators_run_end_to_end(aggregator):
+    st = make_runner("fedavg", _task(), num_clients=6, rounds=2,
+                     local_epochs=1, distill_steps=2, seed=0,
+                     aggregator=aggregator, trim_frac=0.2).run()
+    assert len(st.history) == 2
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(st.global_models))
+
+
+def test_robust_composes_with_dropout_carry_forward():
+    """Robust aggregation + dropout: an emptied group still carries the
+    previous global forward and reports degradation."""
+    r = make_runner("fedavg", _task(n=4), num_clients=4, rounds=1,
+                    local_epochs=1, seed=0, aggregator="median",
+                    faults=FaultPlan(seed=5, dropout=1.0))
+    s0 = r.init_state()
+    init_model = jax.tree.map(lambda x: np.asarray(x), s0.global_models[0])
+    s1 = r.run_round(s0)
+    assert s1.history[-1]["degraded_groups"] == [0]
+    _assert_trees_equal(s1.global_models[0], init_model, exact=True)
 
 
 # ------------------------------------------------- rejection + degradation
@@ -323,3 +468,117 @@ def test_restore_state_empty_dir_returns_none(tmp_path):
                     local_epochs=1, seed=0)
     assert r.restore_state(Checkpointer(str(tmp_path), prefix="state")) \
         is None
+
+
+# ------------------------------------------------- trust-weighted teachers
+def _linear_logits(p, b):
+    return b["x"] @ p["w"]
+
+
+def test_trust_weights_zero_poisoned_teacher_and_preserve_accuracy():
+    """The Eq. 3 trust filter: a poisoned teacher slot gets weight
+    EXACTLY 0 and the trust-weighted distillation lands within tolerance
+    of the attack-free run, while the naive uniform ensemble does not."""
+    from repro.distill.pipeline import KDPipeline
+    from repro.utils.pytree import tree_stack
+
+    rng = np.random.default_rng(0)
+    d, v = 8, 5
+    w_true = rng.normal(0, 1, (d, v)).astype(np.float32)
+    good = [{"w": jnp.asarray(
+        w_true + rng.normal(0, 0.05, (d, v)).astype(np.float32))}
+        for _ in range(3)]
+    poisoned = {"w": jnp.asarray(-3.0 * w_true)}
+    batches = [{"x": jnp.asarray(
+        rng.normal(0, 1, (32, d)).astype(np.float32))} for _ in range(3)]
+
+    pipe = KDPipeline(_linear_logits, steps=40, lr=0.3, temperature=2.0)
+    stack = tree_stack(good + [poisoned])
+    w = np.asarray(pipe.trust_weights(stack, batches))
+    assert w.shape == (4,)
+    assert w[3] == 0.0  # hard floor: the liar contributes NOTHING
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+    assert all(float(x) > 0.1 for x in w[:3])
+
+    # clean rounds filter nobody: every honest teacher keeps weight
+    # above the hard floor (M=3 honest noise sets the KL scale, so the
+    # spread is bounded but not exactly uniform)
+    wc = np.asarray(pipe.trust_weights(tree_stack(good), batches))
+    assert (wc > 0.1 / 3).all() and float(wc.max() / wc.min()) < 5.0
+
+    # a degraded bank slot is discounted relative to the same run
+    wd = np.asarray(pipe.trust_weights(
+        stack, batches, degraded_mask=[False, True, False, False]))
+    assert float(wd[1]) < float(w[1])
+
+    student0 = {"w": jnp.asarray(rng.normal(0, 1, (d, v)).astype(np.float32))}
+    xs = rng.normal(0, 1, (256, d)).astype(np.float32)
+    labels = np.argmax(xs @ w_true, -1)
+
+    def acc(p):
+        return float(np.mean(np.argmax(xs @ np.asarray(p["w"]), -1)
+                             == labels))
+
+    s_clean, _ = pipe.distill(student0, tree_stack(good), batches)
+    s_trust, _ = pipe.distill(student0, stack, batches, teacher_weights=w)
+    s_naive, _ = pipe.distill(student0, stack, batches)
+    assert abs(acc(s_trust) - acc(s_clean)) <= 0.05
+    assert acc(s_trust) >= acc(s_naive)
+
+
+def test_trust_off_cache_bit_identical():
+    """teacher_weights=None keeps the PR 7 uniform cache program —
+    weighting is a separate compiled path, not a perturbation."""
+    from repro.distill.pipeline import KDPipeline
+    from repro.utils.pytree import tree_stack
+
+    rng = np.random.default_rng(1)
+    teachers = tree_stack([
+        {"w": jnp.asarray(rng.normal(0, 1, (6, 4)).astype(np.float32))}
+        for _ in range(3)])
+    batches = [{"x": jnp.asarray(
+        rng.normal(0, 1, (16, 6)).astype(np.float32))} for _ in range(2)]
+    pipe = KDPipeline(_linear_logits, steps=1, lr=0.1, temperature=2.0)
+    stacked = pipe.batches_for(batches)
+    c0 = pipe.precompute_cache(teachers, stacked)
+    c1 = pipe.precompute_cache(teachers, stacked, weights=None)
+    for a, b in zip(jax.tree.leaves(c0), jax.tree.leaves(c1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # uniform explicit weights agree with the unweighted program closely
+    cu = pipe.precompute_cache(teachers, stacked,
+                               weights=np.full(3, 1 / 3, np.float32))
+    for a, b in zip(jax.tree.leaves(c0), jax.tree.leaves(cu)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_teacher_bank_degraded_mask_alignment():
+    from repro.distill.teacher_bank import TeacherBank
+
+    def m(v):
+        return {"w": jnp.full((2,), float(v))}
+
+    bank = TeacherBank(K=2, R=2)
+    assert bank.degraded_mask_stacked() is None
+    bank.push(1, [m(10), m(11)])
+    bank.push(2, [m(20), m(21)], degraded=[1])
+    # newest first: round 2 (k=1 degraded), then round 1 (clean)
+    np.testing.assert_array_equal(bank.degraded_mask_stacked(),
+                                  [False, True, False, False])
+    bank.push(3, [m(30), m(31)])  # evicts round 1; round 2 flag survives
+    np.testing.assert_array_equal(bank.degraded_mask_stacked(),
+                                  [False, False, False, True])
+
+
+@pytest.mark.parametrize("execution", ["sequential", "vectorized"])
+def test_teacher_trust_end_to_end_records_weights(execution):
+    task = classification_task(model="mlp", num_clients=4, num_train=256,
+                               num_server=256, seed=0)
+    st = make_runner("fedsdd", task, num_clients=4, K=2, R=2, rounds=2,
+                     local_epochs=1, distill_steps=2, seed=0,
+                     execution=execution, teacher_trust=True).run()
+    rec = st.history[-1]
+    w = rec.get("teacher_trust")
+    assert w is not None and len(w) == st.ensemble.num_members
+    assert abs(sum(w) - 1.0) < 1e-3
