@@ -147,7 +147,7 @@ def kd_memory(csv: CSV, *, Vs=(1024, 32768), B: int = 16, d: int = 32,
     """
     from repro.kernels.kd_loss import ops as kd_ops
     from repro.kernels.kd_loss.flash import DEFAULT_TILE_V, DEFAULT_TILE_V_HOST
-    from repro.utils.hlo import live_intermediate_shapes
+    from repro.analysis import live_intermediate_shapes
 
     def lin(p, b):
         return b["x"] @ p["w"]

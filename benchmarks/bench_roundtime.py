@@ -201,6 +201,47 @@ def _overlap_comparison_body(csv: CSV, task, base: dict, K: int,
     return out
 
 
+def compiles_per_round(csv: CSV, *, execution: str = "vectorized",
+                       overlap: str = "async", K: int = 2, rounds: int = 2,
+                       prefix: str = "t3") -> dict:
+    """Steady-state compilation telemetry — the no-retrace claim, gated.
+
+    Rounds 1-2 may compile (every program specializes once); rounds
+    3..N must compile NOTHING (``analysis.TraceGuard`` counts XLA
+    backend compiles process-wide, async KD dispatch worker included).
+    A nonzero steady count means a shape/dtype/static-arg leaks into a
+    hot program per round — cost silently becomes per-round compilation.
+    """
+    from repro.analysis import TraceGuard
+    task = classification_task(model="mlp", num_clients=8, alpha=100.0,
+                               num_train=8 * 64, num_server=256, seed=0)
+    task = dataclasses.replace(task, eval_fn=None)
+    r = make_runner("fedsdd", task, K=K, overlap=overlap, num_clients=8,
+                    participation=1.0, local_epochs=1, client_batch=32,
+                    client_lr=0.05, distill_steps=2, server_lr=0.05,
+                    execution=execution, seed=0)
+    st = r.init_state()
+    with TraceGuard("warmup") as warm:
+        for _ in range(2):
+            st = r.run_round(st)
+    tg = TraceGuard(f"steady/{execution}/{overlap}")
+    tg.watch_programs(r._kd_pipeline())
+    if execution == "vectorized":
+        tg.watch_programs(r._make_engine())
+    if r._executor()._fused is not None:
+        tg.watch_programs(r._executor()._fused)
+    with tg:
+        for _ in range(rounds):
+            st = r.run_round(st)
+    r.finalize(st)
+    ok = tg.compiles == 0 and not any(tg.cache_growth().values())
+    csv.add(f"{prefix}/compiles_per_round/{execution}_{overlap}", 0,
+            f"warmup_compiles={warm.compiles};steady_compiles={tg.compiles};"
+            f"steady_rounds={rounds};pass={ok}")
+    return {"warmup_compiles": warm.compiles, "steady_compiles": tg.compiles,
+            "pass": ok}
+
+
 def engine_comparison(csv: CSV, client_counts=(8, 20),
                       prefix: str = "t3/roundtime", reps: int = 2) -> dict:
     """(c): rounds/sec, sequential vs vectorized, same protocol.
@@ -254,4 +295,5 @@ def run(scale, csv: CSV) -> dict:
     csv.add("t3/claim_fedsdd_kd_flat", 0, f"pass={flat}")
     out["engine"] = engine_comparison(csv)
     out["overlap"] = overlap_comparison(csv)
+    out["compiles"] = compiles_per_round(csv)
     return out

@@ -43,13 +43,18 @@ def run_smoke(csv: CSV) -> None:
     from benchmarks.bench_distill import (
         kd_memory, kd_throughput, teacher_bank_precision,
     )
-    from benchmarks.bench_roundtime import measure_round_time, overlap_comparison
+    from benchmarks.bench_roundtime import (
+        compiles_per_round, measure_round_time, overlap_comparison,
+    )
     bench_kernels.run(SMOKE, csv)
     for mode in ("sequential", "vectorized"):
         dt = measure_round_time(SMOKE.num_clients, mode, per_client=64,
                                 local_epochs=1, reps=1)
         csv.add(f"smoke/roundtime_{mode}/C{SMOKE.num_clients}", dt * 1e6,
                 f"rounds_per_s={1.0 / dt:.2f}")
+    # the no-retrace claim, gated: steady-state rounds compile nothing
+    # (TraceGuard counts XLA backend compiles, async KD worker included)
+    compiles_per_round(csv, prefix="smoke")
     kd_throughput(csv, K=4, R=2, steps=20, reps=1, prefix="smoke")
     teacher_bank_precision(csv, reps=1, prefix="smoke")
     # flash-KD: compressed-cache bytes + vocab-tiled kernel vs dense +

@@ -1,0 +1,56 @@
+"""Program-contract analyzer: mechanical proofs for the claims the
+CHANGES log states in prose.
+
+FedSDD's headline scalability — server cost decoupled from the client
+count — survives in this repo only while three invariants hold on the
+hot paths: no steady-state retracing, no implicit device→host sync
+inside round execution, and bounded live-intermediate memory.  One
+stray ``float(loss)`` or shape-driven retrace silently reverts the
+server to FedDF-style per-client cost.  This package turns those
+invariants into machine-checked contracts:
+
+``trace_guard.TraceGuard``
+    counts XLA backend compiles (via ``jax.monitoring``) and per-program
+    jit-cache growth over a scope — rounds 2..N must compile nothing.
+``sync.sync_contract`` / ``sync.allowed_sync``
+    a scope that turns every implicit device→host materialization into
+    an error: ``jax.transfer_guard`` on accelerators plus a portable
+    interception of ``ArrayImpl`` materialization (``float()``,
+    ``.item()``, ``.tolist()``, ``__array__``, ``jax.device_get``) that
+    also works on XLA:CPU, where host buffers are zero-copy and the
+    transfer guard never fires.  The few legitimate syncs are annotated
+    in place with ``allowed_sync("reason")``.
+``passes``
+    jaxpr/HLO invariant passes: DCE-aware live-intermediate walks
+    (memory bounds), dtype-drift detection (a bf16 teacher cache
+    silently upcast to f32), a donation audit (args marked donated but
+    copied by XLA), and the collective-bytes scanner migrated from
+    ``utils.hlo``.
+``lint``
+    a repo-specific AST linter (``python -m repro.analysis.lint src``)
+    encoding the conventions the codebase already bled for; a CI gate
+    beside ruff.
+
+Contract tests live in ``tests/test_analysis.py`` and run tier-1.
+"""
+from repro.analysis.passes import (  # noqa: F401
+    CollectiveStats,
+    DonationReport,
+    DtypeDrift,
+    collective_stats,
+    donation_audit,
+    dtype_drift,
+    duplicate_fusion_count,
+    live_intermediate_shapes,
+    live_intermediates,
+    max_live_intermediate_bytes,
+)
+from repro.analysis.sync import (  # noqa: F401
+    SyncViolation,
+    allowed_sync,
+    sync_contract,
+)
+from repro.analysis.trace_guard import (  # noqa: F401
+    TraceGuard,
+    TraceViolation,
+)

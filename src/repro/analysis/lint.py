@@ -1,0 +1,284 @@
+"""Repo-specific AST linter: conventions the codebase already bled for.
+
+Rules (``python -m repro.analysis.lint src`` — a CI gate beside ruff):
+
+RA101  device→host materialization in a HOT module outside an
+       ``allowed_sync("reason")`` scope: ``float()/int()/bool()`` on a
+       computed value, ``.item()``, ``.tolist()``, ``np.asarray``/
+       ``np.array``, ``jax.device_get``.  The static half of the sync
+       contract — it covers the ``np.asarray`` buffer-protocol path the
+       runtime guard cannot see on XLA:CPU.
+RA201  bare ``assert`` outside ``kernels/``/``models/`` (PR 6 moved
+       config validation to ``ValueError``; asserts vanish under
+       ``python -O``).  Kernel and model shape asserts fire at trace
+       time on static values and stay idiomatic.
+RA301  global-state ``np.random.*`` draw (anything but ``default_rng``/
+       ``SeedSequence``/``Generator``) or a seedless ``default_rng()``
+       — every stream in this repo is derived from an explicit seed.
+RA302  ``time.time()`` in a hot module — wall-clock reachable from
+       round/serve execution must be ``time.perf_counter()``; calendar
+       time in traced code is a determinism leak.
+RA401  ``np.random.default_rng`` in ``core/faults.py`` outside the
+       keyed ``client_faults`` helper — every fault decision must be a
+       pure function of ``(seed, round, cid)`` or replay breaks.
+
+Suppression: a trailing ``# lint-ok: RA101 <reason>`` comment exempts
+its line (reason mandatory); RA101 is also exempt anywhere lexically
+inside a ``with allowed_sync("...")`` block, so runtime annotation and
+static exemption are the same act.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+__all__ = ["Finding", "lint_source", "lint_paths", "main"]
+
+# modules on the round/serve hot path: a stray sync here is a stall per
+# client (or per request), not a one-off
+HOT_MODULES = (
+    "core/engine.py",
+    "core/round_plan.py",
+    "core/robust_agg.py",
+    "core/fedsdd.py",
+    "core/aggregation.py",
+    "core/faults.py",
+    "distill/pipeline.py",
+    "distill/teacher_bank.py",
+    "serve/engine.py",
+)
+
+# directories whose asserts are trace-time shape checks on static values
+ASSERT_EXEMPT_DIRS = ("kernels/", "models/")
+
+SYNC_CALLS = {"float", "int", "bool"}
+SYNC_ATTRS = {"item", "tolist"}
+SYNC_NP = {"asarray", "array"}
+GLOBAL_NP_RANDOM_OK = {"default_rng", "SeedSequence", "Generator",
+                       "BitGenerator", "PCG64", "Philox"}
+# host-producing callees whose result float()/int() may always wrap
+HOST_PRODUCERS = {"len", "round", "min", "max", "sum", "abs", "ord",
+                  "perf_counter", "time", "getattr"}
+
+_PRAGMA_RE = re.compile(r"#\s*lint-ok:\s*(RA\d+)\s+(\S.*)$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _pragmas(source: str) -> dict[int, str]:
+    """line -> rule exempted by a ``# lint-ok: RAxxx reason`` comment."""
+    out: dict[int, str] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            out[i] = m.group(1)
+    return out
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('np.asarray', 'x.item')."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_constantish(node: ast.AST) -> bool:
+    """Arguments that cannot be device values: literals, literal
+    containers, comprehensions over host iterables, f-strings."""
+    if isinstance(node, (ast.Constant, ast.JoinedStr, ast.ListComp,
+                         ast.SetComp, ast.DictComp, ast.GeneratorExp,
+                         ast.List, ast.Tuple, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.UnaryOp):
+        return _is_constantish(node.operand)
+    if isinstance(node, ast.Call):
+        callee = _dotted(node.func)
+        return callee.split(".")[-1] in HOST_PRODUCERS
+    return False
+
+
+DEVICE_ROOTS = {"jnp", "jax", "lax"}
+
+
+def _has_device_call(node: ast.AST) -> bool:
+    """True when the expression syntactically computes on device: any
+    call rooted at jnp/jax/lax or a ``tree_*`` pytree helper."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        dotted = _dotted(sub.func)
+        root = dotted.split(".")[0]
+        if root in DEVICE_ROOTS or dotted.split(".")[-1].startswith("tree_"):
+            return True
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str, *, hot: bool,
+                 assert_exempt: bool, faults_module: bool) -> None:
+        self.path = path
+        self.hot = hot
+        self.assert_exempt = assert_exempt
+        self.faults_module = faults_module
+        self.pragmas = _pragmas(source)
+        self.findings: list[Finding] = []
+        self._allowed_sync_depth = 0
+        self._func_stack: list[str] = []
+
+    # ------------------------------------------------------------ utils
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if self.pragmas.get(line) == rule:
+            return
+        self.findings.append(Finding(self.path, line, rule, message))
+
+    # ------------------------------------------------------- structure
+    def visit_With(self, node: ast.With) -> None:
+        opens_allowed = any(
+            isinstance(item.context_expr, ast.Call)
+            and _dotted(item.context_expr.func).split(".")[-1]
+            == "allowed_sync"
+            for item in node.items)
+        if opens_allowed:
+            self._allowed_sync_depth += 1
+        self.generic_visit(node)
+        if opens_allowed:
+            self._allowed_sync_depth -= 1
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    # ----------------------------------------------------------- rules
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if not self.assert_exempt:
+            self._emit(node, "RA201",
+                       "bare assert in library code — raise ValueError "
+                       "(config) or RuntimeError (invariant); asserts "
+                       "vanish under python -O")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = _dotted(node.func)
+        leaf = callee.split(".")[-1]
+        self._check_sync(node, callee, leaf)
+        self._check_random(node, callee, leaf)
+        self.generic_visit(node)
+
+    def _check_sync(self, node: ast.Call, callee: str, leaf: str) -> None:
+        if not self.hot or self._allowed_sync_depth:
+            return
+        if leaf in SYNC_CALLS and callee == leaf:
+            if (len(node.args) == 1
+                    and _has_device_call(node.args[0])):
+                self._emit(node, "RA101",
+                           f"{leaf}() on a device computation in a hot "
+                           "module — a hidden host sync; wrap in "
+                           "allowed_sync(\"reason\") or keep it on device")
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in SYNC_ATTRS):
+            self._emit(node, "RA101",
+                       f".{node.func.attr}() in a hot module — a hidden "
+                       "host sync; wrap in allowed_sync(\"reason\")")
+        elif callee in ("np.asarray", "np.array", "numpy.asarray",
+                        "numpy.array"):
+            if node.args and _is_constantish(node.args[0]):
+                return
+            self._emit(node, "RA101",
+                       f"{callee}() in a hot module materializes device "
+                       "values through the buffer protocol (invisible to "
+                       "the runtime guard on CPU); wrap in "
+                       "allowed_sync(\"reason\") or mark the host-only "
+                       "value with a lint-ok pragma")
+        elif leaf == "device_get":
+            self._emit(node, "RA101",
+                       "jax.device_get in a hot module — a host sync; "
+                       "wrap in allowed_sync(\"reason\")")
+
+    def _check_random(self, node: ast.Call, callee: str, leaf: str) -> None:
+        if callee.startswith(("np.random.", "numpy.random.")):
+            if leaf not in GLOBAL_NP_RANDOM_OK:
+                self._emit(node, "RA301",
+                           f"global-state np.random.{leaf}() — derive a "
+                           "Generator from an explicit seed instead")
+            elif leaf == "default_rng" and not node.args:
+                self._emit(node, "RA301",
+                           "seedless default_rng() — OS entropy breaks "
+                           "replay; pass the run's seed")
+            if (leaf == "default_rng" and self.faults_module
+                    and "client_faults" not in self._func_stack):
+                self._emit(node, "RA401",
+                           "fault rng outside the keyed client_faults "
+                           "helper — every fault decision must be a pure "
+                           "function of (seed, round, cid)")
+        elif callee in ("time.time", "time.time_ns") and self.hot:
+            self._emit(node, "RA302",
+                       f"{callee}() in a hot module — use "
+                       "time.perf_counter() (monotonic) for timing; "
+                       "calendar time is a determinism leak")
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """Lint one module's source; ``path`` selects the rule profile."""
+    norm = path.replace("\\", "/")
+    hot = any(norm.endswith(m) for m in HOT_MODULES)
+    assert_exempt = any(f"/{d}" in norm or norm.startswith(d)
+                        for d in ASSERT_EXEMPT_DIRS)
+    faults = norm.endswith("core/faults.py")
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, "RA000",
+                        f"syntax error: {e.msg}")]
+    linter = _Linter(path, source, hot=hot, assert_exempt=assert_exempt,
+                     faults_module=faults)
+    linter.visit(tree)
+    return sorted(linter.findings, key=lambda f: (f.line, f.rule))
+
+
+def lint_paths(paths: list[str]) -> list[Finding]:
+    findings: list[Finding] = []
+    for root in paths:
+        p = Path(root)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_source(f.read_text(), str(f)))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        print("usage: python -m repro.analysis.lint <path> [path ...]")
+        return 0 if argv else 2
+    findings = lint_paths(argv)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"{len(findings)} finding(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

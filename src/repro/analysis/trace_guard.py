@@ -1,0 +1,172 @@
+"""TraceGuard: runtime proof that the hot paths never recompile.
+
+The engine's whole scalability story rests on shape-stable programs:
+padded bucket plans, chunked decode, identity-keyed batch stacks.  A
+regression that re-specializes per round (a stray Python scalar in a
+carry, a shape leak through a fault path) is invisible to correctness
+tests — results stay right, cost quietly becomes per-round compilation.
+
+``TraceGuard`` measures compilation directly at the source of truth:
+``jax.monitoring`` fires ``/jax/core/compile/backend_compile_duration``
+once per XLA backend compile, on whatever thread triggered it (the
+async-overlap KD dispatch worker included), and fires nothing on a
+cache-hit dispatch.  A guard snapshots the process-wide counter on
+entry and exposes the delta::
+
+    with TraceGuard("round") as tg:
+        state = runner.run_round(state)
+    tg.assert_steady_state()        # raises TraceViolation on compiles
+
+For attribution, ``watch(label, fn)`` tracks individual jitted
+callables via their ``_cache_size()`` — when the global counter trips,
+the per-program cache growth names the culprit.  The hot-path owners
+(``VectorizedClientEngine``, ``KDPipeline``, ``FusedKDLocalProgram``,
+``ContinuousEngine``) each expose ``jit_programs()`` returning their
+cached jitted callables so a guard can watch them all in one call.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Mapping
+
+import jax
+
+__all__ = ["TraceGuard", "TraceViolation"]
+
+# one event per XLA backend compile; silent on fully-cached dispatch
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+# one event per abstract trace (fires also for cache-missed lowering)
+_TRACE_EVENT = "/jax/core/tracing/jaxpr_trace_duration"
+
+
+class TraceViolation(RuntimeError):
+    """A scope that promised steady state compiled something."""
+
+
+class _Counters:
+    """Process-wide compile/trace counters fed by jax.monitoring."""
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.compiles = 0
+        self.traces = 0
+        self.installed = False
+
+    def listener(self, event: str, duration: float, **_: Any) -> None:
+        if event == _COMPILE_EVENT:
+            with self.lock:
+                self.compiles += 1
+        elif event == _TRACE_EVENT:
+            with self.lock:
+                self.traces += 1
+
+    def install(self) -> None:
+        with self.lock:
+            if self.installed:
+                return
+            self.installed = True
+        jax.monitoring.register_event_duration_secs_listener(self.listener)
+
+    def snapshot(self) -> tuple[int, int]:
+        with self.lock:
+            return self.compiles, self.traces
+
+
+_COUNTERS = _Counters()
+
+
+def _cache_size(fn: Any) -> int:
+    """Specialization count of a jitted callable (0 when unknowable)."""
+    probe = getattr(fn, "_cache_size", None)
+    if callable(probe):
+        try:
+            return int(probe())
+        except Exception:
+            return 0
+    return 0
+
+
+class TraceGuard:
+    """Scope asserting zero XLA compiles (steady-state execution).
+
+    Counters are process-global, so compiles triggered from worker
+    threads inside the scope (the async-overlap KD dispatch) are
+    counted against it.  Guards may nest; each sees its own delta.
+    """
+
+    def __init__(self, label: str = "trace-guard",
+                 watch: Mapping[str, Callable] | None = None) -> None:
+        self.label = label
+        self._watch: dict[str, Any] = {}
+        self._watch_enter: dict[str, int] = {}
+        self._enter: tuple[int, int] | None = None
+        self._exit: tuple[int, int] | None = None
+        _COUNTERS.install()
+        if watch:
+            for name, fn in watch.items():
+                self.watch(name, fn)
+
+    # ------------------------------------------------------- watching
+    def watch(self, label: str, fn: Callable) -> "TraceGuard":
+        """Track one jitted callable's specialization count by label."""
+        self._watch[label] = fn
+        self._watch_enter[label] = _cache_size(fn)
+        return self
+
+    def watch_programs(self, *owners: Any) -> "TraceGuard":
+        """Watch every program of objects exposing ``jit_programs()``."""
+        for owner in owners:
+            progs = owner.jit_programs()
+            for label, fn in progs.items():
+                self.watch(label, fn)
+        return self
+
+    # ----------------------------------------------------------- scope
+    def __enter__(self) -> "TraceGuard":
+        self._enter = _COUNTERS.snapshot()
+        self._exit = None
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self._exit = _COUNTERS.snapshot()
+
+    def _delta(self, idx: int) -> int:
+        if self._enter is None:
+            return 0
+        now = self._exit if self._exit is not None else _COUNTERS.snapshot()
+        return now[idx] - self._enter[idx]
+
+    @property
+    def compiles(self) -> int:
+        """XLA backend compiles observed in the scope (live until exit)."""
+        return self._delta(0)
+
+    @property
+    def traces(self) -> int:
+        """Jaxpr traces observed in the scope."""
+        return self._delta(1)
+
+    def cache_growth(self) -> dict[str, int]:
+        """Per-watched-program specialization growth since ``watch()``."""
+        return {label: _cache_size(fn) - self._watch_enter[label]
+                for label, fn in self._watch.items()}
+
+    # --------------------------------------------------------- verdict
+    def report(self) -> dict:
+        """JSON-able telemetry row (the bench's compiles_per_round)."""
+        grown = {k: v for k, v in self.cache_growth().items() if v}
+        return {"label": self.label, "compiles": self.compiles,
+                "traces": self.traces, "cache_growth": grown}
+
+    def assert_steady_state(self) -> None:
+        """Raise ``TraceViolation`` unless the scope compiled nothing."""
+        if self.compiles == 0 and not any(self.cache_growth().values()):
+            return
+        grown = {k: v for k, v in self.cache_growth().items() if v}
+        names = f"; grown program caches: {grown}" if grown else \
+            " (no watched program grew — an unwatched callable compiled)"
+        raise TraceViolation(
+            f"TraceGuard[{self.label}]: {self.compiles} XLA compile(s) in a "
+            f"scope that promised steady state{names}. A shape, dtype or "
+            "static-arg changed between calls — fix the leak or warm the "
+            "program up before entering the guard.")

@@ -24,7 +24,8 @@ class ResNetConfig:
 
     @property
     def num_blocks_per_stage(self) -> int:
-        assert (self.depth - 2) % 6 == 0
+        if (self.depth - 2) % 6 != 0:
+            raise ValueError(f"depth must be 6n+2, got {self.depth}")
         return (self.depth - 2) // 6
 
     def reduced(self) -> "ResNetConfig":

@@ -108,7 +108,8 @@ def make_kd_step(logits_fn: LogitsFn, optimizer: Optimizer, temperature: float,
     the student LM-head matmul streams through the vocab tiles too —
     the ``(B, V)`` student row never materializes.
     """
-    assert kd_kernel in ("dense", "flash")
+    if kd_kernel not in ("dense", "flash"):
+        raise ValueError(f"kd_kernel must be 'dense' or 'flash', got {kd_kernel!r}")
     head_fused = (head_fusion and kd_kernel == "flash"
                   and features_fn is not None and head_fn is not None)
 

@@ -141,9 +141,9 @@ def build_round_entries(task, cfg, groups: Sequence[np.ndarray],
             perm = rng.permutation(n)
             for i in range(0, n - bs + 1, bs):
                 steps.append(perm[i:i + bs])
-        entries.append(ClientEntry(pos=pos, cid=int(cid), group=int(k), n=n,
-                                   bs=bs,
-                                   idx=np.asarray(steps, dtype=np.int32)))
+        entries.append(ClientEntry(
+            pos=pos, cid=int(cid), group=int(k), n=n, bs=bs,
+            idx=np.asarray(steps, np.int32)))  # lint-ok: RA101 host rng schedule
     return entries
 
 
@@ -255,8 +255,12 @@ class VectorizedClientEngine:
     def __init__(self, loss_fn: Callable, optimizer: Optimizer,
                  mesh=None, client_sharding: str = "auto",
                  step_mode: str = "auto"):
-        assert client_sharding in ("auto", "vmap", "shard_map")
-        assert step_mode in ("auto", "scan", "stepped")
+        if client_sharding not in ("auto", "vmap", "shard_map"):
+            raise ValueError(f"client_sharding={client_sharding!r} not in "
+                             "('auto', 'vmap', 'shard_map')")
+        if step_mode not in ("auto", "scan", "stepped"):
+            raise ValueError(f"step_mode={step_mode!r} not in "
+                             "('auto', 'scan', 'stepped')")
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.mesh = mesh
@@ -342,6 +346,16 @@ class VectorizedClientEngine:
                                check_rep=False)
             self._step_fn = jax.jit(vf)
         return self._step_fn
+
+    def jit_programs(self) -> dict:
+        """Built jitted programs by label — ``analysis.TraceGuard`` watches
+        these to attribute a steady-state compile to its owner."""
+        out = {}
+        if self._vec_fn is not None:
+            out["engine/scan"] = self._vec_fn
+        if self._step_fn is not None:
+            out["engine/stepped"] = self._step_fn
+        return out
 
     # ---- bucket execution, decomposed so the overlap executor can weave
     # ---- the same programs into a combined KD+training device program ---

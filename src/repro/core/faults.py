@@ -321,7 +321,10 @@ def finite_rows(stacked: PyTree) -> np.ndarray:
     for x in leaves:
         f = jnp.all(jnp.isfinite(x.reshape(x.shape[0], -1)), axis=1)
         m = f if m is None else m & f
-    return np.asarray(m)
+    from repro.analysis.sync import allowed_sync
+    with allowed_sync("isfinite upload guard — one (C,) bool pull per "
+                      "degraded round"):
+        return np.asarray(m)
 
 
 def fault_record(rf: RoundFaults, survivors: Sequence[int],

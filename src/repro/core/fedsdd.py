@@ -483,8 +483,12 @@ class FederatedRunner:
                     teacher_weights=teacher_weights)
             if teacher_weights is not None:
                 kd_info = dict(kd_info)
-                kd_info["teacher_trust"] = [
-                    round(float(w), 4) for w in np.asarray(teacher_weights)]
+                from repro.analysis.sync import allowed_sync
+                with allowed_sync("per-round teacher-trust weights into "
+                                  "the history record"):
+                    kd_info["teacher_trust"] = [
+                        round(float(w), 4)
+                        for w in np.asarray(teacher_weights)]
             return kd_info
         kd_info = {}
         targets = range(cfg.K) if cfg.distill_target == "all" else (0,)
@@ -771,14 +775,18 @@ class _SequentialRoundOps:
         """Plan-dropped clients excluded a priori; every reported upload
         then passes the value-level isfinite guard or is rejected."""
         if self._surv is None:
+            from repro.analysis.sync import allowed_sync
             surv, rejected = set(), []
-            for e in self.entries:
-                if e.dropped:
-                    continue
-                if bool(tree_all_finite(self.models[e.pos])):
-                    surv.add(e.cid)
-                else:
-                    rejected.append(e.cid)
+            with allowed_sync("isfinite upload guard ruling — one bool "
+                              "pull per client per degraded round "
+                              "(sequential oracle)"):
+                for e in self.entries:
+                    if e.dropped:
+                        continue
+                    if bool(tree_all_finite(self.models[e.pos])):
+                        surv.add(e.cid)
+                    else:
+                        rejected.append(e.cid)
             self._surv, self._rejected = surv, rejected
         return self._surv
 

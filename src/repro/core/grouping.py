@@ -39,7 +39,8 @@ def assign_groups(active_clients: np.ndarray, K: int,
     paper's K=3 appendix experiment allocates the extra client to the main
     global model (group 0), which round-robin after shuffle reproduces.
     """
-    assert K >= 1
+    if K < 1:
+        raise ValueError(f"K must be >= 1, got {K}")
     a = np.array(active_clients, copy=True)
     rng.shuffle(a)
     groups = [a[k::K] for k in range(K)]

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sync import allowed_sync
 from repro.core.aggregation import (
     fedavg_aggregate_grouped_masked, survivor_group_weights,
 )
@@ -118,7 +119,9 @@ def _krum(sub: PyTree, f: int, multi: bool) -> PyTree:
         return jax.tree.map(lambda x: x[0], sub)
     scores = _krum_scores(_flatten_rows(sub), f)
     if not multi:
-        sel = int(np.asarray(jnp.argmin(scores)))
+        with allowed_sync("krum selection index — one scalar pull per "
+                          "group per round"):
+            sel = int(np.asarray(jnp.argmin(scores)))
         return jax.tree.map(lambda x: x[sel], sub)
     keep = max(1, n - f)
     best = jnp.argsort(scores)[:keep]
@@ -142,8 +145,8 @@ def clip_to_median_norm(stacked: PyTree, group_ids, num_groups: int,
     adversarial update gets its influence capped at clip_norm× a typical
     honest client before the aggregation statistic ever sees it.
     """
-    gid = np.asarray(group_ids)
-    mask = np.asarray(survivor_mask, bool)
+    gid = np.asarray(group_ids)            # lint-ok: RA101 host group map
+    mask = np.asarray(survivor_mask, bool)  # lint-ok: RA101 host fault mask
     gidj = jnp.asarray(gid, jnp.int32)
     refrows = jax.tree.map(lambda r: r[gidj], ref_stacked)
     n2 = None
@@ -156,7 +159,9 @@ def clip_to_median_norm(stacked: PyTree, group_ids, num_groups: int,
         n2 = s if n2 is None else n2 + s
     if n2 is None:
         return stacked
-    norms = np.asarray(jnp.sqrt(n2), np.float64)
+    with allowed_sync("host clip radius — one (C,) norm pull per round "
+                      "feeds the per-group median-norm ball"):
+        norms = np.asarray(jnp.sqrt(n2), np.float64)
     factor = np.ones_like(norms)
     for k in range(num_groups):
         rows = np.nonzero((gid == k) & mask)[0]
@@ -198,10 +203,10 @@ def robust_aggregate_grouped(
     if aggregator not in AGGREGATORS:
         raise ValueError(f"unknown aggregator {aggregator!r}; "
                          f"pick one of {AGGREGATORS}")
-    gid = np.asarray(group_ids)
+    gid = np.asarray(group_ids)            # lint-ok: RA101 host group map
     if survivor_mask is None:
         survivor_mask = np.ones((len(gid),), bool)
-    mask = np.asarray(survivor_mask, bool)
+    mask = np.asarray(survivor_mask, bool)  # lint-ok: RA101 host fault mask
     _, _, empty = survivor_group_weights(num_samples, gid, num_groups, mask)
     if empty and fallback_stacked is None:
         raise ValueError(f"groups {empty} have no surviving clients and no "

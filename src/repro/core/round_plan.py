@@ -65,6 +65,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sync import allowed_sync
+
 PyTree = Any
 
 OVERLAP_MODES = ("off", "async", "fused")
@@ -114,7 +116,7 @@ def spill_pending_kd(directory: str, pending: PendingKD) -> str:
     meta = {
         "round_idx": pending.round_idx,
         "record": {k: v for k, v in pending.record.items()},
-        "num_teachers": int(
+        "num_teachers": int(  # lint-ok: RA101 static shape read, no sync
             jax.tree.leaves(pending.teachers)[0].shape[0]),
         "has_teacher_weights": pending.teacher_weights is not None,
     }
@@ -194,6 +196,11 @@ class FusedKDLocalProgram:
             args += (jnp.asarray(weights, jnp.float32),)
         return self._fns[n](*args)
 
+    def jit_programs(self) -> dict:
+        """Jitted fused programs by label (see ``analysis.TraceGuard``)."""
+        return {f"fused/kd_local_b{n}{'_w' if w else ''}": fn
+                for (n, w), fn in self._fns.items()}
+
 
 class RoundExecutor:
     """Drives one federated round as the phase plan above.
@@ -253,13 +260,17 @@ class RoundExecutor:
         pending.record.update(self._pipe().losses_info(losses))
         if pending.teacher_weights is not None:
             import numpy as _np
-            pending.record["teacher_trust"] = [
-                round(float(w), 4)
-                for w in _np.asarray(pending.teacher_weights)]
+            with allowed_sync("per-round teacher-trust weights into the "
+                              "history record"):
+                pending.record["teacher_trust"] = [
+                    round(float(w), 4)
+                    for w in _np.asarray(pending.teacher_weights)]
         state.global_models[0] = student
         state.last_distilled = (pending.round_idx, student)
         if self.runner.task.eval_fn is not None:
-            pending.record["acc_main"] = self.runner.task.eval_fn(student)
+            with allowed_sync("per-round eval of the distilled main model"):
+                pending.record["acc_main"] = \
+                    self.runner.task.eval_fn(student)
         state.pending_kd = None
 
     def close(self) -> None:
@@ -304,7 +315,8 @@ class RoundExecutor:
                 rec["t_kd"] = time.perf_counter() - t0
             state.global_models = new_globals
             if task.eval_fn is not None:
-                rec["acc_main"] = task.eval_fn(new_globals[0])
+                with allowed_sync("per-round eval of the main model"):
+                    rec["acc_main"] = task.eval_fn(new_globals[0])
             rec["t_round"] = time.perf_counter() - t_start
             state.history.append(rec)
             state.round = t
@@ -352,7 +364,8 @@ class RoundExecutor:
             if cfg.overlap == "async":
                 self.dispatch(state.pending_kd)
         elif task.eval_fn is not None:
-            rec["acc_main"] = task.eval_fn(new_globals[0])
+            with allowed_sync("per-round eval of the main model"):
+                rec["acc_main"] = task.eval_fn(new_globals[0])
         rec["t_round"] = time.perf_counter() - t_start
         state.history.append(rec)
         return state

@@ -124,14 +124,20 @@ class KDPipeline:
                  features_fn: Callable | None = None,
                  head_fn: Callable | None = None,
                  head_fusion: bool = False):
-        assert step_mode in ("auto", "scan", "stepped")
-        assert teacher_sharding in ("auto", "vmap", "shard_map")
-        assert kd_kernel in ("dense", "flash")
-        if head_fusion:
-            assert kd_kernel == "flash", \
-                "head fusion streams the LM-head matmul through the " \
-                "flash vocab tiles — the dense prob path has no tiles " \
-                "to fuse it into"
+        if step_mode not in ("auto", "scan", "stepped"):
+            raise ValueError(f"step_mode={step_mode!r} not in "
+                             "('auto', 'scan', 'stepped')")
+        if teacher_sharding not in ("auto", "vmap", "shard_map"):
+            raise ValueError(f"teacher_sharding={teacher_sharding!r} not in "
+                             "('auto', 'vmap', 'shard_map')")
+        if kd_kernel not in ("dense", "flash"):
+            raise ValueError(f"kd_kernel={kd_kernel!r} not in "
+                             "('dense', 'flash')")
+        if head_fusion and kd_kernel != "flash":
+            raise ValueError(
+                "head fusion streams the LM-head matmul through the "
+                "flash vocab tiles — the dense prob path has no tiles "
+                "to fuse it into")
         self.logits_fn = logits_fn
         self.features_fn = features_fn
         self.head_fn = head_fn
@@ -152,8 +158,9 @@ class KDPipeline:
         if kd_kernel == "flash":
             self.cache_dtype = jnp.dtype(cache_dtype or jnp.bfloat16)
         else:
-            assert cache_dtype is None or jnp.dtype(cache_dtype) == \
-                jnp.float32, "the dense prob cache is f32-only"
+            if cache_dtype is not None and jnp.dtype(cache_dtype) != \
+                    jnp.float32:
+                raise ValueError("the dense prob cache is f32-only")
             self.cache_dtype = jnp.float32
         self.tile_v = tile_v
         self._probs_fn = None
@@ -205,7 +212,9 @@ class KDPipeline:
         drops out of the KD target exactly.  A SEPARATE compiled program
         on purpose: ``jnp.mean`` and a uniform-weight einsum are not
         bit-identical, and trust-off must stay byte-equal to PR 8."""
-        assert kind in ("probs", "cache")
+        if kind not in ("probs", "cache"):
+            raise ValueError(f"precompute kind={kind!r} not in "
+                             "('probs', 'cache')")
         logits_fn, tau = self.logits_fn, self.temperature
         as_logits = kind == "cache" and self.kd_kernel == "flash"
         # dense-cache lane padding happens HERE, once per round, so the
@@ -401,9 +410,9 @@ class KDPipeline:
         m = jax.tree.leaves(teacher_stack)[0].shape[0]
         discount = np.ones((m,), np.float32)
         if degraded_mask is not None:
-            discount = np.where(np.asarray(degraded_mask, bool),
-                                TRUST_DEGRADED_DISCOUNT, 1.0
-                                ).astype(np.float32)
+            discount = np.where(
+                np.asarray(degraded_mask, bool),  # lint-ok: RA101 host bank mask
+                TRUST_DEGRADED_DISCOUNT, 1.0).astype(np.float32)
         return self._trust_fn(teacher_stack, batches,
                               jnp.asarray(discount))
 
@@ -582,9 +591,25 @@ class KDPipeline:
                               teacher_weights=teacher_weights)
 
     def _info(self, losses) -> dict:
-        losses = np.asarray(losses)             # ONE host sync per round
+        from repro.analysis.sync import allowed_sync
+        with allowed_sync("one-per-round KD loss pull into the history "
+                          "record"):
+            losses = np.asarray(losses)
         if losses.ndim == 2:                    # multi-student: main model
             losses = losses[0]
         return {"kd_loss_first": float(losses[0]) if losses.size else None,
                 "kd_loss_last": float(losses[-1]) if losses.size else None,
                 "kd_steps": self.steps}
+
+    def jit_programs(self) -> dict:
+        """Built jitted programs by label (see ``analysis.TraceGuard``)."""
+        out = {}
+        for multi, fn in self._scan_fns.items():
+            out[f"kd/scan{'_multi' if multi else ''}"] = fn
+        for multi, fn in self._step_fns.items():
+            out[f"kd/step{'_multi' if multi else ''}"] = fn
+        for name in ("_probs_fn", "_cache_fn", "_cache_fn_w", "_trust_fn"):
+            fn = getattr(self, name)
+            if fn is not None:
+                out[f"kd/{name.strip('_')}"] = fn
+        return out

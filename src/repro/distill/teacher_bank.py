@@ -85,7 +85,8 @@ class TeacherBank:
 
     def __init__(self, K: int, R: int, spill_dir: str | None = None,
                  dtype=None):
-        assert K >= 1 and R >= 1
+        if K < 1 or R < 1:
+            raise ValueError(f"K and R must be >= 1, got K={K}, R={R}")
         self.K, self.R = K, R
         self.spill_dir = spill_dir
         self.dtype = jnp.dtype(dtype) if dtype is not None else None
@@ -118,12 +119,16 @@ class TeacherBank:
             self._degraded[int(round_idx)] = tuple(
                 sorted(int(k) for k in degraded))
         if isinstance(global_models, (list, tuple)):
-            assert len(global_models) == self.K, (len(global_models), self.K)
+            if len(global_models) != self.K:
+                raise ValueError(
+                    f"expected {self.K} group models, got {len(global_models)}")
             member_stack = tree_stack(list(global_models))
         else:
             member_stack = global_models
             lead = jax.tree.leaves(member_stack)[0].shape[0]
-            assert lead == self.K, (lead, self.K)
+            if lead != self.K:
+                raise ValueError(
+                    f"stacked model axis {lead} != K={self.K}")
         if self._bank is None:
             self._bank = jax.tree.map(
                 lambda m: jnp.zeros((self.R,) + m.shape,
@@ -196,7 +201,7 @@ class TeacherBank:
         for s in order:
             bad = set(self._degraded.get(int(self._slot_rounds[s]), ()))
             mask.extend(k in bad for k in range(self.K))
-        return np.asarray(mask, bool)
+        return np.asarray(mask, bool)  # lint-ok: RA101 host list
 
     # -------------------------------------------- crash-safe resume hooks
     def bank_like(self, member_like: PyTree) -> PyTree:

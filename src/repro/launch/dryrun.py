@@ -48,7 +48,8 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models.model_zoo import build_model
 from repro.sharding.specs import batch_pspec, cache_pspec, param_pspec, to_shardings
-from repro.utils.hlo import collective_stats, roofline
+from repro.analysis import collective_stats
+from repro.utils.hlo import roofline
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "experiments", "dryrun")

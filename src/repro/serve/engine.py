@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sync import allowed_sync
 from repro.serve import paged_cache as pc
 
 
@@ -176,6 +177,11 @@ class ContinuousEngine:
         self.peak_utilization = 0.0
         self._prefill, self._decode = _programs(model)
 
+    def jit_programs(self) -> dict:
+        """Jitted programs by label (see ``analysis.TraceGuard``)."""
+        return {"serve/prefill": self._prefill,
+                "serve/decode": self._decode}
+
     # ---- queue ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         L = len(req.tokens)
@@ -248,7 +254,9 @@ class ContinuousEngine:
         tok, self.pool = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray([L - 1]),
             self.pool, jnp.asarray(blocks[:lpad // bs], jnp.int32))
-        first = int(tok[0])     # the one per-request sync: prefill result
+        with allowed_sync("the one per-request sync: first token out of "
+                          "prefill seeds the decode batch"):
+            first = int(tok[0])
         result.t_first = time.perf_counter()
         result.tokens.append(first)
         self.block_tables[slot] = pc.build_table(blocks, self.nbmax)
@@ -266,12 +274,14 @@ class ContinuousEngine:
         place).  Rows past the lane's budget in its final chunk are the
         frozen-lane garbage and are not taken."""
         out, t = [], start
-        while len(out) < n:
-            if not isinstance(self._step_toks[t], np.ndarray):
-                self._step_toks[t] = np.asarray(self._step_toks[t])
-            take = min(len(self._step_toks[t]), n - len(out))
-            out.extend(int(x) for x in self._step_toks[t][:take, slot])
-            t += 1
+        with allowed_sync("token materialization at eviction — chunks "
+                          "convert to numpy once, after the lane is done"):
+            while len(out) < n:
+                if not isinstance(self._step_toks[t], np.ndarray):
+                    self._step_toks[t] = np.asarray(self._step_toks[t])
+                take = min(len(self._step_toks[t]), n - len(out))
+                out.extend(int(x) for x in self._step_toks[t][:take, slot])
+                t += 1
         return out
 
     def _evict(self, slot: int) -> RequestResult:
@@ -363,7 +373,9 @@ def run_closed_loop(engine: ContinuousEngine, requests, arrivals
     """Closed-loop traffic driver: ``arrivals[i]`` seconds after start,
     request i becomes visible.  The engine steps continuously; latency is
     measured submit→finish, so queueing delay under load is included."""
-    assert len(arrivals) == len(requests)
+    if len(arrivals) != len(requests):
+        raise ValueError(f"arrivals ({len(arrivals)}) and requests "
+                         f"({len(requests)}) must align one-to-one")
     order = np.argsort(arrivals, kind="stable")
     t0 = time.perf_counter()
     results, i = [], 0

@@ -77,7 +77,8 @@ class BlockAllocator:
 
     def free(self, ids) -> None:
         for b in ids:
-            assert b != NULL_BLOCK, "null block is never owned"
+            if b == NULL_BLOCK:
+                raise RuntimeError("null block is never owned")
         self._free.extend(ids)
 
 

@@ -1,109 +1,33 @@
-"""HLO/StableHLO text analysis for the roofline harness.
+"""Roofline model for the target chip (TPU v5e per the brief).
 
-The dry-run lowers each step with ``jax.jit(...).lower(...)``; XLA's
-``cost_analysis()`` reports FLOPs and HBM traffic but NOT inter-chip
-collective bytes.  We recover those by scanning the compiled (or lowered)
-module text for collective ops and summing their operand sizes.
-
-Works on both HLO text (``compiled.as_text()``) and StableHLO
-(``lowered.as_text()``).
+The HLO/jaxpr analysis passes that used to live here — collective-bytes
+scanning, duplicate-fusion counting, and the jaxpr liveness walk — moved
+to :mod:`repro.analysis.passes`, where they sit beside the newer
+dtype-drift and donation audits.  This module keeps the roofline math
+(chip constants + the three-term bound) and re-exports the moved names
+with a :class:`DeprecationWarning` so old imports keep working.
 """
 from __future__ import annotations
 
-import re
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 
-# dtype -> bytes per element (HLO + StableHLO spellings)
-_DTYPE_BYTES = {
-    "pred": 1, "i1": 1,
-    "s8": 1, "u8": 1, "i8": 1, "ui8": 1,
-    "s16": 2, "u16": 2, "i16": 2, "ui16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "i32": 4, "ui32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "i64": 8, "ui64": 8, "f64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-COLLECTIVE_KINDS = (
-    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-    "collective-permute", "collective-broadcast",
+_MOVED = (
+    "CollectiveStats", "collective_stats", "duplicate_fusion_count",
+    "live_intermediate_shapes", "_DTYPE_BYTES", "COLLECTIVE_KINDS",
+    "_shape_bytes",
 )
 
-# e.g.  %all-reduce.5 = f32[8,1024]{1,0} all-reduce(...)
-_HLO_OP_RE = re.compile(
-    r"=\s*(?:\()?\s*([a-z0-9_]+)\[([0-9,]*)\][^ ]*\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|collective-broadcast)"
-)
-# tuple-typed collectives:  = (f32[..], f32[..]) all-reduce(
-_HLO_TUPLE_RE = re.compile(
-    r"=\s*\(([^)]*)\)\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|collective-broadcast)"
-)
-_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
 
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    bpe = _DTYPE_BYTES.get(dtype)
-    if bpe is None:
-        return 0
-    n = 1
-    if dims.strip():
-        for d in dims.split(","):
-            n *= int(d)
-    return n * bpe
-
-
-@dataclass
-class CollectiveStats:
-    """Bytes moved by each collective kind in one compiled module."""
-    bytes_by_kind: dict = field(default_factory=dict)
-    count_by_kind: dict = field(default_factory=dict)
-
-    @property
-    def total_bytes(self) -> int:
-        return sum(self.bytes_by_kind.values())
-
-    @property
-    def total_count(self) -> int:
-        return sum(self.count_by_kind.values())
-
-    def add(self, kind: str, nbytes: int) -> None:
-        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) + nbytes
-        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + 1
-
-    def summary(self) -> str:
-        parts = [
-            f"{k}: {self.count_by_kind[k]} ops, {self.bytes_by_kind[k] / 1e9:.4f} GB"
-            for k in sorted(self.bytes_by_kind)
-        ]
-        return "; ".join(parts) if parts else "(no collectives)"
-
-
-def collective_stats(hlo_text: str) -> CollectiveStats:
-    """Sum result-shape bytes of every collective op in HLO text.
-
-    We use the *result* shape: for all-gather that is the gathered size, for
-    all-reduce the reduced tensor, for reduce-scatter the scattered shard —
-    a consistent, slightly conservative proxy for wire bytes per chip.
-    """
-    stats = CollectiveStats()
-    seen_spans = set()
-    for m in _HLO_OP_RE.finditer(hlo_text):
-        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
-        stats.add(kind, _shape_bytes(dtype, dims))
-        seen_spans.add((m.start(3), m.end(3)))
-    for m in _HLO_TUPLE_RE.finditer(hlo_text):
-        if (m.start(2), m.end(2)) in seen_spans:
-            continue
-        kind = m.group(2)
-        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1)))
-        stats.add(kind, nbytes)
-    return stats
-
-
-def duplicate_fusion_count(hlo_text: str) -> int:
-    """Rough remat indicator: number of non-unique fusion computation bodies."""
-    names = re.findall(r"^\s*%?(fused_[a-z0-9_.]+)\s*\(", hlo_text, re.M)
-    return len(names) - len(set(names))
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.utils.hlo.{name} moved to repro.analysis.passes; "
+            "import it from repro.analysis instead",
+            DeprecationWarning, stacklevel=2)
+        from repro.analysis import passes
+        return getattr(passes, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclass(frozen=True)
@@ -140,7 +64,7 @@ class RooflineTerms:
 
 
 def roofline(flops: float, hbm_bytes: float, collective_bytes: float,
-             chips: int, spec: TPUv5eSpec = TPUv5eSpec()) -> RooflineTerms:
+             chips: int, spec: TPUv5eSpec | None = None) -> RooflineTerms:
     """Three-term roofline per the brief.
 
     ``flops``/``hbm_bytes`` are whole-program (cost_analysis is per-module on
@@ -148,6 +72,8 @@ def roofline(flops: float, hbm_bytes: float, collective_bytes: float,
     pass them through unchanged and set chips=1 for per-chip numbers, or pass
     global numbers with chips=N).
     """
+    if spec is None:
+        spec = TPUv5eSpec()
     return RooflineTerms(
         compute_s=flops / (chips * spec.peak_flops_bf16),
         memory_s=hbm_bytes / (chips * spec.hbm_bandwidth),
@@ -157,46 +83,3 @@ def roofline(flops: float, hbm_bytes: float, collective_bytes: float,
         collective_bytes=collective_bytes,
         chips=chips,
     )
-
-
-# ---------------------------------------------------------------------
-# jaxpr liveness analysis (flash-KD memory claims)
-# ---------------------------------------------------------------------
-def live_intermediate_shapes(jaxpr) -> set:
-    """Every LIVE intermediate (eqn output) shape in a jaxpr, recursively
-    through scan/cond/pjit/custom-vjp sub-jaxprs.
-
-    Dead equations — e.g. the symbolic-zero cotangent jax instantiates
-    for a frozen (non-differentiated) operand, which XLA removes — are
-    skipped via a reverse liveness pass, so the set reflects the buffers
-    a compiled program actually holds.  The flash-KD benches and tests
-    use this to assert the head-fused path never materializes the
-    ``(B, V)`` student logit row (live student memory is O(B·tile)).
-    """
-    from jax.core import ClosedJaxpr, Jaxpr, Var
-
-    def subs(val):
-        if isinstance(val, ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, Jaxpr):
-            yield val
-        elif isinstance(val, (list, tuple)):
-            for v in val:
-                yield from subs(v)
-
-    shapes = set()
-    live = {v for v in jaxpr.outvars if isinstance(v, Var)}
-    for eqn in reversed(jaxpr.eqns):
-        if not any(isinstance(v, Var) and v in live for v in eqn.outvars):
-            continue                      # dead: no consumer downstream
-        for v in eqn.invars:
-            if isinstance(v, Var):
-                live.add(v)
-        for v in eqn.outvars:
-            aval = getattr(v, "aval", None)
-            if aval is not None and hasattr(aval, "shape"):
-                shapes.add(tuple(aval.shape))
-        for val in eqn.params.values():
-            for sub in subs(val):
-                shapes |= live_intermediate_shapes(sub)
-    return shapes

@@ -1,0 +1,323 @@
+"""Program-contract analyzer: TraceGuard, sync_contract, jaxpr/HLO
+passes, and the repo linter.
+
+Two kinds of coverage: each pass/rule must CATCH a planted violation
+(positive), and the production hot paths must run CLEAN under the
+contracts (the repo's no-retrace / no-host-sync claims, executed) —
+a vectorized and a sequential FedSDD smoke round under async and fused
+overlap, plus a ContinuousEngine decode chunk.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    SyncViolation, TraceGuard, TraceViolation, allowed_sync, donation_audit,
+    dtype_drift, live_intermediate_shapes, max_live_intermediate_bytes,
+    sync_contract,
+)
+from repro.analysis.lint import lint_source
+
+HOT = "src/repro/core/engine.py"      # rule profile: hot module
+COLD = "src/repro/utils/pytree.py"    # rule profile: library, not hot
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+# ================================================================ linter
+class TestLintSync:
+    def test_float_on_device_call_flagged_hot(self):
+        src = "x = float(jnp.sum(v))\n"
+        assert rules(lint_source(src, HOT)) == ["RA101"]
+
+    def test_float_on_host_value_not_flagged(self):
+        src = "x = float(len(vals))\ny = int(cid)\n"
+        assert lint_source(src, HOT) == []
+
+    def test_item_tolist_flagged_hot(self):
+        src = "a = x.item()\nb = y.tolist()\n"
+        assert rules(lint_source(src, HOT)) == ["RA101", "RA101"]
+
+    def test_np_asarray_flagged_hot_but_not_on_literals(self):
+        src = "a = np.asarray(loss)\nb = np.asarray([1, 2, 3])\n"
+        assert rules(lint_source(src, HOT)) == ["RA101"]
+
+    def test_device_get_flagged_hot(self):
+        src = "a = jax.device_get(x)\n"
+        assert rules(lint_source(src, HOT)) == ["RA101"]
+
+    def test_cold_module_sync_not_flagged(self):
+        src = "a = float(jnp.sum(v))\nb = x.item()\n"
+        assert lint_source(src, COLD) == []
+
+    def test_allowed_sync_scope_exempts(self):
+        src = ("with allowed_sync('one-per-round pull'):\n"
+               "    a = np.asarray(loss)\n"
+               "    b = float(jnp.sum(v))\n")
+        assert lint_source(src, HOT) == []
+
+    def test_pragma_exempts_with_reason(self):
+        src = "a = np.asarray(gids)  # lint-ok: RA101 host group map\n"
+        assert lint_source(src, HOT) == []
+
+    def test_pragma_for_other_rule_does_not_exempt(self):
+        src = "a = np.asarray(loss)  # lint-ok: RA201 wrong rule\n"
+        assert rules(lint_source(src, HOT)) == ["RA101"]
+
+
+class TestLintAssertsAndRandom:
+    def test_bare_assert_flagged(self):
+        assert rules(lint_source("assert K >= 1\n", COLD)) == ["RA201"]
+
+    def test_assert_exempt_in_kernels_and_models(self):
+        for path in ("src/repro/kernels/kd_loss/flash.py",
+                     "src/repro/models/resnet.py"):
+            assert lint_source("assert x.shape[0] == 8\n", path) == []
+
+    def test_global_np_random_flagged(self):
+        src = "a = np.random.rand(3)\nb = np.random.randint(10)\n"
+        assert rules(lint_source(src, COLD)) == ["RA301", "RA301"]
+
+    def test_seedless_default_rng_flagged(self):
+        assert rules(lint_source("r = np.random.default_rng()\n",
+                                 COLD)) == ["RA301"]
+
+    def test_seeded_default_rng_clean(self):
+        assert lint_source("r = np.random.default_rng(seed)\n", COLD) == []
+
+    def test_time_time_flagged_hot_only(self):
+        src = "t = time.time()\n"
+        assert rules(lint_source(src, HOT)) == ["RA302"]
+        assert lint_source(src, COLD) == []
+        assert lint_source("t = time.perf_counter()\n", HOT) == []
+
+    def test_fault_rng_outside_keyed_helper_flagged(self):
+        path = "src/repro/core/faults.py"
+        inside = ("def client_faults(self, round_idx, cid):\n"
+                  "    r = np.random.default_rng((self.seed, round_idx, cid))\n")
+        outside = ("def other(self):\n"
+                   "    r = np.random.default_rng(self.seed)\n")
+        assert lint_source(inside, path) == []
+        assert rules(lint_source(outside, path)) == ["RA401"]
+
+    def test_repo_is_clean(self):
+        from repro.analysis.lint import lint_paths
+        assert lint_paths(["src"]) == []
+
+
+# ============================================================ TraceGuard
+class TestTraceGuard:
+    def test_catches_planted_retrace(self):
+        @jax.jit
+        def f(x):
+            return x * 2
+        f(jnp.zeros(4))                      # warm one shape
+        with TraceGuard("planted").watch("f", f) as tg:
+            f(jnp.zeros(8))                  # new shape -> respecialize
+        assert tg.compiles >= 1
+        assert tg.cache_growth()["f"] == 1
+        with pytest.raises(TraceViolation, match="planted"):
+            tg.assert_steady_state()
+
+    def test_steady_state_passes(self):
+        @jax.jit
+        def f(x):
+            return x + 1
+        f(jnp.zeros(4))
+        with TraceGuard("steady").watch("f", f) as tg:
+            for _ in range(3):
+                f(jnp.zeros(4))
+        tg.assert_steady_state()
+        assert tg.report() == {"label": "steady", "compiles": 0,
+                               "traces": tg.traces, "cache_growth": {}}
+
+    def test_attributes_growth_to_watched_program(self):
+        @jax.jit
+        def g(x):
+            return x - 1
+        g(jnp.zeros(2))
+        with TraceGuard("attrib").watch("culprit", g) as tg:
+            g(jnp.zeros((2, 2)))
+        with pytest.raises(TraceViolation, match="culprit"):
+            tg.assert_steady_state()
+
+
+# ========================================================= sync_contract
+class TestSyncContract:
+    def test_catches_planted_implicit_sync(self):
+        x = jnp.asarray(3.5)
+        with pytest.raises(SyncViolation, match="sync_contract"):
+            with sync_contract("planted"):
+                float(x)
+
+    def test_item_caught(self):
+        x = jnp.asarray(7)
+        with pytest.raises(SyncViolation):
+            with sync_contract("planted"):
+                x.item()
+
+    def test_allowed_sync_permits(self):
+        x = jnp.asarray(2.0)
+        with sync_contract("annotated") as scope:
+            with allowed_sync("test pull"):
+                assert float(x) == 2.0
+        assert scope.violations == []
+
+    def test_device_compute_is_clean(self):
+        with sync_contract("compute") as scope:
+            y = jnp.sum(jnp.ones(16)) * 2
+            _ = y + 1                        # stays on device: no sync
+        assert scope.violations == []
+        with allowed_sync("checking the result after the contract"):
+            assert float(y) == 32.0
+
+    def test_reason_is_mandatory(self):
+        with pytest.raises(ValueError, match="reason"):
+            with allowed_sync(""):
+                pass
+
+    def test_no_contract_no_interference(self):
+        # funnel is installed but inert outside any contract
+        assert float(jnp.asarray(1.25)) == 1.25
+
+
+# ===================================================== jaxpr / HLO passes
+class TestPasses:
+    def test_dtype_drift_catches_planted_upcast(self):
+        def f(cache):
+            return (cache.astype(jnp.float32) * 2).sum()
+        jaxpr = jax.make_jaxpr(f)(jnp.zeros((2048, 1024), jnp.bfloat16))
+        drifts = dtype_drift(jaxpr.jaxpr)
+        assert len(drifts) == 1
+        assert drifts[0].shape == (2048, 1024)
+        assert drifts[0].elements == 2048 * 1024
+
+    def test_dtype_drift_ignores_small_casts(self):
+        def f(x):
+            return x.astype(jnp.float32).sum()    # (8,) — below threshold
+        jaxpr = jax.make_jaxpr(f)(jnp.zeros(8, jnp.bfloat16))
+        assert dtype_drift(jaxpr.jaxpr) == []
+
+    def test_live_intermediate_bytes_bounds_planted_blowup(self):
+        def f(x):
+            return (x @ x.T).sum()                # (512, 512) f32 live
+        jaxpr = jax.make_jaxpr(f)(jnp.zeros((512, 64), jnp.float32))
+        assert max_live_intermediate_bytes(jaxpr.jaxpr) >= 512 * 512 * 4
+        assert (512, 512) in live_intermediate_shapes(jaxpr.jaxpr)
+
+    def test_donation_honored(self):
+        f = jax.jit(lambda x: x + 1.0, donate_argnums=(0,))
+        rep = donation_audit(f, jnp.zeros(128, jnp.float32))
+        assert rep.requested == 1
+        assert rep.honored == 1
+        assert rep.copied == 0
+        assert rep.ok
+
+    def test_donation_unusable_is_reported(self):
+        # dtype changes: the donated f32 buffer cannot back a bf16 output
+        f = jax.jit(lambda x: x.astype(jnp.bfloat16), donate_argnums=(0,))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            rep = donation_audit(f, jnp.zeros(128, jnp.float32))
+        assert rep.requested == 1
+        assert rep.honored == 0
+        assert rep.copied == 1
+        assert not rep.ok
+
+
+# ==================================================== deprecation shims
+def test_utils_hlo_reexports_with_deprecation():
+    import repro.utils.hlo as hlo
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        fn = hlo.collective_stats
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.analysis import collective_stats
+    assert fn is collective_stats
+    with pytest.raises(AttributeError):
+        _ = hlo.no_such_name
+
+
+# ================================================= hot paths run clean
+@pytest.fixture(scope="module")
+def task():
+    from repro.core.tasks import classification_task
+    return classification_task(model="mlp", num_clients=8, alpha=0.5,
+                               num_train=320, num_server=256, seed=0)
+
+
+def _runner(task, **kw):
+    from repro.core.fedsdd import make_runner
+    base = dict(num_clients=8, participation=1.0, local_epochs=1,
+                client_lr=0.05, server_lr=0.05, distill_steps=4,
+                client_batch=32)
+    base.update(kw)
+    return make_runner("fedsdd", task, **base)
+
+
+@pytest.mark.parametrize("execution,overlap", [
+    ("vectorized", "async"),
+    ("vectorized", "fused"),
+    ("sequential", "async"),
+    ("sequential", "fused"),
+])
+def test_smoke_round_contracts(task, execution, overlap):
+    """The FedSDD hot path, both engines × overlap modes: after two
+    warmup rounds a round compiles NOTHING and performs zero
+    un-annotated device→host syncs."""
+    r = _runner(task, K=2, execution=execution, overlap=overlap)
+    st = r.init_state()
+    for _ in range(2):                       # warm every program
+        st = r.run_round(st)
+    tg = TraceGuard(f"round/{execution}/{overlap}")
+    tg.watch_programs(r._kd_pipeline())
+    if execution == "vectorized":
+        tg.watch_programs(r._make_engine())
+    fused = r._executor()._fused
+    if fused is not None:
+        tg.watch_programs(fused)
+    with tg, sync_contract(f"round/{execution}/{overlap}") as scope:
+        st = r.run_round(st)
+    tg.assert_steady_state()
+    assert scope.violations == []
+    r.finalize(st)
+
+
+def test_continuous_engine_decode_chunk_contracts():
+    """A ContinuousEngine decode chunk at steady state: no compiles, no
+    un-annotated syncs (the per-request first-token pull and eviction
+    materialization are allowed_sync-annotated)."""
+    from repro.configs import get_config
+    from repro.models.model_zoo import build_model
+    from repro.serve.engine import ContinuousEngine, Request
+    from repro.data.synthetic import make_model_batch
+
+    cfg = get_config("qwen2.5-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def requests(seed):
+        toks = np.asarray(make_model_batch(cfg, 2, 32, seed=seed)["tokens"])
+        return [Request(rid=seed * 10 + i, tokens=toks[i], max_new_tokens=8)
+                for i in range(2)]
+
+    kw = dict(max_batch=2, num_blocks=24, chunk_steps=4)
+    warm = ContinuousEngine(model, params, **kw)
+    warm.run(requests(seed=0))               # compiles prefill + decode
+
+    eng = ContinuousEngine(model, params, **kw)
+    for req in requests(seed=1):
+        eng.submit(req)
+    tg = TraceGuard("serve/decode").watch_programs(eng)
+    with tg, sync_contract("serve/decode") as scope:
+        out = []
+        while len(out) < 2:
+            out.extend(eng.step())
+    tg.assert_steady_state()
+    assert scope.violations == []
+    assert sorted(r.rid for r in out) == [10, 11]

@@ -225,7 +225,7 @@ except ImportError:     # hypothesis is a dev extra; parametrized tests
 
 
 # ======================================================== memory (jaxpr)
-from repro.utils.hlo import live_intermediate_shapes as _out_shapes  # noqa: E402
+from repro.analysis import live_intermediate_shapes as _out_shapes  # noqa: E402
 
 
 def test_head_fused_never_materializes_student_row():
@@ -317,7 +317,7 @@ def test_pipeline_head_fused_both_step_modes(mode, monkeypatch):
 
 
 def test_pipeline_head_fusion_requires_flash():
-    with pytest.raises(AssertionError, match="flash vocab tiles"):
+    with pytest.raises(ValueError, match="flash vocab tiles"):
         KDPipeline(_linear_logits, steps=1, lr=0.1, head_fusion=True)
 
 

@@ -1,9 +1,8 @@
-"""utils/hlo.py: collective-bytes parser + roofline terms."""
+"""analysis.passes collective-bytes parser + utils/hlo roofline terms."""
 import pytest
 
-from repro.utils.hlo import (
-    TPUv5eSpec, collective_stats, roofline
-)
+from repro.analysis import collective_stats
+from repro.utils.hlo import TPUv5eSpec, roofline
 
 SAMPLE_HLO = """
 HloModule jit_step

@@ -49,7 +49,7 @@ def test_r1_is_current_round_only():
 
 def test_wrong_k_rejected():
     te = TeacherBank(K=2, R=1)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         te.push(1, [model(0)])
 
 
